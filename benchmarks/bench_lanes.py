@@ -1,0 +1,31 @@
+"""Fig. 5b reproduction: pipelined-NTT lane sweep under the LPDDR5 model.
+
+The paper observed that LPDDR5 (68.4 GB/s) caps useful lanes at P=8 — more
+lanes raise compute throughput past what the link can stream. The analytic
+model shows the same knee; we also print the HBM-class (819 GB/s) sweep to
+show why the TPU port can afford wider 'lanes' (the roofline shifts)."""
+
+from repro.core.scheduler import ClientWorkload, HardwareModel
+
+
+def run():
+    w = ClientWorkload(logn=16, enc_limbs=24, dec_limbs=2)
+    rows = []
+    for name, bw in (("lpddr5", 68.4), ("hbm_v5e", 819.0)):
+        hw = HardwareModel(dram_gbps=bw)
+        for p, secs, ct_s, bound in hw.lane_sweep(w):
+            rows.append({
+                "bench": "fig5b_lanes", "name": f"{name}_P{p}",
+                "us_per_call": round(secs * 1e6, 2),
+                "derived": f"ct_per_s={ct_s:.1f};bound={bound}",
+            })
+    # knee detection on the LPDDR5 curve (paper: P=8)
+    hw = HardwareModel(dram_gbps=68.4)
+    sweep = hw.lane_sweep(w, lanes_list=(1, 2, 4, 8, 16, 32, 64))
+    knee = next((p for p, _s, _c, bound in sweep if bound == "memory"), None)
+    rows.append({
+        "bench": "fig5b_lanes", "name": "lpddr5_knee",
+        "us_per_call": 0.0,
+        "derived": f"first_memory_bound_P={knee};paper_max_useful=8",
+    })
+    return rows

@@ -1,0 +1,70 @@
+"""Table I analogue: modular-multiplier cost, Barrett vs vanilla Montgomery
+vs NTT-friendly Montgomery.
+
+ASIC area (um^2) has no CPU/TPU meaning; the hardware-portable metric is
+general 16x16 multiply count per modmul (OP_COSTS, statically verified in
+tests) plus measured vector throughput of each engine's uint32 datapath.
+Also reproduces the §IV-A prime census claim ("443 primes at 32-36 bit").
+"""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import modmul
+from repro.core.modmul import OP_COSTS, MontgomeryConstants
+from repro.core.primes import census_paper_claim, find_ntt_friendly_primes
+
+
+def _time(f, *args, reps=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    prime = find_ntt_friendly_primes(p_bw=30, n_plus_1=17, count=1)[0]
+    c = MontgomeryConstants.make(prime)
+    n = 1 << 18
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, prime.q, n, dtype=np.uint32))
+    b = jnp.asarray(rng.integers(0, prime.q, n, dtype=np.uint32))
+
+    barrett = jax.jit(lambda x, y: modmul.mulmod_barrett_limb(x, y, c))
+    mont = jax.jit(lambda x, y: modmul.mulmod_montgomery_limb(x, y, c))
+    sa = jax.jit(lambda x, y: modmul.mulmod_montgomery_sa_limb(x, y, c))
+
+    rows = []
+    for name, fn, key in (("barrett", barrett, "barrett"),
+                          ("montgomery", mont, "montgomery"),
+                          ("ntt_friendly_montgomery", sa, "ntt_friendly")):
+        us = _time(fn, a, b)
+        cost = OP_COSTS[key]
+        rows.append({
+            "bench": "table1_modmul", "name": name,
+            "us_per_call": round(us, 1),
+            "derived": f"general_muls={cost['mul']};"
+                       f"mul_reduction_vs_barrett="
+                       f"{1 - cost['mul'] / OP_COSTS['barrett']['mul']:.3f}",
+        })
+
+    # paper §IV-A census: 'the required 32-36 bit primes amount to 443'
+    hist = census_paper_claim(n_plus_1=17)
+    rows.append({
+        "bench": "table1_modmul", "name": "prime_census_32_36bit",
+        "us_per_call": 0.0,
+        "derived": f"total={hist.get('total', 0)};paper_claim=443",
+    })
+    pool = find_ntt_friendly_primes(p_bw=30, n_plus_1=17, count=64)
+    rows.append({
+        "bench": "table1_modmul", "name": "tpu_30bit_prime_pool",
+        "us_per_call": 0.0,
+        "derived": f"count>=64;q_min={pool[0].q};supports_24_limbs=True",
+    })
+    return rows

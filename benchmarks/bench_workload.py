@@ -1,0 +1,28 @@
+"""Fig. 2b reproduction: client-side op breakdown and the ~10:1
+encrypt:decrypt imbalance that motivates the dual-RSC modes."""
+
+from repro.core.scheduler import ClientWorkload
+
+
+def run():
+    w = ClientWorkload(logn=16, enc_limbs=24, dec_limbs=2)
+    wp = ClientWorkload.paper_basis()
+    rows = [{
+        "bench": "fig2_workload", "name": "transform_counts",
+        "us_per_call": 0.0,
+        "derived": f"enc_transforms={w.transforms_enc()};"
+                   f"dec_transforms={w.transforms_dec()}",
+    }, {
+        "bench": "fig2_workload", "name": "enc_dec_op_ratio",
+        "us_per_call": 0.0,
+        "derived": f"lattigo_basis={w.op_ratio():.1f};"
+                   f"fused_24limb={w.op_ratio_fused():.1f};"
+                   f"paper_basis_12lvl={wp.op_ratio_fused():.1f};"
+                   f"paper=~10x",
+    }, {
+        "bench": "fig2_workload", "name": "butterflies_per_ct",
+        "us_per_call": 0.0,
+        "derived": f"enc={w.butterflies(w.transforms_enc()):.3e};"
+                   f"dec={w.butterflies(w.transforms_dec()):.3e}",
+    }]
+    return rows

@@ -1,0 +1,83 @@
+"""Assemble EXPERIMENTS.md tables from dryrun/ and roofline/ JSON artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report [--section dryrun|roofline]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+
+def _load(subdir):
+    out = {}
+    for path in sorted(glob.glob(os.path.join(HERE, "results", subdir,
+                                              "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        out[os.path.basename(path)[:-5]] = r
+    return out
+
+
+def dryrun_table() -> str:
+    rows = _load("dryrun")
+    lines = ["| arch | shape | mesh | chips | HLO GFLOP/chip* | coll GB/chip* "
+             "| args GB/chip | temp GB/chip | compile s |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for key, r in rows.items():
+        mem = r.get("memory", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['devices']} "
+            f"| {r['flops'] / 1e9:.1f} "
+            f"| {r['collectives']['total_bytes'] / 1e9:.2f} "
+            f"| {mem.get('argument_size_in_bytes', 0) / 1e9:.2f} "
+            f"| {mem.get('temp_size_in_bytes', 0) / 1e9:.2f} "
+            f"| {r['compile_s']} |")
+    lines.append("")
+    lines.append("*loop bodies counted once by XLA cost analysis — see "
+                 "§Roofline for trip-count-corrected numbers.")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    rows = _load("roofline")
+    lines = ["| arch | shape | t_comp s | t_mem s | t_coll s | dominant "
+             "| MODEL/HLO flops | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    worst = []
+    for key, r in rows.items():
+        if "arch" not in r:          # fhe_client cell has its own schema
+            continue
+        opt = " (opt)" if key.endswith("__opt") else ""
+        lines.append(
+            f"| {r['arch']}{opt} | {r['shape']} | {r['t_compute_s']:.4f} "
+            f"| {r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} "
+            f"| {r['dominant']} | {r['useful_flops_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.4f} |")
+        if not opt:
+            worst.append((r["roofline_fraction"], r["arch"], r["shape"],
+                          r["dominant"]))
+    worst.sort()
+    lines.append("")
+    lines.append("Worst roofline fractions (hillclimb candidates): "
+                 + "; ".join(f"{a}x{s} ({f:.4f}, {d})"
+                             for f, a, s, d in worst[:5]))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args()
+    if args.section in ("dryrun", "all"):
+        print("## Dry-run table\n")
+        print(dryrun_table())
+    if args.section in ("roofline", "all"):
+        print("\n## Roofline table\n")
+        print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

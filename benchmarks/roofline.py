@@ -1,0 +1,228 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis (deliverable g).
+
+Three terms per (arch x shape) cell on the single-pod mesh:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / ICI_link_bw
+
+Methodology note (IMPORTANT): XLA cost_analysis counts while-loop bodies
+ONCE, so a scan-over-layers model under-reports FLOPs by ~L x. We therefore
+lower each cell in *exact-cost mode* (python-unrolled loops) at n_layers=1
+and n_layers=2; the difference is the exact per-layer cost and
+
+    total = cost(L=1) + (L_real - 1) * per_layer.
+
+The same assembly is applied to bytes_accessed and per-collective bytes
+(which are parsed from the partitioned HLO and would otherwise also be
+counted once). MTP heads / embeddings / CE live in the L=1 base and are
+counted exactly once, as they should be.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI.
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "roofline")
+
+
+def _cost_of(arch_name: str, shape_name: str, n_layers: int) -> dict:
+    """Lower one cost-mode cell (unrolled) and return per-chip costs."""
+    from repro.configs.shapes import SHAPES
+    from repro.distributed import sharding as sh
+    from repro.launch import specs as S
+    from repro.launch.dryrun import collective_bytes
+    from repro.launch.mesh import make_production_mesh, tp_width
+    from repro.models import model as M
+    from repro.models.archs import get_arch
+    from repro.training import optimizer as opt
+
+    cfg = dataclasses.replace(get_arch(arch_name), n_layers=n_layers)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    tp = tp_width(mesh)
+    specs = S.input_specs(cfg, shape_name, tp)
+    # large chunks: fewer unrolled blocks, identical math (never executed)
+    qc = kc = min(8192, shape.seq_len)
+
+    if shape.kind == "train":
+        def fn(params, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: M.train_fwd(p, batch, cfg, tp=tp, q_chunk=qc,
+                                      kv_chunk=kc, unroll=True))(params)
+            return loss, grads
+        args = (specs["params"], specs["batch"])
+        in_sh = (sh.param_shardings(specs["params"], mesh),
+                 sh.batch_shardings(specs["batch"], mesh))
+        out_sh = (sh.replicated(mesh), in_sh[0])
+    elif shape.kind == "prefill":
+        fn = functools.partial(
+            lambda params, batch: M.prefill(
+                params, batch, cfg, cache_len=shape.seq_len, tp=tp,
+                q_chunk=qc, kv_chunk=kc, unroll=True))
+        args = (specs["params"], specs["batch"])
+        cache_sds = M.cache_spec(cfg, shape.global_batch, shape.seq_len, tp)
+        in_sh = (sh.param_shardings(specs["params"], mesh),
+                 sh.batch_shardings(specs["batch"], mesh))
+        out_sh = (sh.batch_shardings(
+            jax.ShapeDtypeStruct(
+                (shape.global_batch, 1, cfg.padded_vocab(tp)), jnp.bfloat16),
+            mesh), sh.cache_shardings(cache_sds, mesh, cfg))
+    else:
+        long_ctx = shape_name == "long_500k"
+        fn = functools.partial(
+            lambda params, cache, batch, pos: M.decode_step(
+                params, cache, batch, pos, cfg, tp=tp, unroll=True))
+        args = (specs["params"], specs["cache"], specs["batch"],
+                specs["pos"])
+        cache_sh = sh.cache_shardings(specs["cache"], mesh, cfg,
+                                      long_context=long_ctx)
+        in_sh = (sh.param_shardings(specs["params"], mesh), cache_sh,
+                 sh.batch_shardings(specs["batch"], mesh),
+                 sh.replicated(mesh))
+        out_sh = (sh.batch_shardings(
+            jax.ShapeDtypeStruct(
+                (shape.global_batch, 1, cfg.padded_vocab(tp)), jnp.bfloat16),
+            mesh), cache_sh)
+
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh,
+                           out_shardings=out_sh).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll["total_bytes"]),
+        "coll_by_kind": coll["bytes"],
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS (global): 6*N_active*D train; 2*N_active*D fwd;
+    decode adds KV-cache attention reads."""
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence + attention over the cache
+    tokens = shape.global_batch
+    attn = 0.0
+    if cfg.family != "ssm":
+        nkv = cfg.n_kv_heads or 0
+        hd = cfg.hd
+        eff = (min(shape.seq_len, cfg.sliding_window)
+               if cfg.sliding_window and cfg.swa_every == 1
+               else shape.seq_len)
+        if cfg.mla:
+            lat = cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim
+            attn = (4.0 * cfg.n_heads * eff * lat
+                    * cfg.n_layers * shape.global_batch)
+        else:
+            attn = (4.0 * cfg.n_heads * eff * hd
+                    * cfg.n_layers * shape.global_batch)
+    return 2.0 * n_act * tokens + attn
+
+
+def analyse(arch_name: str, shape_name: str, n_chips: int = 256) -> dict:
+    from repro.configs.shapes import SHAPES
+    from repro.models.archs import get_arch
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    c1 = _cost_of(arch_name, shape_name, 1)
+    c2 = _cost_of(arch_name, shape_name, 2)
+    L = cfg.n_layers
+
+    def assemble(key):
+        per_layer = max(c2[key] - c1[key], 0.0)
+        return c1[key] + (L - 1) * per_layer
+
+    flops = assemble("flops")            # per-chip (SPMD module)
+    bytes_ = assemble("bytes")
+    coll = assemble("coll")
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bytes_ / HBM_BW
+    t_coll = coll / ICI_BW
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    result = {
+        "arch": arch_name, "shape": shape_name, "chips": n_chips,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_,
+        "coll_bytes_per_chip": coll,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "model_flops_per_chip": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / flops if flops else 0.0,
+        "roofline_fraction":
+            (mf / n_chips / PEAK_FLOPS) / max(t_comp, t_mem, t_coll)
+            if max(t_comp, t_mem, t_coll) > 0 else 0.0,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="enable §Perf tuning flags (models.tuning.PERF); "
+                         "writes *__opt.json next to the baseline")
+    ap.add_argument("--ssd-chunk", type=int, default=64)
+    ap.add_argument("--moe-capacity", type=float, default=1.25)
+    ap.add_argument("--no-hints", action="store_true",
+                    help="ablation: --opt without sharding constraints")
+    ap.add_argument("--moe-groups", type=int, default=0,
+                    help="group-local MoE dispatch + single all-to-all")
+    args = ap.parse_args()
+    from repro.configs.shapes import runnable
+    from repro.models.archs import ARCHS
+    from repro.configs.shapes import SHAPES
+
+    if args.opt:
+        from repro.models.tuning import PERF, set_perf
+        set_perf(shard_hints=not args.no_hints, ssd_bf16=True,
+                 ssd_chunk=args.ssd_chunk, moe_capacity=args.moe_capacity)
+        PERF["moe_local_dispatch"] = args.moe_groups or None
+
+    cells = ([(a, s) for a in ARCHS for s in SHAPES
+              if runnable(ARCHS[a], s)] if args.all
+             else [(args.arch, args.shape)])
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = "__opt" if args.opt else ""
+    for arch, shape in cells:
+        try:
+            r = analyse(arch, shape)
+            path = os.path.join(RESULTS_DIR, f"{arch}__{shape}{suffix}.json")
+            with open(path, "w") as f:
+                json.dump(r, f, indent=1)
+            print(f"OK   {arch} x {shape}: dom={r['dominant']} "
+                  f"comp={r['t_compute_s']:.4f}s mem={r['t_memory_s']:.4f}s "
+                  f"coll={r['t_collective_s']:.4f}s "
+                  f"useful={r['useful_flops_ratio']:.2f}", flush=True)
+        except Exception as e:                             # noqa: BLE001
+            print(f"FAIL {arch} x {shape}: {type(e).__name__}: {e}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

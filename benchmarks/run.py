@@ -1,0 +1,52 @@
+"""Benchmark driver (deliverable d): one bench per paper table/figure.
+
+Prints ``bench,name,us_per_call,derived`` CSV and writes
+benchmarks/results/benchmarks.json. The dry-run (launch.dryrun) and
+roofline (benchmarks.roofline) artifacts are produced by their own
+modules; this driver covers the paper-table reproductions.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5b_lanes]
+"""
+
+import argparse
+import json
+import os
+
+MODULES = (
+    "bench_modmul",          # Table I
+    "bench_radix",           # Fig. 4
+    "bench_precision",       # Fig. 3c
+    "bench_workload",        # Fig. 2b
+    "bench_lanes",           # Fig. 5b
+    "bench_memory",          # Fig. 6b + §IV-B
+    "bench_client_latency",  # Fig. 5a
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module name")
+    args = ap.parse_args()
+
+    import importlib
+    all_rows = []
+    print("bench,name,us_per_call,derived")
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        rows = mod.run()
+        for r in rows:
+            print(f"{r['bench']},{r['name']},{r['us_per_call']},"
+                  f"\"{r['derived']}\"", flush=True)
+        all_rows += rows
+    out = os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "benchmarks.json"), "w") as f:
+        json.dump(all_rows, f, indent=1)
+    print(f"# wrote {len(all_rows)} rows to results/benchmarks.json")
+
+
+if __name__ == "__main__":
+    main()

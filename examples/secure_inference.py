@@ -1,0 +1,63 @@
+"""Private inference: FHE client wrapping an LM server (paper Fig. 1).
+
+    PYTHONPATH=src python examples/secure_inference.py
+
+The client encodes + encrypts prompt embeddings with the streaming kernels,
+ships ciphertexts to the 'server', receives encrypted results and decrypts.
+Server-side homomorphic evaluation is OUT of this paper's scope (ABC-FHE is
+the client accelerator; servers are SHARP/ARK/Trinity territory), so the
+server boundary is simulated — the point here is the client data path,
+traffic accounting, and the end-to-end precision budget.
+"""
+
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.fhe_client.client import FHEClient, simulate_private_inference
+from repro.models import model as M
+from repro.models.archs import get_arch, reduced_config
+
+
+def main():
+    cfg = reduced_config(get_arch("qwen2-vl-2b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    client = FHEClient(profile="test")
+    print(f"model: {cfg.name}  d_model={cfg.d_model}")
+    print(f"CKKS: N=2^{client.ctx.params.logn}, "
+          f"{client.ctx.params.n_limbs} limbs")
+
+    batch, seq = 2, 16
+
+    def serve_fn(x_rows: np.ndarray) -> np.ndarray:
+        """Stand-in server: embeds -> one LM forward -> last hidden state."""
+        embeds = jnp.asarray(
+            x_rows.reshape(batch, seq, cfg.d_model), jnp.float32)
+        mrope = jnp.broadcast_to(jnp.arange(seq)[None, :, None],
+                                 (batch, seq, 3)).astype(jnp.int32)
+        lg, _ = M.prefill(params, {"embeds": embeds, "mrope_pos": mrope},
+                          cfg, cache_len=seq, q_chunk=16, kv_chunk=16)
+        out = np.asarray(lg.astype(jnp.float32))[:, 0, : cfg.d_model]
+        return out.reshape(batch, cfg.d_model) / 10.0
+
+    x = np.random.default_rng(1).standard_normal(
+        (batch, seq * cfg.d_model)) * 0.1
+    y, stats = simulate_private_inference(client, serve_fn, x,
+                                          out_features=cfg.d_model)
+    rep = client.upload_report(batch)
+    print(f"client->server ciphertext: {rep['ct_bytes'] / 1e3:.1f} KB "
+          f"({rep['ct_bytes_seeded'] / 1e3:.1f} KB seeded, "
+          f"{rep['compression']:.2f}x compression)")
+    print(f"input round-trip error through FHE: {stats['roundtrip_err']:.2e}")
+    print(f"served output shape: {y.shape}")
+    assert stats["roundtrip_err"] < 1e-4
+    print("OK — private-inference loop verified")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""End-to-end training driver example: train a ~100M-param LM for a few
+hundred steps with the full substrate (microbatching, 8-bit Adam,
+checkpoint/resume, prefetched data).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses the mamba2-130m assigned architecture at a CPU-runnable batch/seq.
+Resume-after-interruption is exercised by saving at --ckpt-every and
+restarting from the latest checkpoint if one exists.
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    argv = ["--arch", "mamba2-130m",          # full 130M config, real scale
+            "--steps", str(args.steps),
+            "--batch", str(args.batch),
+            "--seq", str(args.seq),
+            "--micro", "2",
+            "--compress",                      # int8 grads + error feedback
+            "--ckpt-dir", "/tmp/repro_train_lm",
+            "--ckpt-every", "100"]
+    if args.resume:
+        argv.append("--resume")
+    losses = train_main(argv)
+    if args.steps >= 100:                 # warmup dominates shorter runs
+        assert losses[-1] < losses[0], "loss did not improve"
+        print("OK — training loss improved "
+              f"({losses[0]:.3f} -> {losses[-1]:.3f})")
+    else:
+        print(f"OK — short sanity run ({args.steps} steps; "
+              "loss-improvement check applies from 100 steps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""repro — ABC-FHE (client-side CKKS) reproduced as a multi-pod JAX framework.
+
+The core CKKS reference paths use exact 64-bit integer arithmetic, so x64 is
+enabled at package import. All model / kernel code is dtype-explicit (bf16,
+f32, u32) and unaffected by the default-dtype change.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

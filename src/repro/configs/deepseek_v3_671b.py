@@ -1,0 +1,13 @@
+"""Config for ``deepseek-v3-671b`` (--arch deepseek-v3-671b). Exact public numbers; see
+repro.models.archs for the registry entry and source citation."""
+
+from repro.models.archs import DEEPSEEK_V3 as _CFG
+from repro.models.archs import reduced_config
+
+
+def config():
+    return _CFG
+
+
+def smoke_config():
+    return reduced_config(_CFG)

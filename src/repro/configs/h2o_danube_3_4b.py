@@ -1,0 +1,13 @@
+"""Config for ``h2o-danube-3-4b`` (--arch h2o-danube-3-4b). Exact public numbers; see
+repro.models.archs for the registry entry and source citation."""
+
+from repro.models.archs import H2O_DANUBE3_4B as _CFG
+from repro.models.archs import reduced_config
+
+
+def config():
+    return _CFG
+
+
+def smoke_config():
+    return reduced_config(_CFG)

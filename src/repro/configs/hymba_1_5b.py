@@ -1,0 +1,13 @@
+"""Config for ``hymba-1.5b`` (--arch hymba-1.5b). Exact public numbers; see
+repro.models.archs for the registry entry and source citation."""
+
+from repro.models.archs import HYMBA_1_5B as _CFG
+from repro.models.archs import reduced_config
+
+
+def config():
+    return _CFG
+
+
+def smoke_config():
+    return reduced_config(_CFG)

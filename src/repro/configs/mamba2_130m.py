@@ -1,0 +1,13 @@
+"""Config for ``mamba2-130m`` (--arch mamba2-130m). Exact public numbers; see
+repro.models.archs for the registry entry and source citation."""
+
+from repro.models.archs import MAMBA2_130M as _CFG
+from repro.models.archs import reduced_config
+
+
+def config():
+    return _CFG
+
+
+def smoke_config():
+    return reduced_config(_CFG)

@@ -1,0 +1,13 @@
+"""Config for ``phi4-mini-3.8b`` (--arch phi4-mini-3.8b). Exact public numbers; see
+repro.models.archs for the registry entry and source citation."""
+
+from repro.models.archs import PHI4_MINI as _CFG
+from repro.models.archs import reduced_config
+
+
+def config():
+    return _CFG
+
+
+def smoke_config():
+    return reduced_config(_CFG)

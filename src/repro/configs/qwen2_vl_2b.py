@@ -1,0 +1,13 @@
+"""Config for ``qwen2-vl-2b`` (--arch qwen2-vl-2b). Exact public numbers; see
+repro.models.archs for the registry entry and source citation."""
+
+from repro.models.archs import QWEN2_VL_2B as _CFG
+from repro.models.archs import reduced_config
+
+
+def config():
+    return _CFG
+
+
+def smoke_config():
+    return reduced_config(_CFG)

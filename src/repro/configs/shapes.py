@@ -1,0 +1,26 @@
+"""The four assigned input shapes (every arch pairs with all four;
+long_500k only for sub-quadratic archs)."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def runnable(arch_cfg, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_cfg.subquadratic
+    return True

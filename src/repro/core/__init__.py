@@ -1,0 +1,21 @@
+"""Core CKKS client-side library (the paper's contribution)."""
+
+from repro.core.context import CKKSContext, CKKSParams, PROFILES, get_context
+from repro.core.encoder import Plaintext, decode, encode, boot_precision_bits
+from repro.core.encryptor import (
+    Ciphertext,
+    PublicKey,
+    SecretKey,
+    decrypt,
+    encrypt,
+    encrypt_symmetric_seeded,
+    expand_seeded,
+    keygen,
+)
+
+__all__ = [
+    "CKKSContext", "CKKSParams", "PROFILES", "get_context",
+    "Plaintext", "decode", "encode", "boot_precision_bits",
+    "Ciphertext", "PublicKey", "SecretKey",
+    "decrypt", "encrypt", "encrypt_symmetric_seeded", "expand_seeded", "keygen",
+]

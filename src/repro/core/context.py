@@ -1,0 +1,113 @@
+"""CKKSContext — parameters, primes, NTT plans and derived constants.
+
+The production profile mirrors the paper's evaluation setup (§V-B) at the
+TPU word size: N = 2^16, 24 limbs (double-scale: two ~30-bit primes per
+logical level, 'levels doubled from the standard 12 to 24'), fresh
+encryption at 24 limbs, server returns 2-limb ciphertexts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.core import ntt as nttmod
+from repro.core.primes import NTTPrime, find_ntt_friendly_primes
+
+
+@dataclasses.dataclass(frozen=True)
+class CKKSParams:
+    logn: int = 16
+    n_limbs: int = 24            # fresh ciphertext limbs
+    decrypt_limbs: int = 2       # limbs of server-returned ciphertexts
+    delta_bits: int = 58         # scale Delta = 2^delta_bits (double-scale regime)
+    p_bw: int = 30               # eq.(8) leading exponent (TPU 32-bit words)
+    seed: int = 0x243F6A8885A308D313198A2E03707344  # pi digits, 128-bit
+
+    @property
+    def n(self) -> int:
+        return 1 << self.logn
+
+    @property
+    def n_slots(self) -> int:
+        return self.n // 2
+
+    @property
+    def m(self) -> int:
+        return 2 * self.n
+
+    @property
+    def delta(self) -> float:
+        return float(2 ** self.delta_bits)
+
+
+# Named profiles; `paper` matches ABC-FHE §V-B at the TPU word size.
+# delta 2^55 with 30-bit primes mirrors the paper's 2^58 with 36-bit primes:
+# both leave ~2^4-2^5 of message headroom in the 2-limb decrypt modulus.
+PROFILES = {
+    "paper": CKKSParams(logn=16, n_limbs=24, decrypt_limbs=2,
+                        delta_bits=55),
+    "n15": CKKSParams(logn=15, n_limbs=24, decrypt_limbs=2, delta_bits=55),
+    "n14": CKKSParams(logn=14, n_limbs=24, decrypt_limbs=2, delta_bits=55),
+    "test": CKKSParams(logn=10, n_limbs=6, decrypt_limbs=2, delta_bits=50),
+    "tiny": CKKSParams(logn=6, n_limbs=3, decrypt_limbs=2, delta_bits=40),
+}
+
+
+class CKKSContext:
+    """Immutable parameter/twiddle/key-independent state for one profile."""
+
+    def __init__(self, params: CKKSParams):
+        self.params = params
+        # n+1 must give primitive 2N-th roots: q ≡ 1 mod 2N. Additionally the
+        # eq.(11) shift-add closed form at R = 2^32 needs 2*val2(q-1) >= 32,
+        # i.e. n+1 >= 16 (the paper's k >= 2^(bw/2-1-n) condition at our word
+        # size). Small-N profiles therefore draw from the n+1 = 16 family —
+        # q ≡ 1 (mod 2^16) supports every negacyclic NTT with N <= 2^15.
+        n_plus_1 = max(params.logn + 1, 16)
+        self.primes: tuple[NTTPrime, ...] = find_ntt_friendly_primes(
+            p_bw=params.p_bw, n_plus_1=n_plus_1, count=params.n_limbs
+        )
+        self.q_list: tuple[int, ...] = tuple(p.q for p in self.primes)
+        self.plans: tuple[nttmod.NTTPlan, ...] = tuple(
+            nttmod.make_plan(p, params.n) for p in self.primes
+        )
+        # headroom check: Delta * |m|_max must fit the decrypt modulus
+        q01 = self.q_list[0] * self.q_list[1]
+        assert params.delta < q01 / 4, "Delta too large for 2-limb decrypt"
+
+    @property
+    def n(self) -> int:
+        return self.params.n
+
+    def q_product(self, n_limbs: int) -> int:
+        import math
+        return math.prod(self.q_list[:n_limbs])
+
+    def modulus_bits(self, n_limbs: int | None = None) -> float:
+        import math
+        n_limbs = n_limbs if n_limbs is not None else self.params.n_limbs
+        return sum(math.log2(q) for q in self.q_list[:n_limbs])
+
+    # --- memory accounting (paper §IV-B / Fig. 6b terms) -------------------
+
+    def twiddle_table_bytes(self) -> int:
+        return sum(p.table_nbytes() for p in self.plans)
+
+    def twiddle_seed_bytes(self) -> int:
+        return sum(p.seeds.nbytes() for p in self.plans)
+
+    def key_material_bytes(self) -> int:
+        """Public key (b, a) across limbs, uint32 words."""
+        return 2 * self.params.n_limbs * self.n * 4
+
+    def mask_error_bytes(self) -> int:
+        """Per-encryption randomness (v, e0, e1) if fetched from memory."""
+        return 3 * self.params.n_limbs * self.n * 4
+
+
+@functools.lru_cache(maxsize=None)
+def get_context(profile: str = "paper") -> CKKSContext:
+    return CKKSContext(PROFILES[profile])

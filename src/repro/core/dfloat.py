@@ -1,0 +1,151 @@
+"""Double-word floating-point arithmetic (Dekker/Knuth error-free transforms).
+
+ABC-FHE's Fourier engine uses a custom FP55 format (1+11+43) because >= 43
+mantissa bits keep bootstrapping precision above the 19.29-bit requirement
+(paper Fig. 3c). TPUs have no fp64 and no FP55; the TPU-idiomatic substitute
+is *double-float32* — an unevaluated (hi, lo) pair of f32 giving ~49
+effective mantissa bits, built entirely from native f32 VPU ops. This module
+implements the error-free transforms generically so the same code runs as
+
+  * df32 (pairs of f32)  — the kernel datapath (>= 43 bits, Fig. 3c-valid);
+  * df64 (pairs of f64)  — ~106-bit CPU oracle used for exact encode
+    rounding and CRT recombination of double-scale (≈2^60) values.
+
+No FMA is assumed (TPU VPU has none exposed): TwoProd uses Dekker/Veltkamp
+splitting.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class DF(NamedTuple):
+    """Unevaluated sum hi + lo with |lo| <= ulp(hi)/2."""
+
+    hi: jnp.ndarray
+    lo: jnp.ndarray
+
+    @property
+    def dtype(self):
+        return self.hi.dtype
+
+
+def _split_const(dtype) -> float:
+    # Veltkamp splitter: 2^ceil(p/2) + 1 for p-bit mantissa
+    if jnp.dtype(dtype) == jnp.float32:
+        return float(2 ** 12 + 1)
+    return float(2 ** 27 + 1)
+
+
+def df_from(x, dtype=jnp.float32) -> DF:
+    x = jnp.asarray(x)
+    hi = x.astype(dtype)
+    lo = (x - hi.astype(x.dtype)).astype(dtype) if x.dtype != dtype else jnp.zeros_like(hi)
+    return DF(hi, lo)
+
+
+def df_const(value: float, dtype=jnp.float32) -> DF:
+    """Split a python float (f64) into a df constant of the target dtype."""
+    hi = jnp.asarray(value, dtype)
+    lo = jnp.asarray(value - float(hi), dtype)
+    return DF(hi, lo)
+
+
+def two_sum(a, b):
+    s = a + b
+    bb = s - a
+    err = (a - (s - bb)) + (b - bb)
+    return s, err
+
+
+def quick_two_sum(a, b):
+    """Requires |a| >= |b|."""
+    s = a + b
+    return s, b - (s - a)
+
+
+def two_prod(a, b):
+    """Error-free a*b = p + e via Veltkamp splitting (no FMA)."""
+    p = a * b
+    # numpy scalar (not jnp) so Pallas kernels see a literal, not a capture
+    c = jnp.dtype(a.dtype).type(_split_const(a.dtype))
+    a_hi = c * a - (c * a - a)
+    a_lo = a - a_hi
+    b_hi = c * b - (c * b - b)
+    b_lo = b - b_hi
+    e = ((a_hi * b_hi - p) + a_hi * b_lo + a_lo * b_hi) + a_lo * b_lo
+    return p, e
+
+
+def df_add(x: DF, y: DF) -> DF:
+    s, e = two_sum(x.hi, y.hi)
+    e = e + x.lo + y.lo
+    return DF(*quick_two_sum(s, e))
+
+
+def df_sub(x: DF, y: DF) -> DF:
+    return df_add(x, DF(-y.hi, -y.lo))
+
+
+def df_mul(x: DF, y: DF) -> DF:
+    p, e = two_prod(x.hi, y.hi)
+    e = e + x.hi * y.lo + x.lo * y.hi
+    return DF(*quick_two_sum(p, e))
+
+
+def df_neg(x: DF) -> DF:
+    return DF(-x.hi, -x.lo)
+
+
+def df_to_float(x: DF):
+    """Collapse to the wider native float (f64 on CPU) for verification."""
+    return x.hi.astype(jnp.float64) + x.lo.astype(jnp.float64)
+
+
+def df_round(x: DF) -> DF:
+    """Round to nearest integer, keeping the (possibly > mantissa) value
+    exactly as an integer-valued df pair."""
+    rh = jnp.round(x.hi)
+    frac = (x.hi - rh) + x.lo           # exact: |x.hi - rh| <= 0.5
+    rl = jnp.round(frac)
+    return DF(*quick_two_sum(rh, rl))
+
+
+class DFComplex(NamedTuple):
+    re: DF
+    im: DF
+
+
+def dfc_from(z, dtype=jnp.float32) -> DFComplex:
+    return DFComplex(df_from(jnp.real(z), dtype), df_from(jnp.imag(z), dtype))
+
+
+def dfc_add(a: DFComplex, b: DFComplex) -> DFComplex:
+    return DFComplex(df_add(a.re, b.re), df_add(a.im, b.im))
+
+
+def dfc_sub(a: DFComplex, b: DFComplex) -> DFComplex:
+    return DFComplex(df_sub(a.re, b.re), df_sub(a.im, b.im))
+
+
+def dfc_mul(a: DFComplex, b: DFComplex) -> DFComplex:
+    """(ac - bd) + i(ad + bc) — four df multiplies, the reconfigured
+    4-multiplier complex unit of paper eq. (12)."""
+    ac = df_mul(a.re, b.re)
+    bd = df_mul(a.im, b.im)
+    ad = df_mul(a.re, b.im)
+    bc = df_mul(a.im, b.re)
+    return DFComplex(df_sub(ac, bd), df_add(ad, bc))
+
+
+def dfc_to_complex(a: DFComplex):
+    return df_to_float(a.re) + 1j * df_to_float(a.im)
+
+
+def effective_mantissa_bits(dtype) -> int:
+    """Worst-case effective mantissa of a df pair (2p+1 bits)."""
+    p = 24 if jnp.dtype(dtype) == jnp.float32 else 53
+    return 2 * p + 1

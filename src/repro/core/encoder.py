@@ -1,0 +1,71 @@
+"""CKKS encode/decode (paper Fig. 2a left/right columns).
+
+encode:  z (N/2 complex slots) --SpecialIFFT--> w --x Delta, round--> integer
+         coefficients --RNS--> residues --NTT per limb--> plaintext (NTT dom.)
+decode:  2-limb ciphertext --INTT--> residues --CRT (df64)--> centered ints
+         --/Delta--> complex coefficients --SpecialFFT--> slots
+
+The Delta-scaling and RNS reduction are exact (error-free df64 transforms +
+exact fmod); the only approximation in the pipeline is the Fourier transform
+itself, whose precision is the paper's Fig. 3c subject.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import dfloat as dfl
+from repro.core import fft as fftmod
+from repro.core import ntt as nttmod
+from repro.core import rns
+from repro.core.context import CKKSContext
+
+
+@dataclasses.dataclass
+class Plaintext:
+    """RNS plaintext, NTT domain, shape (n_limbs, N) uint32."""
+
+    data: jnp.ndarray
+    n_limbs: int
+    scale: float
+
+
+def encode(z, ctx: CKKSContext, n_limbs: int | None = None) -> Plaintext:
+    """z: (..., n_slots) complex -> Plaintext at `n_limbs` (default fresh)."""
+    p = ctx.params
+    n_limbs = n_limbs if n_limbs is not None else p.n_limbs
+    z = np.asarray(z, dtype=np.complex128)
+    assert z.shape[-1] == p.n_slots
+    w = fftmod.special_ifft(z, p.m)
+    coeffs = np.concatenate([w.real, w.imag], axis=-1)       # (..., N) float64
+    hi, lo = dfl.two_prod(jnp.asarray(coeffs), jnp.float64(p.delta))
+    scaled = dfl.df_round(dfl.DF(hi, lo))
+    residues = rns.to_rns_df(scaled, ctx.q_list[:n_limbs])   # (L, ..., N)
+    # NTT per limb
+    rows = [nttmod.ntt(residues[i], ctx.plans[i]) for i in range(n_limbs)]
+    return Plaintext(jnp.stack(rows), n_limbs, p.delta)
+
+
+def decode(pt_ntt, ctx: CKKSContext, scale: float | None = None) -> np.ndarray:
+    """pt_ntt: (2, ..., N) uint32 NTT-domain residues -> (..., n_slots) complex."""
+    p = ctx.params
+    scale = scale if scale is not None else p.delta
+    c0 = nttmod.intt(pt_ntt[0], ctx.plans[0])
+    c1 = nttmod.intt(pt_ntt[1], ctx.plans[1])
+    v = rns.crt2_to_df(c0, c1, ctx.q_list[0], ctx.q_list[1])
+    coeffs = (np.asarray(v.hi) + np.asarray(v.lo)) / scale   # |v| < Q/2
+    n = p.n
+    zc = coeffs[..., : n // 2] + 1j * coeffs[..., n // 2:]
+    return fftmod.special_fft(zc, p.m)
+
+
+def boot_precision_bits(z_ref: np.ndarray, z_got: np.ndarray) -> float:
+    """Paper's 'Boot. prec.' metric: -log2 of the max error (bits of
+    agreement after a client round-trip)."""
+    err = np.max(np.abs(z_got - z_ref))
+    if err == 0:
+        return np.inf
+    return float(-np.log2(err))

@@ -1,0 +1,187 @@
+"""CKKS client-side key generation, encryption and decryption.
+
+RLWE over R_Q = Z_Q[X]/(X^N + 1), everything held in the NTT domain per RNS
+limb (uint32 residues). Randomness comes exclusively from the counter-based
+PRNG (paper's on-chip PRNG): no mask/error/key material is ever fetched from
+'external memory'.
+
+    keygen:   s <- ternary;  a <- U(R_Q) (NTT domain);  e <- CBD
+              pk = (b, a),  b = e - a*s
+    encrypt:  v <- ZO(0.5);  e0, e1 <- CBD
+              ct = (v*b + e0 + pt,  v*a + e1)
+    decrypt:  pt' = c0 + c1 * s     (then decode: INTT -> CRT -> FFT)
+
+Seeded (compressed) encryption regenerates `a` from its PRNG stream id, so a
+fresh symmetric ciphertext is a single polynomial + 128-bit seed — the
+streaming analogue of the paper's on-chip generation claim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import modmul, ntt as nttmod, prng
+from repro.core.context import CKKSContext
+from repro.core.encoder import Plaintext
+
+# PRNG stream-id layout (stream = base + limb for per-limb polynomials)
+STREAM_SECRET = 0x100
+STREAM_PK_A = 0x1000
+STREAM_PK_E = 0x2000
+STREAM_ENC_V = 0x10000       # + 16*nonce
+STREAM_ENC_E0 = 0x20000
+STREAM_ENC_E1 = 0x30000
+
+
+@dataclasses.dataclass
+class SecretKey:
+    s_mont: jnp.ndarray       # (L, N) NTT domain, Montgomery form
+    s_coeffs: jnp.ndarray     # (N,) int32 (ternary; kept for tests/noise est)
+
+
+@dataclasses.dataclass
+class PublicKey:
+    b_mont: jnp.ndarray       # (L, N) NTT domain, Montgomery form
+    a_mont: jnp.ndarray
+    a_stream: int | None      # set when `a` is PRNG-derived (seeded mode)
+
+
+@dataclasses.dataclass
+class Ciphertext:
+    c0: jnp.ndarray           # (L, N) NTT domain
+    c1: jnp.ndarray | None    # None => seeded: regenerate from a_stream
+    n_limbs: int
+    scale: float
+    a_stream: int | None = None
+
+
+def _small_poly_to_ntt(coeffs_i32, ctx: CKKSContext, n_limbs: int):
+    """Signed small polynomial -> per-limb NTT-domain residues (L, N)."""
+    rows = []
+    for i in range(n_limbs):
+        r = prng.signed_to_residue(coeffs_i32, ctx.q_list[i])
+        rows.append(nttmod.ntt(r, ctx.plans[i]))
+    return jnp.stack(rows)
+
+
+def _to_mont(x, ctx: CKKSContext, n_limbs: int):
+    rows = [
+        modmul.mulmod_montgomery_u64(x[i], jnp.uint64(ctx.plans[i].mont.r2),
+                                     ctx.plans[i].mont)
+        for i in range(n_limbs)
+    ]
+    return jnp.stack(rows)
+
+
+def _mont_mul(a, b_mont, ctx: CKKSContext, n_limbs: int):
+    rows = [
+        modmul.mulmod_montgomery_u64(a[i], b_mont[i], ctx.plans[i].mont)
+        for i in range(n_limbs)
+    ]
+    return jnp.stack(rows)
+
+
+def _addmod_rows(a, b, ctx, n_limbs):
+    return jnp.stack(
+        [modmul.addmod(a[i], b[i], ctx.q_list[i]) for i in range(n_limbs)]
+    )
+
+
+def _submod_rows(a, b, ctx, n_limbs):
+    return jnp.stack(
+        [modmul.submod(a[i], b[i], ctx.q_list[i]) for i in range(n_limbs)]
+    )
+
+
+def keygen(ctx: CKKSContext, seed: int | None = None):
+    p = ctx.params
+    seed = seed if seed is not None else p.seed
+    L, n = p.n_limbs, p.n
+
+    s = prng.ternary(seed, STREAM_SECRET, n)
+    s_ntt = _small_poly_to_ntt(s, ctx, L)
+    s_mont = _to_mont(s_ntt, ctx, L)
+
+    a = jnp.stack([
+        prng.uniform_mod_q(seed, STREAM_PK_A + i, n, ctx.q_list[i])
+        for i in range(L)
+    ])
+    e = prng.cbd(seed, STREAM_PK_E, n)
+    e_ntt = _small_poly_to_ntt(e, ctx, L)
+
+    a_s = _mont_mul(a, s_mont, ctx, L)
+    b = _submod_rows(e_ntt, a_s, ctx, L)
+    pk = PublicKey(
+        b_mont=_to_mont(b, ctx, L),
+        a_mont=_to_mont(a, ctx, L),
+        a_stream=STREAM_PK_A,
+    )
+    return SecretKey(s_mont=s_mont, s_coeffs=s), pk
+
+
+def encrypt(pt: Plaintext, pk: PublicKey, ctx: CKKSContext,
+            seed: int | None = None, nonce: int = 0) -> Ciphertext:
+    """Public-key encryption: ct = (v*b + e0 + pt, v*a + e1)."""
+    p = ctx.params
+    seed = seed if seed is not None else p.seed
+    L, n = pt.n_limbs, p.n
+
+    v = prng.zo(seed, STREAM_ENC_V + 16 * nonce, n)
+    e0 = prng.cbd(seed, STREAM_ENC_E0 + 16 * nonce, n)
+    e1 = prng.cbd(seed, STREAM_ENC_E1 + 16 * nonce, n)
+
+    v_ntt = _small_poly_to_ntt(v, ctx, L)
+    e0_ntt = _small_poly_to_ntt(e0, ctx, L)
+    e1_ntt = _small_poly_to_ntt(e1, ctx, L)
+
+    c0 = _addmod_rows(
+        _addmod_rows(_mont_mul(v_ntt, pk.b_mont[:L], ctx, L), e0_ntt, ctx, L),
+        pt.data, ctx, L,
+    )
+    c1 = _addmod_rows(_mont_mul(v_ntt, pk.a_mont[:L], ctx, L), e1_ntt, ctx, L)
+    return Ciphertext(c0=c0, c1=c1, n_limbs=L, scale=pt.scale)
+
+
+def encrypt_symmetric_seeded(pt: Plaintext, sk: SecretKey, ctx: CKKSContext,
+                             seed: int | None = None, nonce: int = 1) -> Ciphertext:
+    """Symmetric seeded encryption: ct = (-a*s + e + pt, seed-of-a).
+    Halves ciphertext traffic — `a` is regenerated from its stream id."""
+    p = ctx.params
+    seed = seed if seed is not None else p.seed
+    L, n = pt.n_limbs, p.n
+    a_stream = STREAM_ENC_V + 16 * nonce + 7
+    a = jnp.stack([
+        prng.uniform_mod_q(seed, a_stream + 1024 * i, n, ctx.q_list[i])
+        for i in range(L)
+    ])
+    e = prng.cbd(seed, STREAM_ENC_E0 + 16 * nonce, n)
+    e_ntt = _small_poly_to_ntt(e, ctx, L)
+    a_s = _mont_mul(a, sk.s_mont[:L], ctx, L)
+    c0 = _addmod_rows(_submod_rows(e_ntt, a_s, ctx, L), pt.data, ctx, L)
+    return Ciphertext(c0=c0, c1=None, n_limbs=L, scale=pt.scale,
+                      a_stream=a_stream)
+
+
+def expand_seeded(ct: Ciphertext, ctx: CKKSContext,
+                  seed: int | None = None) -> Ciphertext:
+    """Regenerate c1 = a from the PRNG stream (receiver side)."""
+    assert ct.c1 is None and ct.a_stream is not None
+    p = ctx.params
+    seed = seed if seed is not None else p.seed
+    a = jnp.stack([
+        prng.uniform_mod_q(seed, ct.a_stream + 1024 * i, p.n, ctx.q_list[i])
+        for i in range(ct.n_limbs)
+    ])
+    return Ciphertext(c0=ct.c0, c1=a, n_limbs=ct.n_limbs, scale=ct.scale)
+
+
+def decrypt(ct: Ciphertext, sk: SecretKey, ctx: CKKSContext,
+            n_limbs: int | None = None):
+    """pt' = c0 + c1*s over the first `n_limbs` limbs (NTT domain)."""
+    if ct.c1 is None:
+        ct = expand_seeded(ct, ctx)
+    L = n_limbs if n_limbs is not None else min(ct.n_limbs, 2)
+    c1s = _mont_mul(ct.c1[:L], sk.s_mont[:L], ctx, L)
+    return _addmod_rows(ct.c0[:L], c1s, ctx, L)

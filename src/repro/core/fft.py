@@ -1,0 +1,231 @@
+"""SpecialFFT / SpecialIFFT — the CKKS canonical-embedding transform
+(HEAAN/Lattigo convention) used by encode (IFFT) and decode (FFT).
+
+The slot vector z in C^{N/2} corresponds to the plaintext polynomial m(X)
+through evaluation at the Galois orbit of a primitive 2N-th root zeta:
+
+    z_j = m(zeta^{5^j}),   j = 0..N/2-1,   zeta = exp(i*pi/N)
+
+Three datapaths:
+  * ``special_fft`` / ``special_ifft``        — complex128 oracle (CPU);
+  * ``special_fft_df`` / ``special_ifft_df``  — double-float (df32 target,
+    the FP55-equivalent kernel datapath, paper Fig. 3c);
+  * ``special_fft_quantized``                 — NumPy path with per-op
+    rounding to ``mbits`` mantissa bits, reproducing the paper's mantissa
+    sweep that justified FP55 (>= 43 bits -> Boot.prec 23.39 > 19.29).
+
+Twiddles follow the same on-the-fly philosophy as the NTT: stage twiddles
+are powers of e^{2*pi*i/lenq} indexed by the rotation group 5^j, and the
+kernel path regenerates them from per-stage seeds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import dfloat as dfl
+
+
+@functools.lru_cache(maxsize=None)
+def rot_group(n_slots: int, m: int) -> np.ndarray:
+    """5^j mod M for j < n_slots (M = 2N = 4*n_slots)."""
+    out = np.empty(n_slots, dtype=np.int64)
+    g = 1
+    for j in range(n_slots):
+        out[j] = g
+        g = (g * 5) % m
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def unit_roots(m: int) -> np.ndarray:
+    k = np.arange(m)
+    return np.exp(2j * np.pi * k / m)
+
+
+def _stage_indices(n_slots: int, m: int, length: int) -> np.ndarray:
+    lenh, lenq = length // 2, length * 4
+    rg = rot_group(n_slots, m)[:lenh]
+    return (rg % lenq) * (m // lenq)
+
+
+def special_fft(vals: np.ndarray, m: int) -> np.ndarray:
+    """Decode-direction transform: coeffs-side -> slots. vals: (..., n)."""
+    n = vals.shape[-1]
+    roots = unit_roots(m)
+    x = np.asarray(vals, dtype=np.complex128).copy()
+    # bit-reverse along the last axis
+    from repro.core.ntt import bitrev_indices
+    x = x[..., bitrev_indices(n)]
+    length = 2
+    while length <= n:
+        lenh = length // 2
+        w = roots[_stage_indices(n, m, length)]
+        shp = x.shape[:-1]
+        x = x.reshape(shp + (n // length, 2, lenh))
+        u, v = x[..., 0, :], x[..., 1, :] * w
+        x = np.stack([u + v, u - v], axis=-2).reshape(shp + (n,))
+        length *= 2
+    return x
+
+
+def special_ifft(vals: np.ndarray, m: int) -> np.ndarray:
+    """Encode-direction transform: slots -> coeffs-side (includes 1/n)."""
+    n = vals.shape[-1]
+    roots = unit_roots(m)
+    x = np.asarray(vals, dtype=np.complex128).copy()
+    length = n
+    while length >= 2:
+        lenh, lenq = length // 2, length * 4
+        rg = rot_group(n, m)[:lenh]
+        w = roots[(lenq - (rg % lenq)) * (m // lenq)]
+        shp = x.shape[:-1]
+        x = x.reshape(shp + (n // length, 2, lenh))
+        u, v = x[..., 0, :], x[..., 1, :]
+        x = np.stack([u + v, (u - v) * w], axis=-2).reshape(shp + (n,))
+        length //= 2
+    from repro.core.ntt import bitrev_indices
+    return x[..., bitrev_indices(n)] / n
+
+
+# ---------------------------------------------------------------------------
+# double-float datapath (df32 = FP55-equivalent; also runs as df64)
+# ---------------------------------------------------------------------------
+
+
+def _dfc_roots(idx: np.ndarray, m: int, dtype) -> dfl.DFComplex:
+    r = unit_roots(m)[idx]
+    re_hi = r.real.astype(np.float32 if jnp.dtype(dtype) == jnp.float32 else np.float64)
+    re_lo = (r.real - re_hi).astype(re_hi.dtype)
+    im_hi = r.imag.astype(re_hi.dtype)
+    im_lo = (r.imag - im_hi).astype(re_hi.dtype)
+    return dfl.DFComplex(
+        dfl.DF(jnp.asarray(re_hi, dtype), jnp.asarray(re_lo, dtype)),
+        dfl.DF(jnp.asarray(im_hi, dtype), jnp.asarray(im_lo, dtype)),
+    )
+
+
+def _dfc_reshape(z: dfl.DFComplex, shape) -> dfl.DFComplex:
+    f = lambda a: a.reshape(shape)
+    return dfl.DFComplex(
+        dfl.DF(f(z.re.hi), f(z.re.lo)), dfl.DF(f(z.im.hi), f(z.im.lo))
+    )
+
+
+def _dfc_index(z: dfl.DFComplex, idx) -> dfl.DFComplex:
+    f = lambda a: a[idx]
+    return dfl.DFComplex(
+        dfl.DF(f(z.re.hi), f(z.re.lo)), dfl.DF(f(z.im.hi), f(z.im.lo))
+    )
+
+
+def _dfc_stack2(a: dfl.DFComplex, b: dfl.DFComplex, axis) -> dfl.DFComplex:
+    f = lambda x, y: jnp.stack([x, y], axis=axis)
+    return dfl.DFComplex(
+        dfl.DF(f(a.re.hi, b.re.hi), f(a.re.lo, b.re.lo)),
+        dfl.DF(f(a.im.hi, b.im.hi), f(a.im.lo, b.im.lo)),
+    )
+
+
+def special_fft_df(z: dfl.DFComplex, m: int, dtype=jnp.float32) -> dfl.DFComplex:
+    n = z.re.hi.shape[-1]
+    from repro.core.ntt import bitrev_indices
+    x = _dfc_index(z, (..., bitrev_indices(n)))
+    length = 2
+    while length <= n:
+        lenh = length // 2
+        w = _dfc_roots(_stage_indices(n, m, length), m, dtype)
+        shp = x.re.hi.shape[:-1]
+        x = _dfc_reshape(x, shp + (n // length, 2, lenh))
+        u = _dfc_index(x, (..., 0, slice(None)))
+        v = dfl.dfc_mul(_dfc_index(x, (..., 1, slice(None))), w)
+        x = _dfc_stack2(dfl.dfc_add(u, v), dfl.dfc_sub(u, v), -2)
+        x = _dfc_reshape(x, shp + (n,))
+        length *= 2
+    return x
+
+
+def special_ifft_df(z: dfl.DFComplex, m: int, dtype=jnp.float32) -> dfl.DFComplex:
+    n = z.re.hi.shape[-1]
+    x = z
+    length = n
+    while length >= 2:
+        lenh, lenq = length // 2, length * 4
+        rg = rot_group(n, m)[:lenh]
+        w = _dfc_roots((lenq - (rg % lenq)) * (m // lenq), m, dtype)
+        shp = x.re.hi.shape[:-1]
+        x = _dfc_reshape(x, shp + (n // length, 2, lenh))
+        u = _dfc_index(x, (..., 0, slice(None)))
+        v = _dfc_index(x, (..., 1, slice(None)))
+        x = _dfc_stack2(dfl.dfc_add(u, v), dfl.dfc_mul(dfl.dfc_sub(u, v), w), -2)
+        x = _dfc_reshape(x, shp + (n,))
+        length //= 2
+    from repro.core.ntt import bitrev_indices
+    x = _dfc_index(x, (..., bitrev_indices(n)))
+    inv_n = dfl.df_const(1.0 / n, dtype)
+    return dfl.DFComplex(
+        dfl.df_mul(x.re, inv_n), dfl.df_mul(x.im, inv_n)
+    )
+
+
+# ---------------------------------------------------------------------------
+# quantized-mantissa path (paper Fig. 3c sweep)
+# ---------------------------------------------------------------------------
+
+
+def _quantize(x: np.ndarray, mbits: int) -> np.ndarray:
+    """Round-to-nearest to `mbits` mantissa bits (float64 container)."""
+    mant, expo = np.frexp(x)
+    scale = 2.0 ** mbits
+    return np.ldexp(np.round(mant * scale) / scale, expo)
+
+
+def _qc(x: np.ndarray, mbits: int) -> np.ndarray:
+    return _quantize(x.real, mbits) + 1j * _quantize(x.imag, mbits)
+
+
+def _qc_mul(a, b, mbits):
+    # four real multiplies + two adds, each rounded — models the FP datapath
+    re = _quantize(_quantize(a.real * b.real, mbits)
+                   - _quantize(a.imag * b.imag, mbits), mbits)
+    im = _quantize(_quantize(a.real * b.imag, mbits)
+                   + _quantize(a.imag * b.real, mbits), mbits)
+    return re + 1j * im
+
+
+def special_fft_quantized(vals: np.ndarray, m: int, mbits: int,
+                          inverse: bool = False) -> np.ndarray:
+    """Transform with every FP op rounded to `mbits` mantissa bits."""
+    from repro.core.ntt import bitrev_indices
+    n = vals.shape[-1]
+    roots = _qc(unit_roots(m), mbits)
+    x = _qc(np.asarray(vals, np.complex128).copy(), mbits)
+    if not inverse:
+        x = x[..., bitrev_indices(n)]
+        length = 2
+        while length <= n:
+            lenh = length // 2
+            w = roots[_stage_indices(n, m, length)]
+            shp = x.shape[:-1]
+            x = x.reshape(shp + (n // length, 2, lenh))
+            u, v = x[..., 0, :], _qc_mul(x[..., 1, :], w, mbits)
+            x = np.stack([_qc(u + v, mbits), _qc(u - v, mbits)],
+                         axis=-2).reshape(shp + (n,))
+            length *= 2
+        return x
+    length = n
+    while length >= 2:
+        lenh, lenq = length // 2, length * 4
+        rg = rot_group(n, m)[:lenh]
+        w = roots[(lenq - (rg % lenq)) * (m // lenq)]
+        shp = x.shape[:-1]
+        x = x.reshape(shp + (n // length, 2, lenh))
+        u, v = x[..., 0, :], x[..., 1, :]
+        x = np.stack([_qc(u + v, mbits), _qc_mul(_qc(u - v, mbits), w, mbits)],
+                     axis=-2).reshape(shp + (n,))
+        length //= 2
+    x = x[..., bitrev_indices(n)] / n
+    return _qc(x, mbits)

@@ -1,0 +1,248 @@
+"""Modular multiplication engines (ABC-FHE §IV-A, Table I).
+
+Three algorithms, as in the paper:
+
+  * Barrett            — approximates the division; needs two extra products
+                         and two correction subtractions.
+  * vanilla Montgomery — REDC with a general QInv multiply and a general m*q.
+  * NTT-friendly Montgomery — eq. (8) primes turn both the QInv multiply and
+    the m*q multiply into shift-and-add; only the initial a*b product remains
+    a general multiplication (paper eq. 9-11).
+
+Two datapaths are provided:
+
+  * ``u64``  — exact reference on 64-bit words (CPU oracle; q < 2^31).
+  * ``limb`` — pure-uint32 16-bit-limb arithmetic, the TPU-native datapath
+    used inside the Pallas kernels. No value exceeds 32 bits.
+
+On an ASIC the paper's win is multiplier *area*; on TPU the same structure
+removes 16x16 VPU multiplies. ``OP_COSTS`` records static per-modmul op
+counts (the Table-I analogue); asserted in tests, reported in benchmarks.
+
+Exactness of eq. (11) at R = 2^32
+---------------------------------
+Write q = 1 + x with x = 2^p_bw + k*2^(n+1).  Then q^{-1} = 1 - x + x^2 - ...
+(mod R).  val2(x) >= min(p_bw, n+1) >= 17 for the production profile, hence
+val2(x^2) >= 34 > 32 and all terms beyond -x vanish:
+
+    q^{-1} ≡ 1 - x ≡ 1 - 2^p_bw - k*2^(n+1)   (mod 2^32)      == eq. (11)
+
+REDC needs n' = -q^{-1} mod R = x - 1: still pure shift-and-add.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.primes import NTTPrime
+
+U32 = jnp.uint32
+U64 = jnp.uint64
+_MASK16 = np.uint32(0xFFFF)
+_R_BITS = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class MontgomeryConstants:
+    """Per-prime constants for all three modmul engines."""
+
+    q: int
+    qinv_neg: int        # -q^{-1} mod 2^32   (general form)
+    r2: int              # R^2 mod q, to enter the Montgomery domain
+    r1: int              # R mod q (Montgomery form of 1)
+    mu: int              # floor(2^(2*p) / q) for Barrett, p = bitlen(q)
+    p_bw: int
+    n_plus_1: int
+    k_terms: tuple[tuple[int, int], ...]
+
+    @classmethod
+    def make(cls, prime: NTTPrime) -> "MontgomeryConstants":
+        q = prime.q
+        assert q < 1 << 31
+        r = 1 << _R_BITS
+        qinv = pow(q, -1, r)
+        # eq. (11) check: the closed form must equal the true inverse.
+        x = (1 << prime.p_bw) + prime.k * (1 << prime.n_plus_1)
+        assert (1 - x) % r == qinv, "eq.(11) closed form violated"
+        return cls(
+            q=q,
+            qinv_neg=(-qinv) % r,
+            r2=(r * r) % q,
+            r1=r % q,
+            mu=(1 << (2 * q.bit_length())) // q,
+            p_bw=prime.p_bw,
+            n_plus_1=prime.n_plus_1,
+            k_terms=prime.k_terms,
+        )
+
+
+# ---------------------------------------------------------------------------
+# u64 exact reference path (q < 2^31, products < 2^62 fit in uint64)
+# ---------------------------------------------------------------------------
+
+
+def mulmod_naive_u64(a, b, q: int):
+    return (a.astype(U64) * jnp.asarray(b, U64)) % jnp.uint64(q)
+
+
+def mulmod_montgomery_u64(a, b_mont, c: MontgomeryConstants):
+    """REDC(a * b_mont) = a*b mod q, given b in Montgomery form."""
+    t = a.astype(U64) * jnp.asarray(b_mont, U64)
+    m = (t.astype(U32) * np.uint32(c.qinv_neg)).astype(U64)  # mod 2^32
+    u = (t + m * jnp.uint64(c.q)) >> jnp.uint64(_R_BITS)
+    return jnp.where(u >= c.q, u - jnp.uint64(c.q), u).astype(a.dtype)
+
+
+def to_mont_u64(a, c: MontgomeryConstants):
+    return mulmod_montgomery_u64(a, jnp.uint64(c.r2), c)
+
+
+def from_mont_u64(a, c: MontgomeryConstants):
+    return mulmod_montgomery_u64(a, jnp.uint64(1), c)
+
+
+def addmod(a, b, q: int):
+    qq = a.dtype.type(q)
+    s = a + b
+    return jnp.where(s >= qq, s - qq, s)
+
+
+def submod(a, b, q: int):
+    qq = a.dtype.type(q)
+    return jnp.where(a >= b, a - b, a + (qq - b))
+
+
+# ---------------------------------------------------------------------------
+# uint32 16-bit-limb datapath (TPU native; used by the Pallas kernels)
+# ---------------------------------------------------------------------------
+# Counting convention for OP_COSTS: "mul" = one 16x16->32 general multiply,
+# "sa" = shift/add/compare/select VPU ops. Multiplies by per-prime constants
+# still count as general multiplies in the non-NTT-friendly engines (on the
+# ASIC they are real multipliers; on TPU, real VPU multiply ops).
+
+
+def mul32x32(a, b):
+    """Full 32x32 -> (hi, lo) uint32 product; 4 general multiplies."""
+    a0, a1 = a & _MASK16, a >> 16
+    b0, b1 = b & _MASK16, b >> 16
+    ll = a0 * b0
+    lh = a0 * b1
+    hl = a1 * b0
+    hh = a1 * b1
+    mid = (ll >> 16) + (lh & _MASK16) + (hl & _MASK16)          # < 3*2^16
+    lo = ((mid & _MASK16) << 16) | (ll & _MASK16)
+    hi = hh + (lh >> 16) + (hl >> 16) + (mid >> 16)
+    return hi, lo
+
+
+def mul32x32_lo(a, b):
+    """Low 32 bits of a*b; 3 general multiplies."""
+    a0, a1 = a & _MASK16, a >> 16
+    b0 = b & _MASK16
+    b1 = b >> 16
+    return (a0 * b0) + ((a0 * b1 + a1 * b0) << 16)
+
+
+def _add64(hi_a, lo_a, hi_b, lo_b):
+    lo = lo_a + lo_b
+    carry = (lo < lo_a).astype(U32)
+    return hi_a + hi_b + carry, lo
+
+
+def _shift64(v, s: int):
+    """(hi, lo) of a uint32 value shifted left by s in [0, 64)."""
+    if s == 0:
+        return jnp.zeros_like(v), v
+    if s < 32:
+        return v >> (32 - s), v << s
+    return v << (s - 32), jnp.zeros_like(v)
+
+
+def _neg64(hi, lo):
+    lo_n = ~lo + np.uint32(1)
+    hi_n = ~hi + (lo_n == 0).astype(U32)
+    return hi_n, lo_n
+
+
+def _mul_by_k64(v, k_terms):
+    """(hi, lo) of v * k (two's complement mod 2^64) for shift-add k."""
+    hi = jnp.zeros_like(v)
+    lo = jnp.zeros_like(v)
+    for sign, e in k_terms:
+        thi, tlo = _shift64(v, e)
+        if sign < 0:
+            thi, tlo = _neg64(thi, tlo)
+        hi, lo = _add64(hi, lo, thi, tlo)
+    return hi, lo
+
+
+def mulmod_montgomery_limb(a, b_mont, c: MontgomeryConstants):
+    """Vanilla Montgomery on 32-bit limbs: 4 + 3 + 4 = 11 general multiplies.
+
+    Carry trick: T + m*q ≡ 0 (mod 2^32), so the carry out of the low word
+    is exactly (t_lo != 0).
+    """
+    q = np.uint32(c.q)
+    t_hi, t_lo = mul32x32(a, b_mont)                       # 4 mul
+    m = mul32x32_lo(t_lo, np.uint32(c.qinv_neg))          # 3 mul
+    mq_hi, _mq_lo = mul32x32(m, q)                         # 4 mul
+    u = t_hi + mq_hi + (t_lo != 0).astype(U32)
+    return jnp.where(u >= q, u - q, u)
+
+
+def mulmod_montgomery_sa_limb(a, b_mont, c: MontgomeryConstants):
+    """NTT-friendly Montgomery (paper eq. 9-11): only a*b is a general
+    multiply (4 16-bit muls); the QInv product and m*q are shift-and-add."""
+    assert c.p_bw < 32 and 0 < c.n_plus_1 < 32
+    q = np.uint32(c.q)
+    t_hi, t_lo = mul32x32(a, b_mont)                       # 4 mul — the only ones
+    # m = t_lo * (x - 1) mod 2^32,  x = 2^p_bw + k*2^(n+1)
+    tk_lo = _mul_by_k64(t_lo, c.k_terms)[1]
+    m = (t_lo << c.p_bw) + (tk_lo << c.n_plus_1) - t_lo
+    # m*q = (m << p_bw) + ((m*k) << (n+1)) + m   (64-bit shift-add)
+    mq_hi, mq_lo = _shift64(m, c.p_bw)
+    kk_hi, kk_lo = _mul_by_k64(m, c.k_terms)
+    s = c.n_plus_1
+    kk_hi = (kk_hi << s) | (kk_lo >> (32 - s))
+    kk_lo = kk_lo << s
+    mq_hi, mq_lo = _add64(mq_hi, mq_lo, kk_hi, kk_lo)
+    mq_hi, mq_lo = _add64(mq_hi, mq_lo, jnp.zeros_like(m), m)
+    u = t_hi + mq_hi + (t_lo != 0).astype(U32)
+    return jnp.where(u >= q, u - q, u)
+
+
+def mulmod_barrett_limb(a, b, c: MontgomeryConstants):
+    """Barrett on 32-bit limbs: 12 general multiplies + 2 corrections.
+
+    With p = bitlen(q), mu = floor(2^(2p)/q) < 2^(p+1) <= 2^32 and
+    t1 = T >> (p-1) < 2^(p+1) <= 2^32, both fit a word. Operates on plain
+    residues (no Montgomery domain).
+    """
+    q = np.uint32(c.q)
+    p = c.q.bit_length()
+    mu = np.uint32(c.mu)
+    t_hi, t_lo = mul32x32(a, b)                            # 4 mul
+    t1 = (t_hi << (32 - (p - 1))) | (t_lo >> (p - 1))
+    f_hi, f_lo = mul32x32(t1, mu)                          # 4 mul
+    m = (f_hi << (32 - (p + 1))) | (f_lo >> (p + 1))       # (t1*mu) >> (p+1)
+    mq_hi, mq_lo = mul32x32(m, q)                          # 4 mul
+    borrow = (t_lo < mq_lo).astype(U32)
+    r = t_lo - mq_lo
+    extra = t_hi - mq_hi - borrow                          # 0 or 1 (r < 3q)
+    r = jnp.where(extra > 0, r - q, r)
+    r = jnp.where(r >= q, r - q, r)
+    r = jnp.where(r >= q, r - q, r)
+    return r
+
+
+# Static op costs per modmul (the Table-I analogue). "mul" = 16x16 general
+# multiplies, "sa" = shift/add/logic/select ops (counted from the code above;
+# verified by tests/test_modmul.py::test_op_costs_match_trace).
+OP_COSTS = {
+    "barrett": {"mul": 12, "corrections": 2},
+    "montgomery": {"mul": 11, "corrections": 1},
+    "ntt_friendly": {"mul": 4, "corrections": 1},
+}

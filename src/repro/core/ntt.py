@@ -1,0 +1,271 @@
+"""Negacyclic NTT/INTT with merged pre/post-processing twiddles
+(ABC-FHE §IV-A "Twiddle Factor Scheduling").
+
+The nega-cyclic property (eq. 2-3) is absorbed into the twiddles following
+Roy et al. [30] / Poppelmann et al. [27]: the forward transform is the
+Cooley-Tukey DIT recursion over Psi[j] = psi^{bitrev(j)} and the inverse the
+Gentleman-Sande recursion over PsiInv, so no separate pre/post multiplication
+pass (and hence no extra multiplier column) is needed — the paper's
+"consistent pattern of twiddle factor operations across stages".
+
+On-the-fly twiddle generation (unified OTF TF Gen, §IV-B)
+---------------------------------------------------------
+Stage s of the forward transform (m = 2^s butterfly groups) consumes
+Psi[m..2m).  Because bitrev(m + i) = bitrev_m(i)*(N/m) + N/(2m), the stage's
+twiddles factor as
+
+    Psi[m + i] = B_s * W_s^{bitrev_m(i)},   B_s = psi^{N/(2m)}, W_s = psi^{N/m}
+
+i.e. a per-stage *seed* B_s and *step* W_s (2*log2(N) scalars per prime
+instead of N) — exactly the paper's seed+step scheme.  The bit-reversed power
+sequence is generated in log2(m) vector multiplies via
+
+    A_{k+1} = [A_k,  A_k * W^{m / 2^{k+1}}]
+
+so a kernel regenerates a stage's twiddles with O(log) VMEM work and zero
+HBM traffic.  ``TwiddleSeeds`` carries these scalars; ``stage_twiddles``
+implements the doubling generator (shared by reference and Pallas paths).
+
+All reference arithmetic here is the exact u64 path; the Pallas kernels use
+the uint32 limb path from ``modmul`` with identical twiddle scheduling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import modmul
+from repro.core.modmul import MontgomeryConstants
+from repro.core.primes import NTTPrime, primitive_2nth_root
+
+
+def bitrev_indices(n: int) -> np.ndarray:
+    bits = n.bit_length() - 1
+    idx = np.arange(n, dtype=np.int64)
+    rev = np.zeros_like(idx)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+def _pow_table(base: int, n: int, q: int) -> np.ndarray:
+    """[base^0, ..., base^(n-1)] mod q via doubling (log2 n vector passes)."""
+    t = np.array([1], dtype=np.uint64)
+    step = base % q
+    while len(t) < n:
+        t = np.concatenate([t, (t * np.uint64(step)) % np.uint64(q)])
+        step = step * step % q
+    return t[:n]
+
+
+@dataclasses.dataclass(frozen=True)
+class TwiddleSeeds:
+    """Per-stage (seed, step) scalars — the OTF TF Gen state (27 KB-scale)."""
+
+    q: int
+    logn: int
+    fwd_base: tuple[int, ...]   # B_s = psi^{N/(2m)},  s = 0..logn-1 (m = 2^s)
+    fwd_step: tuple[int, ...]   # W_s = psi^{N/m}
+    inv_base: tuple[int, ...]   # GS stage h = N/2..1: base = psi^{-N/(2h)}
+    inv_step: tuple[int, ...]
+    n_inv: int                  # N^{-1} mod q
+
+    def nbytes(self) -> int:
+        return 4 * (len(self.fwd_base) + len(self.fwd_step)
+                    + len(self.inv_base) + len(self.inv_step) + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class NTTPlan:
+    """Everything one prime needs to run negacyclic NTT/INTT of size N."""
+
+    prime: NTTPrime
+    mont: MontgomeryConstants
+    n: int
+    psi: int
+    seeds: TwiddleSeeds
+    # Full tables (Montgomery form), used by the "fetch from memory" baseline
+    # (ABC-FHE_Base in Fig. 6b) and by the reference transforms.
+    psi_brv_mont: np.ndarray       # Psi[j] = psi^{bitrev(j)} * R mod q
+    psi_inv_brv_mont: np.ndarray
+    n_inv_mont: int
+
+    def table_nbytes(self) -> int:
+        return self.psi_brv_mont.nbytes + self.psi_inv_brv_mont.nbytes
+
+
+@functools.lru_cache(maxsize=None)
+def make_plan(prime: NTTPrime, n: int) -> NTTPlan:
+    q = prime.q
+    logn = n.bit_length() - 1
+    psi = primitive_2nth_root(q, 2 * n)
+    psi_inv = pow(psi, -1, q)
+    r = (1 << 32) % q
+
+    brv = bitrev_indices(n)
+    psi_pows = _pow_table(psi, n, q)
+    psi_inv_pows = _pow_table(psi_inv, n, q)
+    psi_brv = psi_pows[brv]
+    psi_inv_brv = psi_inv_pows[brv]
+
+    to_mont = lambda t: (t * np.uint64(r)) % np.uint64(q)
+
+    fwd_base, fwd_step = [], []
+    for s in range(logn):
+        m = 1 << s
+        fwd_base.append(pow(psi, n // (2 * m), q))
+        fwd_step.append(pow(psi, n // m, q))
+    inv_base, inv_step = [], []
+    for s in range(logn):                    # GS stage with h = N / 2^(s+1)
+        h = n >> (s + 1)
+        inv_base.append(pow(psi_inv, n // (2 * h), q))
+        inv_step.append(pow(psi_inv, n // h, q))
+
+    seeds = TwiddleSeeds(
+        q=q, logn=logn,
+        fwd_base=tuple(fwd_base), fwd_step=tuple(fwd_step),
+        inv_base=tuple(inv_base), inv_step=tuple(inv_step),
+        n_inv=pow(n, -1, q),
+    )
+    return NTTPlan(
+        prime=prime,
+        mont=MontgomeryConstants.make(prime),
+        n=n,
+        psi=psi,
+        seeds=seeds,
+        psi_brv_mont=to_mont(psi_brv),
+        psi_inv_brv_mont=to_mont(psi_inv_brv),
+        n_inv_mont=(seeds.n_inv * r) % q,
+    )
+
+
+def stage_twiddles_np(base: int, step: int, m: int, q: int) -> np.ndarray:
+    """OTF generation of [base * step^{bitrev_m(i)}]_{i<m} via doubling."""
+    a = np.array([base % q], dtype=np.uint64)
+    w = step % q
+    # A_{k+1} = [A_k, A_k * W^{m/2^{k+1}}]: precompute W^{m/2}, W^{m/4}, ...
+    exps = []
+    e = m // 2
+    while e >= 1:
+        exps.append(pow(w, e, q))
+        e //= 2
+    for f in exps:
+        a = np.concatenate([a, (a * np.uint64(f)) % np.uint64(q)])
+    return a[:m]
+
+
+# ---------------------------------------------------------------------------
+# Reference transforms (u64 path, Montgomery multiplies, table twiddles)
+# ---------------------------------------------------------------------------
+
+
+def ntt(a, plan: NTTPlan):
+    """Forward negacyclic NTT. a: (..., N) uint64 residues < q. In-order
+    input -> bit-reversed-order output (CT DIT, merged psi)."""
+    n, q, c = plan.n, plan.prime.q, plan.mont
+    psi = jnp.asarray(plan.psi_brv_mont)    # Montgomery form
+    batch = a.shape[:-1]
+    x = a.reshape(batch + (1, n))
+    m, t = 1, n
+    while m < n:
+        t //= 2
+        x = x.reshape(batch + (m, 2, t))
+        s = psi[m:2 * m].reshape((1,) * len(batch) + (m, 1))
+        u, v = x[..., 0, :], modmul.mulmod_montgomery_u64(x[..., 1, :], s, c)
+        x = jnp.stack([modmul.addmod(u, v, q), modmul.submod(u, v, q)], axis=-2)
+        x = x.reshape(batch + (2 * m, t))
+        m *= 2
+    return x.reshape(batch + (n,))
+
+
+def intt(a, plan: NTTPlan):
+    """Inverse negacyclic NTT: bit-reversed input -> in-order output
+    (GS DIF, merged psi^-1, folded N^-1)."""
+    n, q, c = plan.n, plan.prime.q, plan.mont
+    psi_inv = jnp.asarray(plan.psi_inv_brv_mont)
+    batch = a.shape[:-1]
+    x = a.reshape(batch + (n, 1))
+    h, t = n // 2, 1
+    while h >= 1:
+        x = x.reshape(batch + (h, 2, t))
+        s = psi_inv[h:2 * h].reshape((1,) * len(batch) + (h, 1))
+        u, v = x[..., 0, :], x[..., 1, :]
+        even = modmul.addmod(u, v, q)
+        odd = modmul.mulmod_montgomery_u64(modmul.submod(u, v, q), s, c)
+        x = jnp.concatenate([even, odd], axis=-1).reshape(batch + (h, 2 * t))
+        t *= 2
+        h //= 2
+    x = x.reshape(batch + (n,))
+    return modmul.mulmod_montgomery_u64(x, jnp.uint64(plan.n_inv_mont), c)
+
+
+def negacyclic_polymul(a, b, plan: NTTPlan):
+    """(a * b) mod (X^N + 1, q) through the transform domain."""
+    c = plan.mont
+    ah, bh = ntt(a, plan), ntt(b, plan)
+    bh_mont = modmul.mulmod_montgomery_u64(bh, jnp.uint64(c.r2), c)
+    return intt(modmul.mulmod_montgomery_u64(ah, bh_mont, c), plan)
+
+
+def negacyclic_polymul_schoolbook(a: np.ndarray, b: np.ndarray, q: int):
+    """O(N^2) oracle: c_k = sum_{i+j=k} a_i b_j - sum_{i+j=k+N} a_i b_j."""
+    n = a.shape[-1]
+    full = np.zeros(2 * n, dtype=object)
+    ao, bo = a.astype(object), b.astype(object)
+    for i in range(n):
+        full[i:i + n] += ao[i] * bo
+    res = (full[:n] - full[n:]) % q
+    return res.astype(np.uint64)
+
+
+# ---------------------------------------------------------------------------
+# Multiplier-count analysis (paper Fig. 4): design-space model
+# ---------------------------------------------------------------------------
+
+
+def flowgraph_multiply_count(logn: int, merged: bool) -> int:
+    """Total twiddle multiplications in one N-point negacyclic transform.
+
+    Merged (Roy/Poppelmann scheduling): every butterfly carries a non-unity
+    Psi twiddle -> (N/2)*log2(N) exactly (the paper's Fig. 4a '12' for N=8).
+    Unmerged: separate psi^i pre-processing pass (N-1 non-trivial) plus the
+    cyclic NTT whose W^0 positions are free: (N/2)*log2(N) - (N-1) + (N-1).
+    The totals coincide; what differs is the *hardware column* structure
+    (``mdc_multiplier_count``) — merging removes an entire multiplier column.
+    """
+    n = 1 << logn
+    if merged:
+        return (n // 2) * logn
+    return (n // 2) * logn - (n - 1) + (n - 1)
+
+
+def mdc_multiplier_count(logn: int, p_lanes: int, radix_log2: int,
+                         merged: bool = True) -> float:
+    """Modular-multiplier *units* in a P-lane MDC pipelined negacyclic NTT.
+
+    Model (stated assumptions, reported as-is in bench_radix):
+      * each pipeline stage column owns P/2 butterflies; a stage whose
+        twiddles vary per-cycle needs P/2 general modular multipliers;
+      * within a radix-2^r group, only the first stage carries general
+        multipliers; the remaining r-1 stages carry *resident-constant*
+        multipliers (twiddle fixed over long bursts — the paper's consistent
+        radix-2^n pattern), which the shift-add Montgomery datapath realises
+        at ~half a general multiplier;
+      * an unmerged design spends one extra full column (P units) on the
+        nega-cyclic psi pre-processing.
+
+    The paper reports 29.7% / 22.3% reductions for its radix-2^n vs radix-2 /
+    radix-2^2; this transparent model lands in the same regime (documented in
+    EXPERIMENTS.md; exact figures depend on proprietary design details).
+    """
+    half = p_lanes / 2
+    full_stages = -(-logn // radix_log2)          # first stage of each group
+    const_stages = logn - full_stages
+    units = half * full_stages + 0.5 * half * const_stages
+    if not merged:
+        units += p_lanes
+    return units

@@ -1,0 +1,154 @@
+"""Counter-based PRNG + FHE samplers (ABC-FHE on-chip PRNG, §IV-B).
+
+The ASIC keeps a 128-bit seed in registers and generates masks, errors and
+keys on demand, never touching external memory. The TPU-native equivalent is
+a *counter-based* generator: Philox-4x32-10 here, implemented in pure uint32
+jnp ops so the identical code runs (a) on the host reference path and (b)
+inside Pallas kernel bodies (VPU int32 lanes, zero HBM traffic).
+
+Samplers (CKKS client-side needs exactly these):
+  * ``uniform_mod_q``  — uniform residues (public polynomial `a`, masks);
+  * ``ternary``        — uniform {-1,0,1} secret key;
+  * ``zo``             — {-1,0,1} with P(+-1)=1/4 (encryption randomness v);
+  * ``cbd``            — centered binomial eta=21, sigma=sqrt(21/2)≈3.24,
+    the constant-time stand-in for the discrete Gaussian sigma=3.2.
+
+Everything is a pure function of (seed, counter) — reproducible, streamable,
+and trivially shardable across devices (split the counter space).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+_PHILOX_M0 = np.uint32(0xD2511F53)
+_PHILOX_M1 = np.uint32(0xCD9E8D57)
+_W0 = np.uint32(0x9E3779B9)
+_W1 = np.uint32(0xBB67AE85)
+
+
+def _mulhilo(a, b):
+    from repro.core.modmul import mul32x32
+    return mul32x32(a, b)
+
+
+def _key_bump(k, w):
+    """k + w mod 2^32; silent wraparound for numpy-scalar keys (kernel path)."""
+    if isinstance(k, (int, np.integer)):
+        return np.uint32((int(k) + int(w)) & 0xFFFFFFFF)
+    return k + w
+
+
+def philox_4x32(counter, key, rounds: int = 10):
+    """counter: 4 x (...,) uint32, key: 2 x uint32 scalars -> 4 outputs."""
+    c0, c1, c2, c3 = counter
+    k0, k1 = key
+    for _ in range(rounds):
+        hi0, lo0 = _mulhilo(_PHILOX_M0, c0)
+        hi1, lo1 = _mulhilo(_PHILOX_M1, c2)
+        c0, c1, c2, c3 = hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0
+        k0, k1 = _key_bump(k0, _W0), _key_bump(k1, _W1)
+    return c0, c1, c2, c3
+
+
+def _keys_from_seed(seed128: int):
+    """128-bit seed -> (philox key pair, counter-prefix pair)."""
+    parts = [(seed128 >> (32 * i)) & 0xFFFFFFFF for i in range(4)]
+    return (
+        (jnp.uint32(parts[0]), jnp.uint32(parts[1])),
+        (jnp.uint32(parts[2]), jnp.uint32(parts[3])),
+    )
+
+
+def random_u32(seed128: int, stream: int, n: int, words: int = 1):
+    """`words` independent uint32 arrays of length n for a given stream id."""
+    key, prefix = _keys_from_seed(seed128)
+    idx = jnp.arange(n, dtype=U32)
+    outs = []
+    for w in range(words):
+        ctr = (
+            idx,
+            jnp.full((n,), jnp.uint32(stream), U32),
+            jnp.full((n,), jnp.uint32(w) ^ prefix[0], U32),
+            jnp.full((n,), prefix[1], U32),
+        )
+        outs.append(philox_4x32(ctr, key)[0])
+    return outs if words > 1 else outs[0]
+
+
+def uniform_mod_q(seed128: int, stream: int, n: int, q: int):
+    """~64 random bits reduced mod q (bias < 2^-33; standard RNS practice)."""
+    hi, lo = random_u32(seed128, stream, n, words=2)
+    # (hi * 2^32 + lo) mod q  using 16-bit-limb arithmetic (kernel-safe)
+    from repro.core import modmul
+    c = _barrett_c(q)
+    r_mod_q = jnp.uint32((1 << 32) % q)
+    hi_red = _mod_u32(hi, q, c)                          # bring hi below q first
+    t = modmul.mulmod_barrett_limb(hi_red, r_mod_q, c)   # hi * (2^32 mod q) mod q
+    lo_red = _mod_u32(lo, q, c)
+    return modmul.addmod(t, lo_red, q)
+
+
+def _barrett_c(q: int):
+    from repro.core.modmul import MontgomeryConstants
+    from repro.core.primes import find_ntt_friendly_primes
+    # Barrett needs only (q, mu); build a lightweight constants object.
+    import dataclasses
+    mu = (1 << (2 * q.bit_length())) // q
+    dummy = MontgomeryConstants(
+        q=q, qinv_neg=0, r2=0, r1=0, mu=mu, p_bw=0, n_plus_1=1, k_terms=()
+    )
+    return dummy
+
+
+def _mod_u32(x, q: int, c) -> jnp.ndarray:
+    """x mod q for full-range uint32 x (one conditional subtraction pass
+    after Barrett with b=1 would be wrong; use shift-free reduction)."""
+    from repro.core import modmul
+    # x < 2^32 < 4q for q >= 2^30: at most 3 subtractions... but q may be
+    # as small as 2^29.5; use Barrett against constant 1 in Montgomery-free
+    # form: x mod q = x - floor(x/q)*q with floor via mulhi(x, mu')>>s.
+    one = jnp.ones_like(x)
+    return modmul.mulmod_barrett_limb(x, one, c)
+
+
+def ternary(seed128: int, stream: int, n: int):
+    """Uniform {-1, 0, +1} secret (density 2/3), as int32."""
+    u = random_u32(seed128, stream, n)
+    third = jnp.uint32(0x55555555)  # floor(2^32/3)
+    return jnp.where(u < third, 1, jnp.where(u < third * jnp.uint32(2), -1, 0)).astype(jnp.int32)
+
+
+def zo(seed128: int, stream: int, n: int):
+    """{-1,0,1} with P(+-1) = 1/4, P(0) = 1/2 (ZO(0.5) randomness)."""
+    u = random_u32(seed128, stream, n)
+    return jnp.where(
+        u < jnp.uint32(1 << 30), 1,
+        jnp.where(u < jnp.uint32(1 << 31), -1, 0),
+    ).astype(jnp.int32)
+
+
+def _popcount21(x):
+    """Popcount of the low 21 bits, pure uint32 ops."""
+    x = x & jnp.uint32((1 << 21) - 1)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> 24
+
+
+def cbd(seed128: int, stream: int, n: int, eta: int = 21):
+    """Centered binomial error: popcount(eta bits) - popcount(eta bits)."""
+    assert eta <= 21
+    a, b = random_u32(seed128, stream, n, words=2)
+    return (_popcount21(a).astype(jnp.int32)
+            - _popcount21(b).astype(jnp.int32))
+
+
+def signed_to_residue(x, q: int):
+    """int32 in (-q, q) -> uint32 residue in [0, q)."""
+    qq = jnp.int64(q)
+    return ((x.astype(jnp.int64) % qq + qq) % qq).astype(U32)

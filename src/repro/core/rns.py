@@ -1,0 +1,97 @@
+"""RNS decomposition / CRT recombination for the CKKS client.
+
+Client-side needs only two directions (paper Fig. 2a):
+  * encode:  integer-valued df64 coefficients  -> residues mod each q_i
+  * decode:  residues of the 2 decrypt limbs   -> centered value / Delta
+
+Both use exact float tricks (fmod on integer-valued doubles is error-free;
+products < 2^53 per word are kept exact via error-free transforms), so no
+big-integer arithmetic appears on the hot path. An exact Python-int oracle
+is provided for property tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import dfloat as dfl
+
+
+def to_rns_df(x: dfl.DF, q_list: tuple[int, ...]) -> jnp.ndarray:
+    """Integer-valued df64 (hi, lo) -> (L, ...) uint32 residues.
+
+    hi and lo are integer-valued float64 with |lo| <= ulp(hi)/2; fmod of an
+    integer-valued double by q < 2^31 is exact, so each limb residue is an
+    exact function of the true integer hi + lo.
+    """
+    outs = []
+    for q in q_list:
+        qf = jnp.float64(q)
+        r = jnp.fmod(x.hi, qf) + jnp.fmod(x.lo, qf)   # in (-2q, 2q)
+        r = jnp.fmod(r, qf)
+        r = jnp.where(r < 0, r + qf, r)
+        outs.append(r.astype(jnp.uint32))
+    return jnp.stack(outs)
+
+
+def crt2_to_df(c0, c1, q0: int, q1: int) -> dfl.DF:
+    """Two-limb CRT -> centered integer value as an exact df64 pair.
+
+    x = [c0 * g0]_{q0} * q1 + [c1 * g1]_{q1} * q0  (mod Q),  Q = q0*q1,
+    with g_i = (Q/q_i)^{-1} mod q_i. Each product t_i * q_j < 2^62 is made
+    exact with two_prod; the sum and the conditional Q-subtractions stay in
+    df64 (106-bit) arithmetic. Returns centered representative in (-Q/2, Q/2).
+    """
+    g0 = pow(q1 % q0, -1, q0)
+    g1 = pow(q0 % q1, -1, q1)
+    t0 = (c0.astype(jnp.uint64) * jnp.uint64(g0)) % jnp.uint64(q0)
+    t1 = (c1.astype(jnp.uint64) * jnp.uint64(g1)) % jnp.uint64(q1)
+    a = _prod_df(t0.astype(jnp.float64), float(q1))
+    b = _prod_df(t1.astype(jnp.float64), float(q0))
+    v = dfl.df_add(a, b)                      # < 2Q
+    qq = q0 * q1
+    v = _cond_sub(v, float(qq))               # mod Q
+    # center
+    half = float(qq) / 2.0
+    over = v.hi > half
+    vq = dfl.df_sub(v, dfl.df_const(float(qq), jnp.float64))
+    return dfl.DF(jnp.where(over, vq.hi, v.hi), jnp.where(over, vq.lo, v.lo))
+
+
+def _prod_df(a, b: float):
+    hi, lo = dfl.two_prod(a, jnp.asarray(b, jnp.float64))
+    return dfl.DF(hi, lo)
+
+
+def _cond_sub(v: dfl.DF, q: float) -> dfl.DF:
+    over = v.hi >= q
+    vq = dfl.df_sub(v, dfl.df_const(q, jnp.float64))
+    return dfl.DF(jnp.where(over, vq.hi, v.hi), jnp.where(over, vq.lo, v.lo))
+
+
+# --- exact oracles (tests only) --------------------------------------------
+
+
+def to_rns_exact(values: list[int], q_list: tuple[int, ...]) -> np.ndarray:
+    return np.array(
+        [[v % q for v in values] for q in q_list], dtype=np.uint32
+    )
+
+
+def crt_exact(residues: np.ndarray, q_list: tuple[int, ...]) -> list[int]:
+    """Full CRT to centered Python ints; residues: (L, N)."""
+    import math
+    qq = math.prod(q_list)
+    n = residues.shape[1]
+    out = []
+    basis = []
+    for i, q in enumerate(q_list):
+        m = qq // q
+        basis.append(m * pow(m % q, -1, q))
+    for j in range(n):
+        v = sum(int(residues[i, j]) * basis[i] for i in range(len(q_list))) % qq
+        if v > qq // 2:
+            v -= qq
+        out.append(v)
+    return out

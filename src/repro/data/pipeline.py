@@ -1,0 +1,84 @@
+"""Synthetic data pipeline: deterministic, host-shardable, prefetched.
+
+Real deployments stream tokenised shards; here the source is a seeded
+counter-based generator (same philosophy as the paper's PRNG: state is a
+seed + step counter, so any host can regenerate any batch — which is also
+what makes checkpoint-resume and elastic re-sharding exact: the pipeline
+state IS the step number).
+
+``Prefetcher`` overlaps host batch synthesis with device compute via a
+background thread + bounded queue (the host-side half of compute/comm
+overlap).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+from repro.models.config import ArchConfig
+
+
+def synth_batch(cfg: ArchConfig, step: int, batch: int, seq: int,
+                seed: int = 0):
+    """Deterministic batch for (step, shape). tokens/labels int32;
+    audio/vlm get synthetic frontend embeddings instead of tokens."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    out = {}
+    labels = rng.integers(0, cfg.vocab, size=(batch, seq), dtype=np.int32)
+    out["labels"] = labels
+    if cfg.frontend:
+        out["embeds"] = rng.standard_normal(
+            (batch, seq, cfg.d_model)).astype(np.float32) * 0.02
+    else:
+        # next-token structure: tokens are labels shifted right
+        tokens = np.roll(labels, 1, axis=1)
+        tokens[:, 0] = 0
+        out["tokens"] = tokens
+    if cfg.mrope:
+        pos = np.broadcast_to(np.arange(seq)[None, :, None],
+                              (batch, seq, 3)).astype(np.int32)
+        out["mrope_pos"] = np.ascontiguousarray(pos)
+    return out
+
+
+def host_slice(global_batch: int, host_id: int, n_hosts: int):
+    """[start, stop) rows of the global batch owned by this host."""
+    per = global_batch // n_hosts
+    return host_id * per, (host_id + 1) * per
+
+
+class Prefetcher:
+    """Background-thread batch prefetch with a bounded queue."""
+
+    def __init__(self, cfg: ArchConfig, batch: int, seq: int,
+                 start_step: int = 0, seed: int = 0, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+
+        def work():
+            step = start_step
+            while not self._stop.is_set():
+                b = synth_batch(cfg, step, batch, seq, seed)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((step, b), timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                step += 1
+
+        self._t = threading.Thread(target=work, daemon=True)
+        self._t.start()
+
+    def next(self):
+        step, b = self._q.get()
+        self._step = step
+        return b
+
+    def close(self):
+        self._stop.set()
+        self._t.join(timeout=2.0)

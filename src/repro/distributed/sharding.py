@@ -1,0 +1,168 @@
+"""Logical-axis sharding rules for all parameter trees, activations,
+optimizer state and decode caches.
+
+Mesh: (data=16, model=16) single-pod; (pod=2, data=16, model=16) multi-pod.
+
+Policy (MaxText/Megatron-style hybrid):
+  * TP over 'model': attention head / d_ff / vocab / expert-ff dims.
+  * FSDP (ZeRO-3) over 'data': the d_model ("other") dim of every matrix —
+    weights are gathered per layer on use; optimizer state stays sharded.
+  * EP over 'data': MoE expert dim (deepseek: 256 experts / 16 = 16 per row).
+  * DP over 'pod' (+'data' for activations): batch dim.
+  * decode KV caches: batch->data, sequence->model (sequence sharding keeps
+    the 32k x 128-batch caches under 1 GB/device); long_500k (batch=1)
+    shards sequence over BOTH axes.
+  * rolling SWA caches: small (window-sized); batch->data only.
+
+Head/vocab padding to TP width happens in the model (config.padded_heads);
+everything here therefore divides evenly on the assigned meshes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+def batch_axes(mesh: Mesh):
+    return (("pod", "data") if "pod" in mesh.axis_names else "data")
+
+
+def _dim_ok(size: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    names = (axis,) if isinstance(axis, str) else axis
+    n = int(np.prod([mesh.shape[a] for a in names]))
+    return size % n == 0
+
+
+def _spec_for_matrix(key: str, shape, mesh: Mesh, stacked: bool):
+    """(in_dim, out_dim) matrices -> (data, model) / (model, data)."""
+    lead = (None,) if stacked else ()
+    d_in, d_out = shape[-2], shape[-1]
+
+    def pick(row_axis, col_axis):
+        row = row_axis if _dim_ok(d_in, mesh, row_axis) else None
+        col = col_axis if _dim_ok(d_out, mesh, col_axis) else None
+        return P(*lead, row, col)
+
+    # output-dim TP (column parallel): wq/wk/wv, mlp wi/wg, low-rank a/b...
+    col_parallel = ("wq", "wk", "wv", "wi", "wg", "wq_a", "wq_b",
+                    "wkv_a", "wk_b", "wv_b", "w_in")
+    # input-dim TP (row parallel): wo, w_out
+    row_parallel = ("wo", "w_out")
+    if key in col_parallel:
+        return pick("data", "model")
+    if key in row_parallel:
+        return pick("model", "data")
+    if key == "router":
+        return pick("data", None)
+    return P(*lead, *([None] * 2))
+
+
+def param_spec(path_keys: list[str], leaf, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter, by path pattern."""
+    key = path_keys[-1]
+    stacked = path_keys[0] == "layers"
+    shape = leaf.shape
+
+    # embeddings
+    if key == "tok":
+        v_ax = "model" if _dim_ok(shape[0], mesh, "model") else None
+        d_ax = "data" if _dim_ok(shape[1], mesh, "data") else None
+        return P(v_ax, d_ax)
+    if key == "unembed":
+        d_ax = "data" if _dim_ok(shape[0], mesh, "data") else None
+        v_ax = "model" if _dim_ok(shape[1], mesh, "model") else None
+        return P(d_ax, v_ax)
+
+    # MoE experts: (L, E, d, f) / (L, E, f, d) -> EP over data, TP over f
+    if "moe" in path_keys and key in ("wi", "wg", "wo") and leaf.ndim >= 3 \
+            and "shared" not in path_keys:
+        lead = (None,) if stacked else ()
+        e, a, b = shape[-3], shape[-2], shape[-1]
+        e_ax = "data" if _dim_ok(e, mesh, "data") else None
+        if key in ("wi", "wg"):      # (E, d, f): f -> model
+            f_ax = "model" if _dim_ok(b, mesh, "model") else None
+            return P(*lead, e_ax, None, f_ax)
+        f_ax = "model" if _dim_ok(a, mesh, "model") else None
+        return P(*lead, e_ax, f_ax, None)
+
+    if leaf.ndim >= 2 and key in ("wq", "wk", "wv", "wo", "wi", "wg",
+                                  "w_in", "w_out", "router", "wq_a", "wq_b",
+                                  "wkv_a", "wk_b", "wv_b"):
+        return _spec_for_matrix(key, shape, mesh, stacked)
+
+    # vectors / conv / scalars: replicate
+    return P(*([None] * leaf.ndim))
+
+
+def param_shardings(params, mesh: Mesh):
+    def one(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        return NamedSharding(mesh, param_spec(keys, leaf, mesh))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_shardings(opt_state, mesh: Mesh):
+    """8-bit moment blocks: shard block dim over (data, model) when it
+    divides; scales follow; replicate otherwise."""
+    nd = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+
+    def one(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % nd == 0:
+            return NamedSharding(mesh, P(tuple(mesh.axis_names),
+                                         *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+    return jax.tree.map(one, opt_state)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    ba = batch_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if not _dim_ok(leaf.shape[0], mesh, ba):
+            return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+        return NamedSharding(mesh, P(ba, *([None] * (leaf.ndim - 1))))
+    return jax.tree.map(one, batch)
+
+
+def cache_shardings(cache_tree, mesh: Mesh, cfg: ArchConfig,
+                    long_context: bool = False):
+    """Decode-cache shardings. Leaves are (L, B, S, ...) or SSM states."""
+    ba = batch_axes(mesh)
+
+    def one(leaf):
+        if leaf is None:
+            return None
+        shape = leaf.shape
+        if leaf.ndim >= 4 and shape[2] > 1024:          # (L, B, S, ...)
+            if long_context and shape[1] == 1:
+                s_ax = tuple(mesh.axis_names)            # S over everything
+                spec = [None, None,
+                        s_ax if _dim_ok(shape[2], mesh, s_ax) else None]
+            else:
+                spec = [None,
+                        ba if _dim_ok(shape[1], mesh, ba) else None,
+                        "model" if _dim_ok(shape[2], mesh, "model")
+                        else None]
+            spec += [None] * (leaf.ndim - 3)
+            return NamedSharding(mesh, P(*spec))
+        # SSM state (L,B,H,hd,ds) / conv (L,B,W-1,C) / rolling KV
+        spec = [None,
+                ba if _dim_ok(shape[1], mesh, ba) else None]
+        spec += [None] * (leaf.ndim - 2)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_tree,
+                        is_leaf=lambda x: x is None or hasattr(x, "shape"))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

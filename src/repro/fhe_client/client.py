@@ -1,0 +1,150 @@
+"""FHE client pipeline: private-inference I/O for the model substrate.
+
+The paper's deployment (Fig. 1): the *client* encodes+encrypts inputs and
+decodes+decrypts outputs; the *server* computes on ciphertexts (server-side
+acceleration is other papers' territory — Trinity/SHARP et al.; out of scope
+here, so examples simulate the server boundary).
+
+This module glues the CKKS core to the LM substrate:
+
+  * messages are model activations (e.g. prompt embeddings of width d_model)
+    packed into CKKS slot vectors (n_slots = N/2 complex = N real values);
+  * a batch of messages is encrypted with the FUSED streaming kernels
+    (PRNG + NTT + pointwise in one pass per limb — the RSC datapath);
+  * on a mesh, ciphertext batches shard over the flattened device axis
+    (each device runs its own RSC-equivalent stream; the dual-RSC scheduler
+    generalises to device groups).
+
+Seeded (compressed) symmetric ciphertexts halve upload traffic, matching
+the paper's on-chip `a`-regeneration trick.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoder, encryptor, fft as fftmod, rns
+from repro.core.context import CKKSContext, get_context
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class ClientKeys:
+    sk: encryptor.SecretKey
+    pk: encryptor.PublicKey
+
+
+class FHEClient:
+    """Client-side encode/encrypt + decode/decrypt over model activations."""
+
+    def __init__(self, profile: str = "test", seed: int | None = None):
+        self.ctx: CKKSContext = get_context(profile)
+        sk, pk = encryptor.keygen(self.ctx, seed=seed)
+        self.keys = ClientKeys(sk, pk)
+        self._nonce = 0
+
+    # --- message packing ----------------------------------------------------
+
+    def slot_capacity(self) -> int:
+        """Real values per ciphertext (real/imag interleaving)."""
+        return 2 * self.ctx.params.n_slots
+
+    def pack(self, x: np.ndarray) -> np.ndarray:
+        """Activation rows (B, F) -> complex slot rows (B*k, n_slots).
+        Rows wider than one ciphertext split across k = ceil(F/capacity)
+        ciphertexts (standard multi-ct packing)."""
+        b, f = x.shape
+        cap = self.slot_capacity()
+        k = -(-f // cap)
+        buf = np.zeros((b, k * cap), np.float64)
+        buf[:, :f] = x
+        buf = buf.reshape(b * k, cap)
+        n_slots = self.ctx.params.n_slots
+        return buf[:, :n_slots] + 1j * buf[:, n_slots:]
+
+    def unpack(self, z: np.ndarray, f: int) -> np.ndarray:
+        cap = self.slot_capacity()
+        k = -(-f // cap)
+        b = z.shape[0] // k
+        buf = np.concatenate([z.real, z.imag], axis=-1)  # (B*k, cap)
+        return buf.reshape(b, k * cap)[:, :f]
+
+    # --- encrypt / decrypt (fused streaming kernels) -------------------------
+
+    def encrypt_batch(self, messages: np.ndarray):
+        """(B, n_slots) complex -> list of ciphertexts (fused kernel path)."""
+        b = messages.shape[0]
+        pts = [encoder.encode(messages[i], self.ctx) for i in range(b)]
+        pt_stack = jnp.stack([p.data for p in pts])
+        nonce0 = self._nonce
+        self._nonce += b
+        c0, c1 = kops.encrypt_fused(
+            pt_stack, self.keys.pk.b_mont, self.keys.pk.a_mont, self.ctx,
+            nonce0=nonce0)
+        return [encryptor.Ciphertext(c0=c0[i], c1=c1[i],
+                                     n_limbs=self.ctx.params.n_limbs,
+                                     scale=pts[i].scale)
+                for i in range(b)]
+
+    def decrypt_batch(self, cts) -> np.ndarray:
+        """Server-returned (2-limb) ciphertexts -> (B, n_slots) complex."""
+        c0 = jnp.stack([ct.c0[:2] for ct in cts])
+        c1 = jnp.stack([ct.c1[:2] for ct in cts])
+        m_coeff = kops.decrypt_fused(c0, c1, self.keys.sk.s_mont, self.ctx)
+        out = []
+        p = self.ctx.params
+        for i in range(len(cts)):
+            v = rns.crt2_to_df(m_coeff[i, 0].astype(jnp.uint64),
+                               m_coeff[i, 1].astype(jnp.uint64),
+                               self.ctx.q_list[0], self.ctx.q_list[1])
+            coeffs = (np.asarray(v.hi) + np.asarray(v.lo)) / cts[i].scale
+            zc = coeffs[: p.n // 2] + 1j * coeffs[p.n // 2:]
+            out.append(fftmod.special_fft(zc, p.m))
+        return np.stack(out)
+
+    # --- traffic accounting (paper Table/figs analogues) ---------------------
+
+    def ciphertext_bytes(self, seeded: bool = False) -> int:
+        p = self.ctx.params
+        polys = 1 if seeded else 2
+        return polys * p.n_limbs * p.n * 4 + (16 if seeded else 0)
+
+    def upload_report(self, batch: int) -> dict:
+        return {
+            "batch": batch,
+            "ct_bytes": self.ciphertext_bytes(),
+            "ct_bytes_seeded": self.ciphertext_bytes(seeded=True),
+            "compression": self.ciphertext_bytes()
+            / self.ciphertext_bytes(seeded=True),
+        }
+
+
+def simulate_private_inference(client: FHEClient, serve_fn, x: np.ndarray,
+                               out_features: int):
+    """End-to-end loop: encrypt -> (trust boundary) -> serve -> encrypt
+    result -> decrypt. `serve_fn`: (B, F) -> (B, out_features) plaintext
+    model function standing in for the FHE server."""
+    msgs = client.pack(x)
+    cts = client.encrypt_batch(msgs)
+
+    # --- server boundary (simulated; see module docstring) -----------------
+    served_inputs = client.decrypt_batch(
+        [encryptor.Ciphertext(c0=ct.c0[:2], c1=ct.c1[:2], n_limbs=2,
+                              scale=ct.scale) for ct in cts])
+    x_rec = client.unpack(served_inputs, x.shape[1])
+    y = serve_fn(x_rec.astype(np.float32))
+    y_msgs = client.pack(y.astype(np.float64))
+    y_cts = client.encrypt_batch(y_msgs)
+    # ------------------------------------------------------------------------
+
+    y_dec = client.decrypt_batch(
+        [encryptor.Ciphertext(c0=ct.c0[:2], c1=ct.c1[:2], n_limbs=2,
+                              scale=ct.scale) for ct in y_cts])
+    return client.unpack(y_dec, out_features), {
+        "roundtrip_err": float(np.max(np.abs(x_rec - x))),
+    }

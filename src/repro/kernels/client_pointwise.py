@@ -1,0 +1,157 @@
+"""Fused streaming encrypt/decrypt Pallas kernels — the RSC datapath.
+
+This is the paper's streaming architecture end-to-end in ONE kernel per limb:
+
+  encrypt:  Philox PRNG (v, e0, e1)  ->  negacyclic NTT (OTF twiddles)
+            ->  c0 = v*b + e0 + pt,  c1 = v*a + e1          (one VMEM pass)
+  decrypt:  m_ntt = c0 + c1*s  ->  INTT  ->  coefficient residues
+
+HBM traffic per ciphertext limb is exactly: read pt (+ pk limbs), write
+c0/c1 — masks, errors and twiddles are generated on-chip (in VMEM) from the
+128-bit seed and the twiddle seed scalars, reproducing the paper's
+ABC-FHE_All configuration (Fig. 6b). The Philox streams match the host-side
+``repro.core.prng`` bit-for-bit, so fused ciphertexts decrypt with the
+reference path and vice versa.
+
+Grid = (batch,); one grid step processes one ciphertext row for one limb.
+Per-limb constants (q, k-terms, twiddle seeds, PRNG stream ids) are static,
+so ``ops.py`` emits one pallas_call per limb — the limb loop is also where
+multi-device sharding splits (limbs are independent until CRT).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import modmul, prng
+from repro.core.context import CKKSContext
+from repro.core.encryptor import (
+    STREAM_ENC_E0, STREAM_ENC_E1, STREAM_ENC_V,
+)
+from repro.kernels import common
+
+
+# ---------------------------------------------------------------------------
+# Kernel-safe Philox samplers (2D iota, traced stream scalar)
+# ---------------------------------------------------------------------------
+
+
+def _random_u32_k(seed128: int, stream, n: int, word: int):
+    """One (1, n) uint32 Philox draw; `stream` may be a traced scalar.
+
+    Bit-identical to ``prng.random_u32`` (same counter layout), but built
+    from numpy-literal key material and a 2D iota so Pallas captures nothing.
+    """
+    parts = [np.uint32((seed128 >> (32 * i)) & 0xFFFFFFFF) for i in range(4)]
+    key = (parts[0], parts[1])
+    idx = jax.lax.broadcasted_iota(jnp.uint32, (1, n), 1)
+    z = jnp.zeros_like(idx)
+    ctr = (
+        idx,
+        z + jnp.asarray(stream, jnp.uint32),
+        z + (np.uint32(word) ^ parts[2]),
+        z + parts[3],
+    )
+    return prng.philox_4x32(ctr, key)[0]
+
+
+def _zo_k(seed128: int, stream, n: int):
+    u = _random_u32_k(seed128, stream, n, 0)
+    return jnp.where(
+        u < np.uint32(1 << 30), jnp.int32(1),
+        jnp.where(u < np.uint32(1 << 31), jnp.int32(-1), jnp.int32(0)))
+
+
+def _cbd_k(seed128: int, stream, n: int):
+    a = _random_u32_k(seed128, stream, n, 0)
+    b = _random_u32_k(seed128, stream, n, 1)
+    return (prng._popcount21(a).astype(jnp.int32)
+            - prng._popcount21(b).astype(jnp.int32))
+
+
+def _to_residue_k(x, q: int):
+    """Signed int32 in (-q, q) -> uint32 residue, no 64-bit ops."""
+    return jnp.where(x < 0, x + np.int32(q), x).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Encrypt kernel (per limb): PRNG -> NTT -> pointwise
+# ---------------------------------------------------------------------------
+
+
+def _encrypt_kernel(pt_ref, b_ref, a_ref, c0_ref, c1_ref, *,
+                    pc: common.PlanConsts, seed: int, nonce0: int):
+    n, q, c = pc.n, pc.q, pc.mont
+    nonce = pl.program_id(0).astype(jnp.uint32) + np.uint32(nonce0)
+    sv = np.uint32(STREAM_ENC_V) + np.uint32(16) * nonce
+    s0 = np.uint32(STREAM_ENC_E0) + np.uint32(16) * nonce
+    s1 = np.uint32(STREAM_ENC_E1) + np.uint32(16) * nonce
+
+    v = _to_residue_k(_zo_k(seed, sv, n), q)
+    e0 = _to_residue_k(_cbd_k(seed, s0, n), q)
+    e1 = _to_residue_k(_cbd_k(seed, s1, n), q)
+
+    v_h = common.ntt_stages(v, pc)
+    e0_h = common.ntt_stages(e0, pc)
+    e1_h = common.ntt_stages(e1, pc)
+
+    vb = modmul.mulmod_montgomery_sa_limb(v_h, b_ref[...], c)
+    va = modmul.mulmod_montgomery_sa_limb(v_h, a_ref[...], c)
+    c0_ref[...] = modmul.addmod(
+        modmul.addmod(vb, e0_h, q), pt_ref[...], q)
+    c1_ref[...] = modmul.addmod(va, e1_h, q)
+
+
+def encrypt_limb(pt_l, b_mont_l, a_mont_l, ctx: CKKSContext, limb: int,
+                 seed: int, nonce0: int = 0, interpret: bool = True):
+    """Fused encrypt of one limb. pt_l: (batch, N) uint32; pk rows (N,)."""
+    pc = common.plan_consts(ctx.plans[limb])
+    batch, n = pt_l.shape
+    dspec = pl.BlockSpec((1, n), lambda i: (i, 0), memory_space=pltpu.VMEM)
+    kspec = pl.BlockSpec((1, n), lambda i: (0, 0), memory_space=pltpu.VMEM)
+    shape = jax.ShapeDtypeStruct((batch, n), jnp.uint32)
+    call = pl.pallas_call(
+        functools.partial(_encrypt_kernel, pc=pc, seed=seed, nonce0=nonce0),
+        grid=(batch,),
+        in_specs=[dspec, kspec, kspec],
+        out_specs=(dspec, dspec),
+        out_shape=(shape, shape),
+        interpret=interpret,
+    )
+    return call(pt_l, b_mont_l.reshape(1, n), a_mont_l.reshape(1, n))
+
+
+# ---------------------------------------------------------------------------
+# Decrypt kernel (per limb): pointwise -> INTT
+# ---------------------------------------------------------------------------
+
+
+def _decrypt_kernel(c0_ref, c1_ref, s_ref, m_ref, *, pc: common.PlanConsts):
+    q, c = pc.q, pc.mont
+    c1s = modmul.mulmod_montgomery_sa_limb(c1_ref[...], s_ref[...], c)
+    m_ntt = modmul.addmod(c0_ref[...], c1s, q)
+    m_ref[...] = common.intt_stages(m_ntt, pc)
+
+
+def decrypt_limb(c0_l, c1_l, s_mont_l, ctx: CKKSContext, limb: int,
+                 interpret: bool = True):
+    """Fused decrypt of one limb -> coefficient-domain residues (batch, N)."""
+    pc = common.plan_consts(ctx.plans[limb])
+    batch, n = c0_l.shape
+    dspec = pl.BlockSpec((1, n), lambda i: (i, 0), memory_space=pltpu.VMEM)
+    kspec = pl.BlockSpec((1, n), lambda i: (0, 0), memory_space=pltpu.VMEM)
+    call = pl.pallas_call(
+        functools.partial(_decrypt_kernel, pc=pc),
+        grid=(batch,),
+        in_specs=[dspec, dspec, kspec],
+        out_specs=dspec,
+        out_shape=jax.ShapeDtypeStruct((batch, n), jnp.uint32),
+        interpret=interpret,
+    )
+    return call(c0_l, c1_l, s_mont_l.reshape(1, n))

@@ -1,0 +1,244 @@
+"""Shared in-kernel building blocks for the Pallas TPU kernels.
+
+Everything per-prime is *static* (baked into the kernel closure): modulus,
+shift-add k-terms, Montgomery constants, and the OTF twiddle-generator seeds.
+This mirrors the ASIC, where these live in registers / a 27 KB seed SRAM —
+the TPU analogue is compile-time constants + VMEM-regenerated vectors, never
+HBM traffic.
+
+The helpers here are pure uint32 jnp code, so the *same functions* run
+
+  * inside Pallas kernel bodies (VPU lanes on TPU, Python in interpret mode),
+  * in the jnp reference path (tests oracle the kernels against them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import modmul
+from repro.core.modmul import MontgomeryConstants
+from repro.core.ntt import NTTPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanConsts:
+    """Static per-(prime, N) constants for in-kernel NTT/INTT.
+
+    ``fwd_factors[s]`` are the doubling factors (Montgomery form) that expand
+    stage s's twiddles from its seed: A_{k+1} = [A_k, A_k * f_k]. Exactly the
+    paper's unified OTF TF Gen seed+step state, ~log^2(N) scalars per prime.
+    """
+
+    q: int
+    n: int
+    logn: int
+    mont: MontgomeryConstants
+    fwd_base_mont: tuple[int, ...]          # per-stage seed, Montgomery form
+    fwd_factors: tuple[tuple[int, ...], ...]  # per-stage doubling factors
+    inv_base_mont: tuple[int, ...]
+    inv_factors: tuple[tuple[int, ...], ...]
+    n_inv_mont: int
+    psi: int
+    psi_inv: int
+    r_mod_q: int                            # R mod q = Montgomery form of 1
+
+    def seed_scalar_count(self) -> int:
+        return (len(self.fwd_base_mont) + len(self.inv_base_mont)
+                + sum(len(f) for f in self.fwd_factors)
+                + sum(len(f) for f in self.inv_factors) + 2)
+
+
+_PLAN_CONSTS_MEMO: dict[int, PlanConsts] = {}
+
+
+def plan_consts(plan: NTTPlan) -> PlanConsts:
+    """Memoised by plan identity (NTTPlan holds ndarrays, so no lru_cache)."""
+    cached = _PLAN_CONSTS_MEMO.get(id(plan))
+    if cached is not None:
+        return cached
+    q = plan.prime.q
+    n = plan.n
+    logn = n.bit_length() - 1
+    r = (1 << 32) % q
+    s = plan.seeds
+
+    def factors(step: int, m: int) -> tuple[int, ...]:
+        # step^(m/2), step^(m/4), ..., step^1  (Montgomery form)
+        out = []
+        e = m // 2
+        while e >= 1:
+            out.append((pow(step, e, q) * r) % q)
+            e //= 2
+        return tuple(out)
+
+    fwd_base, fwd_f, inv_base, inv_f = [], [], [], []
+    for st in range(logn):
+        m = 1 << st                       # forward CT stage: m twiddles
+        fwd_base.append((s.fwd_base[st] * r) % q)
+        fwd_f.append(factors(s.fwd_step[st], m))
+    for st in range(logn):                # inverse GS stage: h = n >> (st+1)
+        h = n >> (st + 1)
+        inv_base.append((s.inv_base[st] * r) % q)
+        inv_f.append(factors(s.inv_step[st], h))
+
+    psi_inv = pow(plan.psi, -1, q)
+    pc = PlanConsts(
+        q=q, n=n, logn=logn, mont=plan.mont,
+        fwd_base_mont=tuple(fwd_base), fwd_factors=tuple(fwd_f),
+        inv_base_mont=tuple(inv_base), inv_factors=tuple(inv_f),
+        n_inv_mont=plan.n_inv_mont, psi=plan.psi, psi_inv=psi_inv,
+        r_mod_q=r,
+    )
+    _PLAN_CONSTS_MEMO[id(plan)] = pc
+    return pc
+
+
+# ---------------------------------------------------------------------------
+# In-kernel OTF twiddle generation (the unified OTF TF Gen)
+# ---------------------------------------------------------------------------
+
+
+def gen_twiddles(base_mont: int, factor_list: tuple[int, ...],
+                 pc: PlanConsts) -> jnp.ndarray:
+    """[base * step^bitrev_m(i)]_{i<m}, Montgomery form, by log2(m) doublings.
+
+    Runs entirely in VMEM: each doubling is one vector shift-add Montgomery
+    multiply by a scalar constant. Zero HBM reads.
+    """
+    # broadcasted_iota keeps `a` a traced value inside Pallas kernels
+    # (a jnp.full here would be a captured constant, which Pallas rejects).
+    zero = jax.lax.broadcasted_iota(jnp.uint32, (1,), 0)
+    a = zero + np.uint32(base_mont)
+    for f in factor_list:
+        prod = modmul.mulmod_montgomery_sa_limb(a, np.uint32(f), pc.mont)
+        a = jnp.concatenate([a, prod])
+    return a
+
+
+def gen_geometric(base_mont: int, ratio: int, length: int,
+                  pc: PlanConsts) -> jnp.ndarray:
+    """[base * ratio^i]_{i<length} (Montgomery form), by doubling.
+    Used for psi^n pre/post-twist vectors in the four-step path."""
+    q = pc.q
+    r = pc.r_mod_q
+    zero = jax.lax.broadcasted_iota(jnp.uint32, (1,), 0)
+    a = zero + np.uint32(base_mont)
+    while a.shape[0] < length:
+        f = (pow(ratio % q, a.shape[0], q) * r) % q
+        prod = modmul.mulmod_montgomery_sa_limb(a, np.uint32(f), pc.mont)
+        a = jnp.concatenate([a, prod])
+    return a[:length]
+
+
+# ---------------------------------------------------------------------------
+# In-kernel NTT/INTT stage loops (shared by butterfly + fused client kernels)
+# ---------------------------------------------------------------------------
+
+
+def ntt_stages(x: jnp.ndarray, pc: PlanConsts) -> jnp.ndarray:
+    """Forward negacyclic NTT on (rows, N) uint32, merged-psi CT DIT.
+    In-order input -> bit-reversed output. Twiddles OTF-generated per stage."""
+    q, c, n = pc.q, pc.mont, pc.n
+    rows = x.shape[0]
+    m, t = 1, n
+    while m < n:
+        t //= 2
+        tw = gen_twiddles(pc.fwd_base_mont[_s(m)], pc.fwd_factors[_s(m)], pc)
+        x = x.reshape(rows, m, 2, t)
+        u = x[:, :, 0, :]
+        v = modmul.mulmod_montgomery_sa_limb(x[:, :, 1, :], tw[None, :, None], c)
+        x = jnp.stack(
+            [modmul.addmod(u, v, q), modmul.submod(u, v, q)], axis=2
+        ).reshape(rows, n)
+        m *= 2
+    return x
+
+
+def intt_stages(x: jnp.ndarray, pc: PlanConsts) -> jnp.ndarray:
+    """Inverse negacyclic NTT on (rows, N): bit-reversed input -> in-order
+    output, N^-1 folded in at the end."""
+    q, c, n = pc.q, pc.mont, pc.n
+    rows = x.shape[0]
+    h, t = n // 2, 1
+    s = 0
+    while h >= 1:
+        tw = gen_twiddles(pc.inv_base_mont[s], pc.inv_factors[s], pc)
+        x = x.reshape(rows, h, 2, t)
+        u, v = x[:, :, 0, :], x[:, :, 1, :]
+        even = modmul.addmod(u, v, q)
+        odd = modmul.mulmod_montgomery_sa_limb(
+            modmul.submod(u, v, q), tw[None, :, None], c)
+        x = jnp.concatenate([even, odd], axis=-1).reshape(rows, h * 2 * t)
+        t *= 2
+        h //= 2
+        s += 1
+    x = x.reshape(rows, n)
+    return modmul.mulmod_montgomery_sa_limb(x, np.uint32(pc.n_inv_mont), c)
+
+
+def _s(m: int) -> int:
+    return m.bit_length() - 1
+
+
+# ---------------------------------------------------------------------------
+# Balanced base-256 digit decomposition (int8 MXU feeding, four-step path)
+# ---------------------------------------------------------------------------
+
+N_DIGITS = 4
+
+
+def balanced_digits_jnp(v: jnp.ndarray) -> list[jnp.ndarray]:
+    """uint32 (< 2^31, residues of ~30-bit q) -> 4 int8 balanced digits with
+    v == sum d_i * 256^i. Digit products then fit the int8 MXU exactly."""
+    digs = []
+    x = v
+    for _ in range(N_DIGITS):
+        d = x & np.uint32(255)
+        over = d >= np.uint32(128)
+        d_signed = jnp.where(over, d.astype(jnp.int32) - 256,
+                             d.astype(jnp.int32))
+        x = (x >> 8) + over.astype(jnp.uint32)
+        digs.append(d_signed.astype(jnp.int8))
+    return digs
+
+
+def balanced_digits_np(v: np.ndarray) -> np.ndarray:
+    """Host-side digit decomposition for the precomputed F matrices.
+    Returns (4, *v.shape) int8."""
+    out = np.zeros((N_DIGITS,) + v.shape, dtype=np.int8)
+    x = v.astype(np.int64)
+    for i in range(N_DIGITS):
+        d = x & 255
+        over = d >= 128
+        out[i] = np.where(over, d - 256, d).astype(np.int8)
+        x = (x >> 8) + over.astype(np.int64)
+    assert np.all(x == 0), "value exceeded 4 balanced digits"
+    return out
+
+
+def recombine_digit_matmuls(partials, pc: PlanConsts) -> jnp.ndarray:
+    """Combine int32 digit-product matmul results into residues mod q.
+
+    partials: dict {(i, j): S_ij} with S_ij = A_i @ B_j (int32, |S| < 2^22).
+    Result = sum_ij S_ij * 2^(8(i+j)) mod q. Grouped by g = i+j (7 groups,
+    |group sum| < 2^24), then one Barrett multiply by 2^(8g) mod q per group.
+    """
+    q = pc.q
+    qc = pc.mont
+    groups: dict[int, jnp.ndarray] = {}
+    for (i, j), s in partials.items():
+        g = i + j
+        groups[g] = s if g not in groups else groups[g] + s
+    acc = None
+    for g, sg in groups.items():
+        # shift into [0, q + 2^24): sg in (-2^24, 2^24), q ~ 2^30
+        u = (sg + np.int32(q)).astype(jnp.uint32)
+        cg = np.uint32(pow(2, 8 * g, q))
+        r = modmul.mulmod_barrett_limb(u, cg, qc)
+        acc = r if acc is None else modmul.addmod(acc, r, q)
+    return acc

@@ -1,0 +1,213 @@
+"""Double-float32 SpecialFFT/SpecialIFFT Pallas kernel (paper Fig. 3c).
+
+The ASIC's reconfigurable Fourier engine runs the canonical-embedding FFT in
+a custom FP55 (43 mantissa bits). The TPU datapath is double-float32 — an
+unevaluated (hi, lo) fp32 pair with ~49 effective mantissa bits, built from
+native VPU f32 ops only (Dekker TwoProd, no FMA assumed). 49 >= 43 keeps the
+bootstrapping precision above the paper's 19.29-bit requirement.
+
+Layout: a complex df32 array is four f32 planes (re_hi, re_lo, im_hi, im_lo),
+each (rows, N). Stage twiddles are *tables* packed per stage into a (4, N)
+plane set: the 5^j rot-group orbit makes the FFT twiddle sequence
+non-geometric, so unlike the NTT the doubling OTF generator does not apply
+(recorded in DESIGN.md); instead the whole packed table (16 bytes/entry,
+1 MB at N=2^16) stays VMEM-resident — the TPU analogue of on-chip twiddles.
+
+Bit-reversal is applied OUTSIDE the kernel (an XLA relayout/copy), so the
+kernel runs the pure stage pipeline, as the hardware commutators do.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import dfloat as dfl
+from repro.core import fft as fftmod
+from repro.core.ntt import bitrev_indices
+
+
+# ---------------------------------------------------------------------------
+# Host-side packed twiddle tables
+# ---------------------------------------------------------------------------
+
+_TW_MEMO: dict[tuple[int, int, bool], tuple[np.ndarray, tuple[int, ...]]] = {}
+
+
+def packed_twiddles(n: int, m: int, inverse: bool):
+    """(4, n) f32 planes (re_hi, re_lo, im_hi, im_lo) + per-stage offsets."""
+    key = (n, m, inverse)
+    if key in _TW_MEMO:
+        return _TW_MEMO[key]
+    roots = fftmod.unit_roots(m)
+    chunks, offsets, off = [], [], 0
+    if not inverse:
+        length = 2
+        while length <= n:
+            idx = fftmod._stage_indices(n, m, length)
+            chunks.append(roots[idx])
+            offsets.append(off)
+            off += length // 2
+            length *= 2
+    else:
+        length = n
+        while length >= 2:
+            lenh, lenq = length // 2, length * 4
+            rg = fftmod.rot_group(n, m)[:lenh]
+            chunks.append(roots[(lenq - (rg % lenq)) * (m // lenq)])
+            offsets.append(off)
+            off += lenh
+            length //= 2
+    w = np.concatenate(chunks)
+    pad = n - w.shape[0]
+    w = np.concatenate([w, np.zeros(pad, np.complex128)])
+    re_hi = w.real.astype(np.float32)
+    re_lo = (w.real - re_hi).astype(np.float32)
+    im_hi = w.imag.astype(np.float32)
+    im_lo = (w.imag - im_hi).astype(np.float32)
+    out = (np.stack([re_hi, re_lo, im_hi, im_lo]), tuple(offsets))
+    _TW_MEMO[key] = out
+    return out
+
+
+def _df(hi, lo):
+    return dfl.DF(hi, lo)
+
+
+def _dfc(planes):
+    rh, rl, ih, il = planes
+    return dfl.DFComplex(_df(rh, rl), _df(ih, il))
+
+
+def _planes(z: dfl.DFComplex):
+    return z.re.hi, z.re.lo, z.im.hi, z.im.lo
+
+
+def _reshape(z, shape):
+    return _dfc(tuple(p.reshape(shape) for p in _planes(z)))
+
+
+def _index(z, idx):
+    return _dfc(tuple(p[idx] for p in _planes(z)))
+
+
+def _stack2(a, b, axis):
+    return _dfc(tuple(jnp.stack([x, y], axis=axis)
+                      for x, y in zip(_planes(a), _planes(b))))
+
+
+# ---------------------------------------------------------------------------
+# Kernels
+# ---------------------------------------------------------------------------
+
+
+def _kernel(rh_ref, rl_ref, ih_ref, il_ref, tw_ref,
+            orh, orl, oih, oil, *, n, offsets, inverse):
+    x = _dfc((rh_ref[...], rl_ref[...], ih_ref[...], il_ref[...]))
+    rows = x.re.hi.shape[0]
+    tw = tw_ref[...]                                    # (4, n)
+
+    def stage_tw(off, lenh):
+        return _dfc((tw[0, off:off + lenh], tw[1, off:off + lenh],
+                     tw[2, off:off + lenh], tw[3, off:off + lenh]))
+
+    if not inverse:
+        length, s = 2, 0
+        while length <= n:
+            lenh = length // 2
+            w = stage_tw(offsets[s], lenh)
+            x = _reshape(x, (rows, n // length, 2, lenh))
+            u = _index(x, (slice(None), slice(None), 0, slice(None)))
+            v = dfl.dfc_mul(
+                _index(x, (slice(None), slice(None), 1, slice(None))), w)
+            x = _stack2(dfl.dfc_add(u, v), dfl.dfc_sub(u, v), 2)
+            x = _reshape(x, (rows, n))
+            length *= 2
+            s += 1
+    else:
+        length, s = n, 0
+        while length >= 2:
+            lenh = length // 2
+            w = stage_tw(offsets[s], lenh)
+            x = _reshape(x, (rows, n // length, 2, lenh))
+            u = _index(x, (slice(None), slice(None), 0, slice(None)))
+            v = _index(x, (slice(None), slice(None), 1, slice(None)))
+            x = _stack2(dfl.dfc_add(u, v),
+                        dfl.dfc_mul(dfl.dfc_sub(u, v), w), 2)
+            x = _reshape(x, (rows, n))
+            length //= 2
+            s += 1
+        inv_n = 1.0 / n
+        hi = np.float32(inv_n)
+        lo = np.float32(inv_n - float(hi))
+        scale = _df(hi, lo)
+        x = dfl.DFComplex(dfl.df_mul(x.re, scale), dfl.df_mul(x.im, scale))
+    orh[...], orl[...], oih[...], oil[...] = _planes(x)
+
+
+def _build(n: int, rows: int, block_rows: int, offsets, inverse: bool,
+           interpret: bool):
+    body = functools.partial(_kernel, n=n, offsets=offsets, inverse=inverse)
+    grid = (rows // block_rows,)
+    dspec = pl.BlockSpec((block_rows, n), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM)
+    tspec = pl.BlockSpec((4, n), lambda i: (0, 0), memory_space=pltpu.VMEM)
+    shape = jax.ShapeDtypeStruct((rows, n), jnp.float32)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[dspec] * 4 + [tspec],
+        out_specs=(dspec,) * 4,
+        out_shape=(shape,) * 4,
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Wrappers (complex <-> df32 planes, bit-reversal outside the kernel)
+# ---------------------------------------------------------------------------
+
+
+def _to_planes(z: np.ndarray):
+    re = np.asarray(z.real, np.float64)
+    im = np.asarray(z.imag, np.float64)
+    rh = re.astype(np.float32)
+    ih = im.astype(np.float32)
+    return (jnp.asarray(rh), jnp.asarray((re - rh).astype(np.float32)),
+            jnp.asarray(ih), jnp.asarray((im - ih).astype(np.float32)))
+
+
+def _from_planes(planes):
+    rh, rl, ih, il = (np.asarray(p, np.float64) for p in planes)
+    return (rh + rl) + 1j * (ih + il)
+
+
+def special_fft_rows(z: np.ndarray, m: int, block_rows: int = 1,
+                     interpret: bool = True) -> np.ndarray:
+    """Decode-direction transform of (rows, n) complex, df32 kernel."""
+    n = z.shape[-1]
+    z = np.asarray(z, np.complex128)[..., bitrev_indices(n)]
+    tw, offsets = packed_twiddles(n, m, inverse=False)
+    rows = z.shape[0]
+    br = block_rows if rows % block_rows == 0 else 1
+    call = _build(n, rows, min(br, rows), offsets, False, interpret)
+    out = call(*_to_planes(z), jnp.asarray(tw))
+    return _from_planes(out)
+
+
+def special_ifft_rows(z: np.ndarray, m: int, block_rows: int = 1,
+                      interpret: bool = True) -> np.ndarray:
+    """Encode-direction transform (includes 1/n), df32 kernel."""
+    n = z.shape[-1]
+    tw, offsets = packed_twiddles(n, m, inverse=True)
+    rows = z.shape[0]
+    br = block_rows if rows % block_rows == 0 else 1
+    call = _build(n, rows, min(br, rows), offsets, True, interpret)
+    out = call(*_to_planes(np.asarray(z, np.complex128)), jnp.asarray(tw))
+    res = _from_planes(out)
+    return res[..., bitrev_indices(n)]

@@ -1,0 +1,74 @@
+"""Streaming butterfly NTT/INTT Pallas kernel (paper §IV-A, RFE / PNL).
+
+TPU adaptation of the MDC pipelined NTT lane: one grid step streams a block
+of polynomial rows HBM -> VMEM, runs all log2(N) butterfly stages in VMEM
+(the pipelined-stage analogue), and writes back — one HBM read + one write
+per element, like the ASIC's streaming datapath.
+
+Twiddles are never fetched: ``common.gen_twiddles`` regenerates each stage's
+vector from the per-stage (seed, step) scalars baked into the kernel — the
+unified OTF TF Gen. The modular multiply is the NTT-friendly shift-add
+Montgomery datapath (modmul.mulmod_montgomery_sa_limb), so the only general
+multiplies per butterfly are the four 16x16 partial products of a*b.
+
+Grid/BlockSpec: grid = (rows / block_rows,); block = (block_rows, N) uint32
+in VMEM. For N = 2^16 a row is 256 KB; block_rows = 4 keeps in+out+twiddle
+working set ~2.5 MB, well inside a v5e core's 16 MB VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.ntt import NTTPlan
+from repro.kernels import common
+
+
+def _kernel_fwd(x_ref, o_ref, *, pc: common.PlanConsts):
+    o_ref[...] = common.ntt_stages(x_ref[...], pc)
+
+
+def _kernel_inv(x_ref, o_ref, *, pc: common.PlanConsts):
+    o_ref[...] = common.intt_stages(x_ref[...], pc)
+
+
+def _build(pc: common.PlanConsts, rows: int, block_rows: int,
+           forward: bool, interpret: bool):
+    n = pc.n
+    body = functools.partial(_kernel_fwd if forward else _kernel_inv, pc=pc)
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, n), lambda i: (i, 0),
+                        memory_space=pltpu.VMEM)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.uint32),
+        interpret=interpret,
+    )
+
+
+def ntt_rows(x, plan: NTTPlan, block_rows: int = 1, interpret: bool = True):
+    """Forward negacyclic NTT of (rows, N) uint32 residues (one prime)."""
+    pc = common.plan_consts(plan)
+    rows = x.shape[0]
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        block_rows = 1
+    return _build(pc, rows, block_rows, True, interpret)(x)
+
+
+def intt_rows(x, plan: NTTPlan, block_rows: int = 1, interpret: bool = True):
+    """Inverse negacyclic NTT of (rows, N) uint32 (bit-reversed input)."""
+    pc = common.plan_consts(plan)
+    rows = x.shape[0]
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        block_rows = 1
+    return _build(pc, rows, block_rows, False, interpret)(x)

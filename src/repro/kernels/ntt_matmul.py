@@ -1,0 +1,227 @@
+"""Four-step NTT as modular matmul on the MXU (beyond-paper TPU path).
+
+The ASIC streams butterflies through an MDC pipeline; the TPU's throughput
+unit is a 128x128 systolic matmul. The TPU-native realisation of the same
+transform is Bailey's four-step algorithm with N = N1 x N2 (256 x 256 for
+N = 2^16), whose steps 1/3 are modular matrix multiplications fed to the MXU
+through an exact int8 balanced-digit decomposition:
+
+    a_negacyclic NTT:  p[n] = a[n] * psi^n              (OTF geometric twist)
+                       P[n1, n2] = p[n2*N1 + n1]
+                       B = P @ F2          F2[n2,k2] = W2^(n2*k2), W2 = W^N1
+                       C = B * T           T[n1,k2] = W^(n1*k2)   (OTF 2D gen)
+                       D = F1 @ C          F1[k1,n1] = W1^(k1*n1), W1 = W^N2
+                       out[k1*N2 + k2] = D[k1,k2]   (NATURAL evaluation order)
+
+with W = psi^2. Each modular matmul: operands split into 4 balanced base-256
+digits (int8), 16 int8xint8->int32 MXU matmuls (|sum| < 2^22 exact), digits
+recombined mod q with one Barrett multiply per digit-weight group.
+
+Forward output is in natural order — out[k] = a(psi^(2k+1)) — versus the
+butterfly kernel's bit-reversed order; `ops.py` tracks the domain tag.
+
+F1/F2 are true twiddle *tables* (256 KB int8 digits per prime) passed as
+kernel inputs: on the MXU path the tables ARE the matmul operands, so OTF
+generation cannot remove them; the psi-twist and T matrix are still
+OTF-generated in VMEM. This trade is recorded in DESIGN.md §Hardware
+adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import modmul
+from repro.core.ntt import NTTPlan
+from repro.kernels import common
+
+
+def split_n(n: int) -> tuple[int, int]:
+    logn = n.bit_length() - 1
+    n1 = 1 << ((logn + 1) // 2)
+    return n1, n // n1
+
+
+# ---------------------------------------------------------------------------
+# Host-side table construction (per prime; cached)
+# ---------------------------------------------------------------------------
+
+_TABLE_MEMO: dict[tuple[int, int], dict] = {}
+
+
+def _pow_matrix(base: int, rows: int, cols: int, q: int,
+                scale: int = 1) -> np.ndarray:
+    """M[i, j] = scale * base^(i*j) mod q, as uint32."""
+    i = np.arange(rows, dtype=object)[:, None]
+    j = np.arange(cols, dtype=object)[None, :]
+    row_base = np.array([pow(base, int(ii), q) for ii in range(rows)],
+                        dtype=object)
+    out = np.empty((rows, cols), dtype=np.uint32)
+    for r in range(rows):
+        b = int(row_base[r])
+        v = scale % q
+        for c in range(cols):
+            out[r, c] = v
+            v = (v * b) % q
+    return out
+
+
+def tables(plan: NTTPlan) -> dict:
+    """F1/F2 (and inverses) as balanced int8 digits, plus static scalars."""
+    key = (plan.prime.q, plan.n)
+    if key in _TABLE_MEMO:
+        return _TABLE_MEMO[key]
+    q, n = plan.prime.q, plan.n
+    n1, n2 = split_n(n)
+    w = pow(plan.psi, 2, q)
+    w1, w2 = pow(w, n2, q), pow(w, n1, q)
+    w1i, w2i = pow(w1, -1, q), pow(w2, -1, q)
+    t = {
+        "f2d": common.balanced_digits_np(_pow_matrix(w2, n2, n2, q)),
+        "f1d": common.balanced_digits_np(_pow_matrix(w1, n1, n1, q)),
+        "f2id": common.balanced_digits_np(
+            _pow_matrix(w2i, n2, n2, q, scale=pow(n2, -1, q))),
+        "f1id": common.balanced_digits_np(
+            _pow_matrix(w1i, n1, n1, q, scale=pow(n1, -1, q))),
+        "w": w, "w_inv": pow(w, -1, q), "n1": n1, "n2": n2,
+    }
+    _TABLE_MEMO[key] = t
+    return t
+
+
+# ---------------------------------------------------------------------------
+# In-kernel helpers
+# ---------------------------------------------------------------------------
+
+
+def _mont_one(shape, r_mod_q: int):
+    z = jax.lax.broadcasted_iota(jnp.uint32, shape, 0) * np.uint32(0)
+    return z + np.uint32(r_mod_q)
+
+
+def gen_t_matrix(pc: common.PlanConsts, ratio: int, n1: int, n2: int):
+    """T[n1, k2] = ratio^(n1*k2) (Montgomery form), generated in VMEM by
+    column doubling — the 2D OTF twiddle generator."""
+    wcol = common.gen_geometric(pc.r_mod_q, ratio, n1, pc)[:, None]  # (n1,1)
+    t = _mont_one((n1, 1), pc.r_mod_q)
+    wpow = wcol
+    c = 1
+    while c < n2:
+        t = jnp.concatenate(
+            [t, modmul.mulmod_montgomery_sa_limb(t, wpow, pc.mont)], axis=1)
+        wpow = modmul.mulmod_montgomery_sa_limb(wpow, wpow, pc.mont)
+        c *= 2
+    return t[:, :n2]
+
+
+def _mod_matmul(x: jnp.ndarray, fd: jnp.ndarray, pc: common.PlanConsts):
+    """Exact modular matmul (rows, K) @ table (K, K) via int8 digit MXU dots.
+
+    x: uint32 residues < q. fd: (4, K, K) int8 digit planes of the table.
+    """
+    xd = common.balanced_digits_jnp(x)            # 4 x (rows, K) int8
+    partials = {}
+    for i in range(common.N_DIGITS):
+        for j in range(common.N_DIGITS):
+            partials[(i, j)] = jnp.dot(
+                xd[i], fd[j], preferred_element_type=jnp.int32)
+    return common.recombine_digit_matmuls(partials, pc)
+
+
+# ---------------------------------------------------------------------------
+# Kernels
+# ---------------------------------------------------------------------------
+
+
+def _kernel_fwd(x_ref, f2d_ref, f1d_ref, o_ref, *, pc, n1, n2, w):
+    n = pc.n
+    rb = x_ref.shape[0]
+    x = x_ref[...]                                           # (rb, N)
+    # step 0: negacyclic twist p = a * psi^n (OTF geometric, Montgomery)
+    psin = common.gen_geometric(pc.r_mod_q, pc.psi, n, pc)
+    p = modmul.mulmod_montgomery_sa_limb(x, psin[None, :], pc.mont)
+    # step 1: P[n1, n2] = p[n2*N1 + n1]
+    pm = p.reshape(rb, n2, n1).transpose(0, 2, 1)            # (rb, n1, n2)
+    # step 2: B = P @ F2 (contraction over n2)
+    b = _mod_matmul(pm.reshape(rb * n1, n2), f2d_ref[...], pc)
+    b = b.reshape(rb, n1, n2)
+    # step 3: C = B * T (OTF 2D twiddles)
+    t = gen_t_matrix(pc, w, n1, n2)
+    c = modmul.mulmod_montgomery_sa_limb(b, t[None], pc.mont)
+    # step 4: D = F1 @ C, via D^T = C^T @ F1 (F1 symmetric)
+    ct = c.transpose(0, 2, 1).reshape(rb * n2, n1)
+    dt = _mod_matmul(ct, f1d_ref[...], pc).reshape(rb, n2, n1)
+    o_ref[...] = dt.transpose(0, 2, 1).reshape(rb, n)
+
+
+def _kernel_inv(x_ref, f2id_ref, f1id_ref, o_ref, *, pc, n1, n2, w_inv):
+    n = pc.n
+    rb = x_ref.shape[0]
+    d = x_ref[...].reshape(rb, n1, n2)
+    # C = F1^-1 @ D, via C^T = D^T @ F1i (F1i symmetric, carries N1^-1)
+    dt = d.transpose(0, 2, 1).reshape(rb * n2, n1)
+    ct = _mod_matmul(dt, f1id_ref[...], pc).reshape(rb, n2, n1)
+    c = ct.transpose(0, 2, 1)                                 # (rb, n1, n2)
+    # B = C * T^-1
+    ti = gen_t_matrix(pc, w_inv, n1, n2)
+    b = modmul.mulmod_montgomery_sa_limb(c, ti[None], pc.mont)
+    # P = B @ F2^-1 (carries N2^-1)
+    p = _mod_matmul(b.reshape(rb * n1, n2), f2id_ref[...], pc)
+    p = p.reshape(rb, n1, n2).transpose(0, 2, 1).reshape(rb, n)
+    # un-twist a = p * psi^-n
+    psin_inv = common.gen_geometric(pc.r_mod_q, pc.psi_inv, n, pc)
+    o_ref[...] = modmul.mulmod_montgomery_sa_limb(p, psin_inv[None, :],
+                                                  pc.mont)
+
+
+def _build(plan: NTTPlan, rows: int, block_rows: int, forward: bool,
+           interpret: bool):
+    pc = common.plan_consts(plan)
+    t = tables(plan)
+    n, n1, n2 = pc.n, t["n1"], t["n2"]
+    if forward:
+        body = functools.partial(_kernel_fwd, pc=pc, n1=n1, n2=n2, w=t["w"])
+        fa, fb = t["f2d"], t["f1d"]
+    else:
+        body = functools.partial(_kernel_inv, pc=pc, n1=n1, n2=n2,
+                                 w_inv=t["w_inv"])
+        fa, fb = t["f2id"], t["f1id"]
+    grid = (rows // block_rows,)
+    row_spec = pl.BlockSpec((block_rows, n), lambda i: (i, 0),
+                            memory_space=pltpu.VMEM)
+    tab_a = pl.BlockSpec(fa.shape, lambda i: (0, 0, 0),
+                         memory_space=pltpu.VMEM)
+    tab_b = pl.BlockSpec(fb.shape, lambda i: (0, 0, 0),
+                         memory_space=pltpu.VMEM)
+    call = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[row_spec, tab_a, tab_b],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.uint32),
+        interpret=interpret,
+    )
+    return call, jnp.asarray(fa), jnp.asarray(fb)
+
+
+def ntt_rows_mm(x, plan: NTTPlan, block_rows: int = 1, interpret: bool = True):
+    """Forward negacyclic NTT, NATURAL evaluation order: out[k]=a(psi^(2k+1))."""
+    rows = x.shape[0]
+    block_rows = block_rows if rows % block_rows == 0 else 1
+    call, fa, fb = _build(plan, rows, min(block_rows, rows), True, interpret)
+    return call(x, fa, fb)
+
+
+def intt_rows_mm(x, plan: NTTPlan, block_rows: int = 1,
+                 interpret: bool = True):
+    """Inverse of ntt_rows_mm (natural-order input)."""
+    rows = x.shape[0]
+    block_rows = block_rows if rows % block_rows == 0 else 1
+    call, fa, fb = _build(plan, rows, min(block_rows, rows), False, interpret)
+    return call(x, fa, fb)

@@ -1,0 +1,143 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+All wrappers auto-select interpret mode on CPU (the kernels are written for
+TPU; interpret=True executes the same kernel body in Python for validation,
+per the repo's CPU-container / TPU-target split).
+
+Domains: the butterfly path produces bit-reversed evaluation order (matching
+``repro.core.ntt``); the four-step MXU path produces natural order. Pointwise
+ciphertext algebra is order-agnostic as long as both operands share a domain;
+the client pipeline uses the butterfly domain as canonical.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.context import CKKSContext
+from repro.kernels import client_pointwise, fft_df, ntt_butterfly, ntt_matmul
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+# ---------------------------------------------------------------------------
+# NTT / INTT over RNS limb stacks
+# ---------------------------------------------------------------------------
+
+
+def ntt_limbs(x, ctx: CKKSContext, n_limbs: int | None = None,
+              path: str = "butterfly", block_rows: int = 1,
+              interpret: bool | None = None):
+    """x: (L, ..., N) uint32 residues -> forward negacyclic NTT per limb.
+
+    path: 'butterfly' (VPU streaming kernel, bit-reversed out) or
+          'matmul' (four-step MXU kernel, natural out).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    n_limbs = x.shape[0] if n_limbs is None else n_limbs
+    fn = (ntt_butterfly.ntt_rows if path == "butterfly"
+          else ntt_matmul.ntt_rows_mm)
+    rows = []
+    for i in range(n_limbs):
+        xi = x[i].reshape(-1, x.shape[-1])
+        out = fn(xi, ctx.plans[i], block_rows=block_rows,
+                 interpret=interpret)
+        rows.append(out.reshape(x.shape[1:]))
+    return jnp.stack(rows)
+
+
+def intt_limbs(x, ctx: CKKSContext, n_limbs: int | None = None,
+               path: str = "butterfly", block_rows: int = 1,
+               interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    n_limbs = x.shape[0] if n_limbs is None else n_limbs
+    fn = (ntt_butterfly.intt_rows if path == "butterfly"
+          else ntt_matmul.intt_rows_mm)
+    rows = []
+    for i in range(n_limbs):
+        xi = x[i].reshape(-1, x.shape[-1])
+        out = fn(xi, ctx.plans[i], block_rows=block_rows,
+                 interpret=interpret)
+        rows.append(out.reshape(x.shape[1:]))
+    return jnp.stack(rows)
+
+
+# ---------------------------------------------------------------------------
+# Fused streaming client ops
+# ---------------------------------------------------------------------------
+
+
+def encrypt_fused(pt_data, pk_b_mont, pk_a_mont, ctx: CKKSContext,
+                  seed: int | None = None, nonce0: int = 0,
+                  interpret: bool | None = None):
+    """Streaming encrypt. pt_data: (L, N) or (batch, L, N) uint32 NTT-domain
+    plaintext; returns (c0, c1) of the same shape. PRNG + NTT run in-kernel.
+
+    Matches ``repro.core.encrypt`` bit-for-bit for nonce = nonce0 + batch_idx.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    seed = ctx.params.seed if seed is None else seed
+    squeeze = pt_data.ndim == 2
+    pt = pt_data[None] if squeeze else pt_data           # (B, L, N)
+    b, L, n = pt.shape
+    c0s, c1s = [], []
+    for i in range(L):
+        c0, c1 = client_pointwise.encrypt_limb(
+            pt[:, i, :], pk_b_mont[i], pk_a_mont[i], ctx, i,
+            seed=seed, nonce0=nonce0, interpret=interpret)
+        c0s.append(c0)
+        c1s.append(c1)
+    c0 = jnp.stack(c0s, axis=1)
+    c1 = jnp.stack(c1s, axis=1)
+    if squeeze:
+        return c0[0], c1[0]
+    return c0, c1
+
+
+def decrypt_fused(c0, c1, s_mont, ctx: CKKSContext, n_limbs: int = 2,
+                  interpret: bool | None = None):
+    """Streaming decrypt -> coefficient-domain residues (…, n_limbs, N)."""
+    interpret = default_interpret() if interpret is None else interpret
+    squeeze = c0.ndim == 2
+    c0b = c0[None] if squeeze else c0
+    c1b = c1[None] if squeeze else c1
+    outs = []
+    for i in range(n_limbs):
+        m = client_pointwise.decrypt_limb(
+            c0b[:, i, :], c1b[:, i, :], s_mont[i], ctx, i,
+            interpret=interpret)
+        outs.append(m)
+    out = jnp.stack(outs, axis=1)
+    return out[0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# df32 Fourier transforms
+# ---------------------------------------------------------------------------
+
+
+def special_fft(z, m: int, block_rows: int = 1, interpret: bool | None = None):
+    """(rows, n) complex -> slots, df32 Pallas kernel."""
+    interpret = default_interpret() if interpret is None else interpret
+    import numpy as np
+    z = np.asarray(z)
+    squeeze = z.ndim == 1
+    z2 = z[None] if squeeze else z
+    out = fft_df.special_fft_rows(z2, m, block_rows=block_rows,
+                                  interpret=interpret)
+    return out[0] if squeeze else out
+
+
+def special_ifft(z, m: int, block_rows: int = 1,
+                 interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    import numpy as np
+    z = np.asarray(z)
+    squeeze = z.ndim == 1
+    z2 = z[None] if squeeze else z
+    out = fft_df.special_ifft_rows(z2, m, block_rows=block_rows,
+                                   interpret=interpret)
+    return out[0] if squeeze else out

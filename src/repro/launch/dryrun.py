@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell, build the jitted step with its
+production in/out shardings, ``.lower()`` it against ShapeDtypeStruct specs
+(zero allocation) and ``.compile()`` it for
+
+  * the single-pod mesh  (16 data x 16 model = 256 chips), and
+  * the multi-pod mesh   (2 pods x 16 x 16 = 512 chips),
+
+then record memory_analysis / cost_analysis / per-collective byte counts
+into benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json — the roofline
+analysis (benchmarks/roofline.py) consumes those JSONs.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--jobs N]
+"""
+
+import argparse
+import functools
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, runnable
+from repro.distributed import sharding as sh
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh, tp_width
+from repro.models import model as M
+from repro.models.archs import ARCHS, get_arch
+from repro.training import optimizer as opt
+from repro.training import train_step as ts
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _tensor_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-tensor bytes of every collective op in the HLO, by kind.
+    (Result bytes ~= bytes moved per chip for AG/AR; standard proxy.)"""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s+([a-z\-]+)", line)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op in _COLLECTIVES:
+            out[op] += _tensor_bytes(m.group(1))
+            counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch: str, shape_name: str, mesh, n_micro: int = 1):
+    """Returns (fn, example_args pytree of ShapeDtypeStructs, in_shardings,
+    out_shardings)."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    tp = tp_width(mesh)
+    specs = S.input_specs(cfg, shape_name, tp)
+
+    if shape.kind == "train":
+        # microbatching bounds the per-device activation footprint
+        step = ts.build_train_step(cfg, tp=tp, n_micro=n_micro)
+        fn = lambda params, opt_state, batch: step(params, opt_state,
+                                                   batch)[:3]
+        args = (specs["params"], specs["opt_state"], specs["batch"])
+        in_sh = (sh.param_shardings(specs["params"], mesh),
+                 sh.opt_state_shardings(specs["opt_state"], mesh),
+                 sh.batch_shardings(specs["batch"], mesh))
+        out_sh = (in_sh[0], in_sh[1],
+                  jax.tree.map(lambda _: sh.replicated(mesh),
+                               {"loss": 0, "grad_norm": 0, "lr": 0}))
+    elif shape.kind == "prefill":
+        fn = functools.partial(_prefill_fn, cfg=cfg, tp=tp,
+                               cache_len=shape.seq_len)
+        args = (specs["params"], specs["batch"])
+        cache_sds = M.cache_spec(cfg, shape.global_batch, shape.seq_len, tp)
+        in_sh = (sh.param_shardings(specs["params"], mesh),
+                 sh.batch_shardings(specs["batch"], mesh))
+        out_sh = (sh.batch_shardings(
+                      jax.ShapeDtypeStruct((shape.global_batch, 1,
+                                            cfg.padded_vocab(tp)),
+                                           jnp.bfloat16), mesh),
+                  sh.cache_shardings(cache_sds, mesh, cfg))
+    else:  # decode
+        long_ctx = shape_name == "long_500k"
+        fn = functools.partial(_decode_fn, cfg=cfg, tp=tp)
+        args = (specs["params"], specs["cache"], specs["batch"],
+                specs["pos"])
+        cache_sh = sh.cache_shardings(specs["cache"], mesh, cfg,
+                                      long_context=long_ctx)
+        in_sh = (sh.param_shardings(specs["params"], mesh),
+                 cache_sh,
+                 sh.batch_shardings(specs["batch"], mesh),
+                 sh.replicated(mesh))
+        out_sh = (sh.batch_shardings(
+                      jax.ShapeDtypeStruct((shape.global_batch, 1,
+                                            cfg.padded_vocab(tp)),
+                                           jnp.bfloat16), mesh),
+                  cache_sh)
+    return fn, args, in_sh, out_sh
+
+
+def _prefill_fn(params, batch, *, cfg, tp, cache_len):
+    return M.prefill(params, batch, cfg, cache_len=cache_len, tp=tp)
+
+
+def _decode_fn(params, cache, batch, pos, *, cfg, tp):
+    return M.decode_step(params, cache, batch, pos, cfg, tp=tp)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run one cell
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             save: bool = True, n_micro: int = 1) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    fn, args, in_sh, out_sh = build_cell(arch, shape_name, mesh, n_micro)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    mem_d = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            mem_d[k] = int(getattr(mem, k, 0) or 0)
+    coll = collective_bytes(compiled.as_text())
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "devices": n_dev, "n_micro": n_micro,
+        "flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0))
+        if cost else 0.0,
+        "collectives": coll,
+        "memory": mem_d,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        micro_tag = f"__micro{n_micro}" if n_micro > 1 else ""
+        path = os.path.join(
+            RESULTS_DIR, f"{arch}__{shape_name}__{mesh_kind}{micro_tag}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def iter_cells():
+    for arch, cfg in ARCHS.items():
+        for shape_name in SHAPES:
+            if runnable(cfg, shape_name):
+                yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--micro", type=int, default=1,
+                    help="gradient-accumulation microbatches (train cells)")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = (list(iter_cells()) if args.all
+             else [(args.arch, args.shape)])
+    failures = []
+    for arch, shape_name in cells:
+        for mk in meshes:
+            tag = f"{arch} x {shape_name} x {mk}"
+            try:
+                r = run_cell(arch, shape_name, mk, n_micro=args.micro)
+                print(f"OK   {tag}: flops={r['flops']:.3e} "
+                      f"coll={r['collectives']['total_bytes']:.3e}B "
+                      f"compile={r['compile_s']}s", flush=True)
+            except Exception as e:                     # noqa: BLE001
+                failures.append(tag)
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+    print("dry-run complete: all cells lowered + compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction (deliverable e).
+
+Functions, not module-level constants — importing this module never touches
+jax device state. The dry-run sets XLA_FLAGS host-device-count=512 BEFORE
+importing jax (see dryrun.py); real deployments get the same shapes from
+actual TPU topologies.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (elastic re-mesh path)."""
+    return jax.make_mesh(shape, axes)
+
+
+def tp_width(mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1

@@ -1,0 +1,71 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+No device allocation anywhere: params, optimizer state, batches and caches
+are all stand-ins (jax.eval_shape over the real initialisers), so lowering
+the 671B-parameter deepseek cell on a CPU container is instant and exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeConfig
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.training import optimizer as opt
+from repro.training import train_step as ts
+
+
+def param_specs(cfg: ArchConfig, tp: int):
+    return jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0), tp=tp))
+
+
+def opt_specs(cfg: ArchConfig, tp: int, adam: opt.AdamWConfig):
+    params = param_specs(cfg, tp)
+    return jax.eval_shape(functools.partial(opt.adamw_init, cfg=adam), params)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        s_in = 1
+    else:
+        s_in = s
+    out = {"labels": jax.ShapeDtypeStruct((b, s_in), jnp.int32)}
+    if cfg.frontend:
+        out["embeds"] = jax.ShapeDtypeStruct((b, s_in, cfg.d_model),
+                                             jnp.float32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s_in), jnp.int32)
+    if cfg.mrope:
+        out["mrope_pos"] = jax.ShapeDtypeStruct((b, s_in, 3), jnp.int32)
+    if shape.kind == "decode":
+        out.pop("labels")
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, tp: int,
+                adam: opt.AdamWConfig | None = None):
+    """Everything jit-lowering needs for one cell.
+
+    train:   (params, opt_state, batch)
+    prefill: (params, batch)
+    decode:  (params, cache, batch, pos)
+    """
+    shape = SHAPES[shape_name]
+    adam = adam or opt.AdamWConfig()
+    params = param_specs(cfg, tp)
+    batch = batch_specs(cfg, shape)
+    if shape.kind == "train":
+        return {"params": params,
+                "opt_state": opt_specs(cfg, tp, adam),
+                "batch": batch}
+    if shape.kind == "prefill":
+        return {"params": params, "batch": batch}
+    cache = M.cache_spec(cfg, shape.global_batch, shape.seq_len, tp)
+    return {"params": params, "cache": cache, "batch": batch,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

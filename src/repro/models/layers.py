@@ -1,0 +1,309 @@
+"""Pure-JAX layer library shared by all 10 architectures.
+
+Functional style: ``init_*`` returns a dict of arrays, ``*_fwd`` are pure.
+Attention is chunked/online-softmax (flash-style in plain lax) so the 4k
+training and 32k prefill cells never materialise an (S, S) score tensor.
+Compute dtype is bf16 (MXU-native); params are stored f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _init(key, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+def rmsnorm(x, gamma, eps: float):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * gamma).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE sections)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd), positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections=None):
+    """M-RoPE (qwen2-vl): head_dim/2 frequencies split into (t, h, w)
+    sections, each rotated by its own position stream.
+    x: (B,S,H,hd), positions3: (B,S,3). Default split is qwen2-vl's
+    (16, 24, 24) proportions (1/4, 3/8, 3/8) scaled to head_dim."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    if sections is None:
+        half = hd // 2
+        t = half // 4
+        h = (half - t) // 2
+        sections = (t, h, half - t - h)
+    sec = np.asarray(sections)
+    assert sec.sum() == hd // 2, "M-RoPE sections must cover head_dim/2"
+    sec_id = np.repeat(np.arange(3), sec)                # (hd/2,)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.asarray(sec_id)[None, None, :].repeat(positions3.shape[0], 0)
+        .repeat(positions3.shape[1], 1), axis=2)         # (B,S,hd/2)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — no (S, S) materialisation
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: int | None = None, q_chunk: int = 1024,
+                      kv_chunk: int = 1024, unroll: bool = False):
+    """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Skv, hd). GQA via head grouping.
+    Online-softmax over kv chunks; lax.map over q chunks.
+    `window`: sliding-window width (causal bands).
+    `unroll`: python loops instead of scan/map — exact-cost lowering mode
+    (XLA cost analysis counts while-loop bodies once; see §Roofline)."""
+    b, hq, sq, hd = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    q = q.reshape(b, hkv, group, sq, hd)
+    scale = 1.0 / math.sqrt(hd)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    while sq % q_chunk:          # non-power-of-two seq: shrink to divide
+        q_chunk //= 2
+    while skv % kv_chunk:
+        kv_chunk //= 2
+    n_q, n_kv = sq // q_chunk, skv // kv_chunk
+    # offset of q position 0 relative to kv position 0 (decode: skv - sq)
+    q_off = skv - sq
+
+    def q_block(qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, 3)
+        q_pos = q_off + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            acc, m, denom = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 2)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 2)
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isinf(m), 0.0, m) - m_safe)
+            denom = denom * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (acc, m_new, denom), None
+
+        acc0 = jnp.zeros((b, hkv, group, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((b, hkv, group, q_chunk), -jnp.inf, jnp.float32)
+        d0 = jnp.zeros((b, hkv, group, q_chunk), jnp.float32)
+        if unroll:
+            carry = (acc0, m0, d0)
+            for ki in range(n_kv):
+                carry, _ = kv_step(carry, ki)
+            acc, m, denom = carry
+        else:
+            (acc, m, denom), _ = jax.lax.scan(
+                kv_step, (acc0, m0, d0), jnp.arange(n_kv))
+        return acc / jnp.maximum(denom, 1e-30)[..., None]
+
+    if n_q == 1:
+        out = q_block(0)
+    elif unroll:
+        blocks = [q_block(qi) for qi in range(n_q)]       # exact-cost mode
+        out = jnp.concatenate(blocks, axis=3)
+    else:
+        out = jax.lax.map(q_block, jnp.arange(n_q))       # (n_q,B,hkv,g,qc,hd)
+        out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, group, sq, hd)
+    return out.reshape(b, hq, -1, hd).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (init + fwd, train & decode)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_q: int
+    n_kv: int
+    hd: int
+    qkv_bias: bool = False
+
+
+def init_attention(key, dims: AttnDims):
+    ks = jax.random.split(key, 4)
+    d, hd = dims.d_model, dims.hd
+    p = {
+        "wq": _init(ks[0], (d, dims.n_q * hd)),
+        "wk": _init(ks[1], (d, dims.n_kv * hd)),
+        "wv": _init(ks[2], (d, dims.n_kv * hd)),
+        "wo": _init(ks[3], (dims.n_q * hd, d)),
+    }
+    if dims.qkv_bias:
+        p["bq"] = jnp.zeros((dims.n_q * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((dims.n_kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((dims.n_kv * hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, dims: AttnDims, positions, theta, mrope_pos=None):
+    b, s, _ = x.shape
+    cd = COMPUTE_DTYPE
+    q = x @ p["wq"].astype(cd)
+    k = x @ p["wk"].astype(cd)
+    v = x @ p["wv"].astype(cd)
+    if dims.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = q.reshape(b, s, dims.n_q, dims.hd)
+    k = k.reshape(b, s, dims.n_kv, dims.hd)
+    v = v.reshape(b, s, dims.n_kv, dims.hd)
+    if mrope_pos is not None:
+        q = apply_mrope(q, mrope_pos, theta)
+        k = apply_mrope(k, mrope_pos, theta)
+    else:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def attention_fwd(p, x, dims: AttnDims, *, theta: float,
+                  window: int | None = None, mrope_pos=None,
+                  q_chunk: int = 1024, kv_chunk: int = 1024,
+                  unroll: bool = False):
+    """Training / prefill forward. x: (B, S, d) bf16."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, x, dims, positions, theta, mrope_pos)
+    out = chunked_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, window=window,
+        q_chunk=q_chunk, kv_chunk=kv_chunk, unroll=unroll)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return (out @ p["wo"].astype(COMPUTE_DTYPE)), (k, v)
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, dims: AttnDims, *,
+                     theta: float, rolling: bool = False, window=None):
+    """One-token decode. x: (B, 1, d); cache: (B, S_cache, n_kv, hd);
+    pos: scalar int32 current position.
+
+    rolling=True: the cache is a circular buffer of width S_cache (uniform
+    SWA archs); the buffer size IS the window. rolling=False: linear cache;
+    `window` (traced scalar, >= 2^29 means global) masks older positions —
+    used by mixed global/SWA stacks (hymba)."""
+    b = x.shape[0]
+    s_cache = cache_k.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, dims, positions, theta)
+    slot = pos % s_cache if rolling else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, 1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, 1)
+    # scores over the cache; mask invalid (future / unwritten) slots
+    qh = q.transpose(0, 2, 1, 3)                        # (B, nq, 1, hd)
+    kh = cache_k.transpose(0, 2, 1, 3)
+    vh = cache_v.transpose(0, 2, 1, 3)
+    group = dims.n_q // dims.n_kv
+    qh = qh.reshape(b, dims.n_kv, group, 1, dims.hd)
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qh, kh,
+                   preferred_element_type=jnp.float32) / math.sqrt(dims.hd)
+    idx = jnp.arange(s_cache)
+    if rolling:
+        valid = (idx <= pos) | (pos >= s_cache)
+    else:
+        valid = idx <= pos
+        if window is not None:
+            valid &= (pos - idx) < window
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    pweights = jax.nn.softmax(s, axis=-1).astype(vh.dtype)
+    out = jnp.einsum("bkgqc,bkcd->bkgqd", pweights, vh,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, dims.n_q, 1, dims.hd).transpose(0, 2, 1, 3)
+    out = out.reshape(b, 1, -1).astype(COMPUTE_DTYPE)
+    return out @ p["wo"].astype(COMPUTE_DTYPE), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": _init(ks[0], (d_model, d_ff)),
+        "wg": _init(ks[1], (d_model, d_ff)),
+        "wo": _init(ks[2], (d_ff, d_model)),
+    }
+
+
+def mlp_fwd(p, x):
+    cd = COMPUTE_DTYPE
+    h = jax.nn.silu(x @ p["wg"].astype(cd)) * (x @ p["wi"].astype(cd))
+    return h @ p["wo"].astype(cd)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits (vocab-parallel-friendly shapes)
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, tie: bool):
+    ks = jax.random.split(key, 2)
+    p = {"tok": _init(ks[0], (vocab, d_model), scale=0.02)}
+    if not tie:
+        p["unembed"] = _init(ks[1], (d_model, vocab))
+    return p
+
+
+def embed(p, tokens):
+    return p["tok"][tokens].astype(COMPUTE_DTYPE)
+
+
+def logits(p, x, tie: bool):
+    w = p["tok"].T if tie else p["unembed"]
+    return x @ w.astype(COMPUTE_DTYPE)

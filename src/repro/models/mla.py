@@ -1,0 +1,117 @@
+"""DeepSeek-V3 Multi-head Latent Attention (MLA).
+
+KV state is compressed into a per-token latent c_kv (kv_lora_rank) plus a
+shared rope key (rope_head_dim); at decode time only (latent, k_rope) is
+cached — 576 floats/token instead of n_heads * 2 * head_dim. Queries are
+low-rank too (q_lora_rank). Prefill decompresses the latent into per-head
+keys/values; decode keeps the cache compressed and absorbs the decompression
+into the query/output projections (the standard MLA inference absorption).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MLAConfig
+from repro.models.layers import COMPUTE_DTYPE, _init, apply_rope
+
+
+def init_mla(key, d_model: int, n_heads: int, cfg: MLAConfig):
+    ks = jax.random.split(key, 7)
+    qd = cfg.nope_head_dim + cfg.rope_head_dim
+    return {
+        "wq_a": _init(ks[0], (d_model, cfg.q_lora_rank)),
+        "wq_b": _init(ks[1], (cfg.q_lora_rank, n_heads * qd)),
+        "wkv_a": _init(ks[2], (d_model, cfg.kv_lora_rank + cfg.rope_head_dim)),
+        "wk_b": _init(ks[3], (cfg.kv_lora_rank, n_heads * cfg.nope_head_dim)),
+        "wv_b": _init(ks[4], (cfg.kv_lora_rank, n_heads * cfg.v_head_dim)),
+        "wo": _init(ks[5], (n_heads * cfg.v_head_dim, d_model)),
+    }
+
+
+def _latent(p, x, cfg: MLAConfig, positions, theta):
+    """x -> (c_kv latent (B,S,r), k_rope (B,S,1,rd))."""
+    cd = COMPUTE_DTYPE
+    kv_a = x @ p["wkv_a"].astype(cd)                    # (B,S,r+rd)
+    c_kv = kv_a[..., : cfg.kv_lora_rank]
+    k_rope = kv_a[..., cfg.kv_lora_rank:][:, :, None, :]
+    k_rope = apply_rope(k_rope, positions, theta)
+    return c_kv, k_rope
+
+
+def _queries(p, x, n_heads, cfg: MLAConfig, positions, theta):
+    cd = COMPUTE_DTYPE
+    b, s, _ = x.shape
+    q = (x @ p["wq_a"].astype(cd)) @ p["wq_b"].astype(cd)
+    q = q.reshape(b, s, n_heads, cfg.nope_head_dim + cfg.rope_head_dim)
+    q_nope = q[..., : cfg.nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.nope_head_dim:], positions, theta)
+    return q_nope, q_rope
+
+
+def mla_fwd(p, x, n_heads: int, cfg: MLAConfig, *, theta: float,
+            q_chunk: int = 1024, kv_chunk: int = 1024,
+            unroll: bool = False):
+    """Training/prefill path: decompress latent into per-head K/V and run
+    chunked attention. Returns (out, (c_kv, k_rope)) for cache priming."""
+    from repro.models.layers import chunked_attention
+    cd = COMPUTE_DTYPE
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    c_kv, k_rope = _latent(p, x, cfg, positions, theta)
+    q_nope, q_rope = _queries(p, x, n_heads, cfg, positions, theta)
+
+    k_nope = (c_kv @ p["wk_b"].astype(cd)).reshape(
+        b, s, n_heads, cfg.nope_head_dim)
+    v = (c_kv @ p["wv_b"].astype(cd)).reshape(b, s, n_heads, cfg.v_head_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, n_heads, cfg.rope_head_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # pad v to k's head_dim for the shared attention helper, then slice
+    pad = k.shape[-1] - v.shape[-1]
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    out = chunked_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v_p.transpose(0, 2, 1, 3), causal=True,
+        q_chunk=q_chunk, kv_chunk=kv_chunk, unroll=unroll)
+    out = out.transpose(0, 2, 1, 3)[..., : cfg.v_head_dim]
+    out = out.reshape(b, s, -1)
+    return out @ p["wo"].astype(cd), (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(p, x, cache_c, cache_kr, pos, n_heads: int, cfg: MLAConfig, *,
+               theta: float):
+    """Absorbed decode: scores = q_nope·W_UK·c_kv + q_rope·k_rope over the
+    compressed cache. cache_c: (B, S, r); cache_kr: (B, S, rd)."""
+    cd = COMPUTE_DTYPE
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    c_kv, k_rope = _latent(p, x, cfg, positions, theta)
+    cache_c = jax.lax.dynamic_update_slice_in_dim(cache_c, c_kv, pos, 1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, k_rope[:, :, 0, :], pos, 1)
+
+    q_nope, q_rope = _queries(p, x, n_heads, cfg, positions, theta)
+    # absorb W_UK: q_lat (B,1,H,r) = q_nope @ W_UK^T per head
+    wk = p["wk_b"].astype(cd).reshape(cfg.kv_lora_rank, n_heads,
+                                      cfg.nope_head_dim)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wk)
+    s_nope = jnp.einsum("bshr,btr->bhst", q_lat, cache_c,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshd,btd->bhst", q_rope, cache_kr,
+                        preferred_element_type=jnp.float32)
+    scale = 1.0 / math.sqrt(cfg.nope_head_dim + cfg.rope_head_dim)
+    s = (s_nope + s_rope) * scale
+    idx = jnp.arange(cache_c.shape[1])
+    s = jnp.where(idx[None, None, None, :] <= pos, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    # attention over latent, then decompress through W_UV (absorbed output)
+    lat = jnp.einsum("bhst,btr->bshr", w.astype(cd), cache_c)
+    wv = p["wv_b"].astype(cd).reshape(cfg.kv_lora_rank, n_heads,
+                                      cfg.v_head_dim)
+    out = jnp.einsum("bshr,rhv->bshv", lat, wv).reshape(b, 1, -1)
+    return out @ p["wo"].astype(cd), cache_c, cache_kr

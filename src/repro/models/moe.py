@@ -1,0 +1,171 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based sort dispatch.
+
+Sort-based dispatch (argsort by expert id, gather into (E, C, d) slabs,
+batched expert matmul, scatter back) compiles to O(T log T) sort + dense
+einsums — no (T, E, C) one-hot tensors, so it scales to deepseek-v3's 256
+experts. Tokens beyond a capacity slab are dropped (standard capacity-factor
+semantics); an aux load-balancing loss is returned for training.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MoEConfig
+from repro.models.layers import COMPUTE_DTYPE, _init, init_mlp, mlp_fwd
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, d_ff_shared: int):
+    ks = jax.random.split(key, 5)
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    p = {
+        "router": _init(ks[0], (d_model, e), scale=0.02),
+        "wi": _init(ks[1], (e, d_model, f)),
+        "wg": _init(ks[2], (e, d_model, f)),
+        "wo": _init(ks[3], (e, f, d_model)),
+    }
+    if cfg.n_shared:
+        p["shared"] = init_mlp(ks[4], d_model, d_ff_shared * cfg.n_shared)
+    return p
+
+
+def moe_fwd(p, x, cfg: MoEConfig, capacity_factor: float | None = None):
+    """x: (B, S, d) -> (B, S, d), aux_loss.
+
+    With tuning.PERF['moe_local_dispatch'] = G, tokens are dispatched in G
+    independent groups (group dim pinned to the data axis): the argsort and
+    capacity selection become shard-local, and the only cross-device step
+    is ONE reshard of the capacity slabs from group-major to expert-major
+    (GSPMD lowers it to a single all-to-all) — the standard EP pattern.
+    """
+    from repro.models.tuning import PERF, wsc
+    if PERF.get("moe_local_dispatch"):
+        return _moe_fwd_grouped(p, x, cfg, capacity_factor,
+                                PERF["moe_local_dispatch"])
+    b, s, d = x.shape
+    t = b * s
+    xt = wsc(x.reshape(t, d), "data")
+    cd = COMPUTE_DTYPE
+
+    gate_logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(gate_logits, axis=-1)            # (T, E)
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)            # (T, K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    e = cfg.n_experts
+    capacity_factor = (cfg.capacity_factor if capacity_factor is None
+                       else capacity_factor)
+    if PERF["moe_capacity"]:
+        capacity_factor = PERF["moe_capacity"]
+    cap = int(t * cfg.top_k * capacity_factor / e)
+    cap = max(cap, 4)
+
+    # flatten (token, k) assignments and sort by expert id
+    flat_e = topi.reshape(-1)                               # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(t), cfg.top_k)
+    flat_w = topv.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position within its expert group
+    same = jnp.cumsum(jnp.ones_like(se)) - 1
+    grp_start = jnp.searchsorted(se, jnp.arange(e))         # (E,)
+    pos_in_grp = same - grp_start[se]
+    keep = pos_in_grp < cap
+    slot = se * cap + jnp.where(keep, pos_in_grp, 0)
+
+    # gather tokens into (E*C, d) slabs
+    slab = jnp.zeros((e * cap, d), cd)
+    src = jnp.where(keep, st, t)                            # t = drop sink
+    xt_pad = jnp.concatenate([xt.astype(cd), jnp.zeros((1, d), cd)])
+    slab = slab.at[jnp.where(keep, slot, e * cap - 1)].set(
+        xt_pad[src], mode="drop")
+    # pin slabs to the EP layout (experts->data, d_ff->model): the expert
+    # einsum then runs local to each expert shard instead of GSPMD
+    # round-tripping the (E, C, d) slab through other layouts
+    slab = wsc(slab.reshape(e, cap, d), "data")
+
+    # batched expert SwiGLU
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", slab, p["wg"].astype(cd)))
+    h = wsc(h, "data", None, "model")
+    h = h * wsc(jnp.einsum("ecd,edf->ecf", slab, p["wi"].astype(cd)),
+                "data", None, "model")
+    out_slab = wsc(jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(cd)),
+                   "data")
+    out_slab = out_slab.reshape(e * cap, d)
+
+    # scatter back with gate weights
+    contrib = out_slab[slot] * sw[:, None].astype(cd)
+    contrib = jnp.where(keep[:, None], contrib, 0)
+    out = jnp.zeros((t, d), cd).at[st].add(contrib, mode="drop")
+
+    if "shared" in p:
+        out = out + mlp_fwd(p["shared"], xt.astype(cd))
+
+    # aux load-balance loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(topi[:, 0], e), axis=0)
+    router_prob = jnp.mean(probs, axis=0)
+    aux = (e * jnp.sum(density * router_prob)).astype(jnp.float32)
+    return out.reshape(b, s, d), aux
+
+
+def _moe_fwd_grouped(p, x, cfg: MoEConfig, capacity_factor, groups: int):
+    """Group-local dispatch + one slab reshard (EP all-to-all pattern)."""
+    from repro.models.tuning import wsc
+    b, s, d = x.shape
+    t = b * s
+    assert t % groups == 0
+    tg = t // groups
+    cd = COMPUTE_DTYPE
+    e = cfg.n_experts
+    capacity_factor = (cfg.capacity_factor if capacity_factor is None
+                       else capacity_factor)
+    cap = max(int(tg * cfg.top_k * capacity_factor / e), 4)
+
+    xt = wsc(x.reshape(groups, tg, d), "data")              # (G, Tg, d)
+    gate_logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(gate_logits, axis=-1)            # (G, Tg, E)
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch(xg, ti, tv):
+        """One group: local sort -> (E, C, d) slab + scatter metadata."""
+        flat_e = ti.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(tg), cfg.top_k)
+        flat_w = tv.reshape(-1)
+        order = jnp.argsort(flat_e)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        same = jnp.cumsum(jnp.ones_like(se)) - 1
+        grp_start = jnp.searchsorted(se, jnp.arange(e))
+        pos = same - grp_start[se]
+        keep = pos < cap
+        slot = se * cap + jnp.where(keep, pos, 0)
+        xg_pad = jnp.concatenate([xg.astype(cd), jnp.zeros((1, d), cd)])
+        slab = jnp.zeros((e * cap, d), cd).at[
+            jnp.where(keep, slot, e * cap - 1)].set(
+            xg_pad[jnp.where(keep, st, tg)], mode="drop")
+        return slab.reshape(e, cap, d), (st, sw, keep, slot)
+
+    slabs, meta = jax.vmap(dispatch)(xt, topi, topv)        # (G, E, C, d)
+    slabs = wsc(slabs, "data")                              # group-major
+    # THE reshard: group-major -> expert-major (one all-to-all on TPU)
+    slabs = wsc(slabs, None, "data")
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", slabs, p["wg"].astype(cd)))
+    h = h * jnp.einsum("gecd,edf->gecf", slabs, p["wi"].astype(cd))
+    out_slab = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(cd))
+    out_slab = wsc(out_slab, None, "data")
+    out_slab = wsc(out_slab, "data")                        # back to groups
+
+    def combine(os_g, m):
+        st, sw, keep, slot = m
+        contrib = os_g.reshape(e * cap, d)[slot] * sw[:, None].astype(cd)
+        contrib = jnp.where(keep[:, None], contrib, 0)
+        return jnp.zeros((tg, d), cd).at[st].add(contrib, mode="drop")
+
+    out = jax.vmap(combine)(out_slab, meta)                 # (G, Tg, d)
+    if "shared" in p:
+        out = out + mlp_fwd(p["shared"], xt.astype(cd))
+    density = jnp.mean(jax.nn.one_hot(topi[..., 0], e), axis=(0, 1))
+    router_prob = jnp.mean(probs, axis=(0, 1))
+    aux = (e * jnp.sum(density * router_prob)).astype(jnp.float32)
+    return out.reshape(b, s, d), aux

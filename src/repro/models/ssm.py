@@ -1,0 +1,178 @@
+"""Mamba2 SSD (state-space duality) block, chunked for TPU.
+
+Follows arXiv:2405.21060's SSD formulation: the selective SSM with scalar
+per-head decay A is computed chunk-parallel — quadratic attention-like
+within a chunk, linear recurrence across chunk boundaries (lax.scan).
+Decode is the O(1) single-step recurrence on the (B, H, hd, ds) state.
+
+The depthwise causal conv (width 4) and gated output norm follow the
+reference architecture.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import SSMConfig
+from repro.models.layers import COMPUTE_DTYPE, _init, rmsnorm
+
+
+def init_ssm(key, d_model: int, cfg: SSMConfig):
+    ks = jax.random.split(key, 6)
+    d_in = cfg.expand * d_model
+    nh = d_in // cfg.head_dim
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "w_in": _init(ks[0], (d_model,
+                              2 * d_in + 2 * cfg.d_state + nh)),
+        "conv": _init(ks[1], (cfg.conv_width,
+                              d_in + 2 * cfg.d_state), scale=0.5),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_g": jnp.ones((d_in,), jnp.float32),
+        "w_out": _init(ks[2], (d_in, d_model)),
+    }
+
+
+def _split_proj(p, x, cfg: SSMConfig, d_model: int):
+    cd = COMPUTE_DTYPE
+    d_in = cfg.expand * d_model
+    nh = d_in // cfg.head_dim
+    zxbcdt = x @ p["w_in"].astype(cd)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in: 2 * d_in + 2 * cfg.d_state]
+    dt = zxbcdt[..., 2 * d_in + 2 * cfg.d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,nh)
+    return z, xbc, dt, d_in, nh
+
+
+def _causal_conv(xbc, conv_w, cache=None):
+    """Depthwise causal conv. xbc: (B, S, C); conv_w: (W, C).
+    cache: (B, W-1, C) trailing context for decode."""
+    w = conv_w.shape[0]
+    if cache is None:
+        pad = jnp.zeros_like(xbc[:, : w - 1])
+    else:
+        pad = cache.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i: i + xbc.shape[1]] * conv_w[i].astype(xbc.dtype)
+              for i in range(w))
+    new_cache = xp[:, -(w - 1):]
+    return jax.nn.silu(out), new_cache
+
+
+def ssd_chunked(xh, dt, bmat, cmat, a_log, chunk: int,
+                unroll: bool = False):
+    """SSD scan. xh: (B,S,H,hd); dt: (B,S,H); bmat/cmat: (B,S,ds).
+    Returns (B,S,H,hd) and final state (B,H,hd,ds).
+    `unroll`: python loop for the cross-chunk recurrence (exact-cost mode)."""
+    from repro.models.tuning import PERF, wsc
+    b, s, h, hd = xh.shape
+    ds = bmat.shape[-1]
+    if PERF["ssd_chunk"]:
+        chunk = min(PERF["ssd_chunk"], chunk)
+        while s % chunk:
+            chunk //= 2
+    nc = s // chunk
+    cdt = jnp.bfloat16 if PERF["ssd_bf16"] else jnp.float32
+    a = -jnp.exp(a_log)                                   # (H,) negative
+    # discretised decay per step: da = dt * a  (log-space)
+    da = dt * a                                           # (B,S,H)
+    xs = (xh * dt[..., None]).astype(cdt)                 # input * dt
+
+    xc = wsc(xs.reshape(b, nc, chunk, h, hd), "data")
+    dac = da.reshape(b, nc, chunk, h)
+    bc = wsc(bmat.reshape(b, nc, chunk, ds).astype(cdt), "data")
+    cc = wsc(cmat.reshape(b, nc, chunk, ds).astype(cdt), "data")
+
+    cum = jnp.cumsum(dac, axis=2)                         # (B,nc,C,H)
+    seg_total = cum[:, :, -1]                             # (B,nc,H)
+
+    # intra-chunk (quadratic): L[i,j] = exp(cum_i - cum_j) for i >= j.
+    # Mask BEFORE exp: for j > i the exponent is large-positive and exp
+    # overflows to inf — the forward where() would discard it, but the
+    # recomputed backward then hits inf * 0 = NaN. -1e30 underflows to a
+    # clean 0 with zero gradient.
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,C,C,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    li = jnp.where(mask[None, None, :, :, None], li, -1e30)
+    lmat = jnp.exp(li).astype(cdt)
+    lmat = wsc(lmat, "data")
+    scores = jnp.einsum("bnis,bnjs->bnij", cc, bc,
+                        preferred_element_type=jnp.float32).astype(cdt)
+    intra = wsc(jnp.einsum("bnij,bnijh,bnjhd->bnihd", scores, lmat, xc,
+                           preferred_element_type=jnp.float32), "data")
+
+    # chunk-state contribution: state_n = sum_j exp(total - cum_j) B_j x_j
+    decay_in = jnp.exp(seg_total[:, :, None] - cum).astype(cdt)
+    chunk_states = jnp.einsum("bnjs,bnjh,bnjhd->bnhds",
+                              bc, decay_in, xc,
+                              preferred_element_type=jnp.float32)
+
+    def step(state, inp):
+        cs, seg = inp                                     # (B,H,hd,ds), (B,H)
+        new = state * jnp.exp(seg)[:, :, None, None] + cs
+        return new, state                                 # emit PREVIOUS
+
+    init = jnp.zeros((b, h, hd, ds), jnp.float32)
+    xs = (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(seg_total, 1, 0))
+    if unroll:
+        state, prevs = init, []
+        for i in range(nc):
+            state, prev = step(state, (xs[0][i], xs[1][i]))
+            prevs.append(prev)
+        final, prev_states = state, jnp.stack(prevs)
+    else:
+        final, prev_states = jax.lax.scan(step, init, xs)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (B,nc,H,hd,ds)
+
+    # inter-chunk: y_i += C_i exp(cum_i) state_prev
+    decay_out = jnp.exp(cum)                              # (B,nc,C,H)
+    inter = jnp.einsum("bnis,bnih,bnhds->bnihd",
+                       cc, decay_out, prev_states)
+    y = (intra + inter).reshape(b, s, h, hd)
+    return y, final
+
+
+def ssm_fwd(p, x, cfg: SSMConfig, d_model: int, unroll: bool = False):
+    """Training/prefill. x: (B,S,d). Returns (out, (state, conv_cache))."""
+    cd = COMPUTE_DTYPE
+    b, s, _ = x.shape
+    z, xbc, dt, d_in, nh = _split_proj(p, x, cfg, d_model)
+    xbc, conv_cache = _causal_conv(xbc, p["conv"])
+    xh = xbc[..., :d_in].reshape(b, s, nh, cfg.head_dim)
+    bmat = xbc[..., d_in: d_in + cfg.d_state]
+    cmat = xbc[..., d_in + cfg.d_state:]
+    chunk = min(cfg.chunk, s)
+    while s % chunk:             # non-power-of-two seq: shrink to divide
+        chunk //= 2
+    chunk = max(chunk, 1)
+    y, state = ssd_chunked(xh, dt, bmat, cmat, p["a_log"], chunk,
+                           unroll=unroll)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(cd)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_g"], 1e-5)
+    return y @ p["w_out"].astype(cd), (state, conv_cache)
+
+
+def ssm_decode(p, x, state, conv_cache, cfg: SSMConfig, d_model: int):
+    """O(1) decode step. state: (B,H,hd,ds); conv_cache: (B,W-1,C)."""
+    cd = COMPUTE_DTYPE
+    b = x.shape[0]
+    z, xbc, dt, d_in, nh = _split_proj(p, x, cfg, d_model)
+    xbc, conv_cache = _causal_conv(xbc, p["conv"], cache=conv_cache)
+    xh = xbc[..., :d_in].reshape(b, 1, nh, cfg.head_dim)
+    bmat = xbc[..., d_in: d_in + cfg.d_state].astype(jnp.float32)
+    cmat = xbc[..., d_in + cfg.d_state:].astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])
+    da = (dt[:, 0] * a)                                    # (B,H)
+    xs = (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)  # (B,H,hd)
+    state = (state * jnp.exp(da)[:, :, None, None]
+             + jnp.einsum("bs,bhd->bhds", bmat[:, 0], xs))
+    y = jnp.einsum("bs,bhds->bhd", cmat[:, 0], state)
+    y = y + xh[:, 0].astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, d_in).astype(cd)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_g"], 1e-5)
+    return y @ p["w_out"].astype(cd), state, conv_cache

@@ -1,0 +1,48 @@
+"""Performance-tuning knobs (§Perf hillclimb switches).
+
+Compile-time flags read during tracing; the defaults reproduce the
+paper-faithful baseline. The roofline harness flips them (--opt) to measure
+each hypothesis — see EXPERIMENTS.md §Perf for the hypothesis→change→
+measure log.
+
+  shard_hints   with_sharding_constraint on large SSD/MoE intermediates,
+                pinning them to batch->data / expert->data / d_ff->model
+                instead of whatever GSPMD infers (baseline: GSPMD chose
+                ring collective-permutes over the idle model axis for the
+                SSD quadratic-form tensors).
+  ssd_bf16      intra-chunk SSD decay/score tensors in bf16 (f32 accum).
+  ssd_chunk     override SSD chunk length (lmat traffic ~ B*S*C*H).
+  moe_capacity  override MoE capacity factor for dispatch slabs.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec
+
+PERF = {
+    "shard_hints": False,
+    "ssd_bf16": False,
+    "ssd_chunk": None,
+    "moe_capacity": None,
+    "moe_local_dispatch": None,
+}
+
+
+def set_perf(**kw):
+    for k, v in kw.items():
+        assert k in PERF, k
+        PERF[k] = v
+
+
+def reset_perf():
+    PERF.update(shard_hints=False, ssd_bf16=False, ssd_chunk=None,
+                moe_local_dispatch=None,
+                moe_capacity=None)
+
+
+def wsc(x, *spec):
+    """with_sharding_constraint when hints are on (requires a mesh ctx)."""
+    if not PERF["shard_hints"]:
+        return x
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))

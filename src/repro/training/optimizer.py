@@ -1,0 +1,181 @@
+"""AdamW with block-quantised 8-bit moments + int8 gradient compression.
+
+Distributed-optimization features for 1000+-node scale:
+
+  * 8-bit Adam moments (per-128-block absmax scales) cut optimizer-state HBM
+    by 4x vs f32 — the difference between fitting and not fitting
+    deepseek-671b training on a 256-chip pod (see EXPERIMENTS §Dry-run).
+  * int8 gradient compression with error feedback: gradients are quantised
+    before the data-parallel all-reduce (4x collective bytes reduction); the
+    quantisation residual is fed back into the next step so the compression
+    is unbiased in the long run.
+
+Everything is a pure pytree function — jit/pjit-safe, shardable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+# ---------------------------------------------------------------------------
+# Block-wise int8 quantisation
+# ---------------------------------------------------------------------------
+
+
+def _q8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """f32 array -> (int8 payload (same shape), per-block f32 scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _dq8(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    import numpy as np
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    return flat[: int(np.prod(shape))].reshape(shape)
+
+
+def _q8_sqrt(v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Second-moment quantisation in sqrt-domain. Linear int8 on raw v
+    zeroes small entries within a block (v spans ~squared dynamic range),
+    which explodes m/sqrt(v) steps; quantising sqrt(v) halves the log-range
+    so the update stays stable (the standard 8-bit-Adam trick)."""
+    return _q8(jnp.sqrt(jnp.maximum(v, 0.0)))
+
+
+def _dq8_sqrt(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    r = _dq8(q, scale, shape)
+    return r * r
+
+
+# ---------------------------------------------------------------------------
+# AdamW (8-bit state)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup: int = 100
+    eightbit: bool = True
+    grad_clip: float = 1.0
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    def zero_like(p):
+        if cfg.eightbit:
+            q, s = _q8(jnp.zeros(p.shape, jnp.float32))
+            return {"q": q, "s": s}
+        return jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zero_like, params),
+        "v": jax.tree.map(zero_like, params),   # stored sqrt-domain when 8bit
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _lr_at(cfg: AdamWConfig, count):
+    warm = jnp.minimum(count.astype(jnp.float32) / max(cfg.warmup, 1), 1.0)
+    return cfg.lr * warm
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    count = state["count"] + 1
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = _lr_at(cfg, count)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        if cfg.eightbit:
+            m_f = _dq8(m["q"], m["s"], p.shape)
+            v_f = _dq8_sqrt(v["q"], v["s"], p.shape)
+        else:
+            m_f, v_f = m, v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        step = (m_f / b1c) / (jnp.sqrt(v_f / b2c) + cfg.eps)
+        new_p = (p.astype(jnp.float32)
+                 - lr * (step + cfg.weight_decay * p.astype(jnp.float32)))
+        if cfg.eightbit:
+            mq, ms = _q8(m_f)
+            vq, vs = _q8_sqrt(v_f)
+            return new_p.astype(p.dtype), {"q": mq, "s": ms}, {"q": vq, "s": vs}
+        return new_p.astype(p.dtype), m_f, v_f
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, {
+        "grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression with error feedback
+# ---------------------------------------------------------------------------
+
+
+def compress_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, residual):
+    """Quantise grads to int8 (+per-block scales); residual carries the
+    quantisation error into the next step (error feedback)."""
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        q, s = _q8(g)
+        deq = _dq8(q, s, g.shape)
+        return (q, s), g - deq
+    pairs = jax.tree.map(one, grads, residual,
+                         is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    comp = jax.tree.map(lambda x: x[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                        and isinstance(x[0], tuple))
+    # simpler: rebuild explicitly
+    flat, treedef = jax.tree_util.tree_flatten(
+        grads, is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    flat_r = treedef.flatten_up_to(residual)
+    qs, new_r = [], []
+    for g, r in zip(flat, flat_r):
+        gf = g.astype(jnp.float32) + r
+        q, s = _q8(gf)
+        qs.append({"q": q, "s": s})
+        new_r.append(gf - _dq8(q, s, gf.shape))
+    return treedef.unflatten(qs), treedef.unflatten(new_r)
+
+
+def decompress_grads(comp, shapes_like):
+    flat_c, treedef = jax.tree_util.tree_flatten(
+        comp, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+    flat_s = treedef.flatten_up_to(shapes_like)
+    out = [_dq8(c["q"], c["s"], s.shape) for c, s in zip(flat_c, flat_s)]
+    return treedef.unflatten(out)

@@ -1,0 +1,87 @@
+"""Train-step builder: value_and_grad + microbatch accumulation + AdamW.
+
+``build_train_step(cfg)`` returns a pure function
+    (params, opt_state, batch, residual) -> (params, opt_state, metrics,
+                                             residual)
+suitable for jax.jit with in/out shardings from distributed.sharding.
+
+Microbatching: the global batch is split into `n_micro` slices scanned
+sequentially; gradients accumulate in f32. With int8 gradient compression
+enabled, the accumulated gradient is quantised (error feedback residual
+carried across steps) before the optimizer — on a real mesh the all-reduce
+then moves int8, 4x fewer collective bytes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.training import optimizer as opt
+
+
+def _split_micro(batch, n_micro: int):
+    def sp(x):
+        b = x.shape[0]
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, tp: int,
+            q_chunk: int, kv_chunk: int):
+    return M.train_fwd(params, batch, cfg, tp=tp,
+                       q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+
+def build_train_step(cfg: ArchConfig, adam: opt.AdamWConfig | None = None,
+                     tp: int = 1, n_micro: int = 1,
+                     compress: bool = False,
+                     q_chunk: int = 1024, kv_chunk: int = 1024):
+    adam = adam or opt.AdamWConfig()
+    grad_fn = jax.value_and_grad(
+        functools.partial(loss_fn, cfg=cfg, tp=tp,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk))
+
+    def step(params, opt_state, batch, residual=None):
+        if n_micro > 1:
+            micro = _split_micro(batch, n_micro)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                l, g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+        else:
+            loss, grads = grad_fn(params, batch)
+
+        if compress and residual is not None:
+            comp, residual = opt.compress_grads(grads, residual)
+            grads = opt.decompress_grads(comp, params)
+
+        params, opt_state, om = opt.adamw_update(params, grads, opt_state,
+                                                 adam)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics, residual
+
+    return step
+
+
+def init_train_state(cfg: ArchConfig, key, adam: opt.AdamWConfig | None = None,
+                     tp: int = 1, compress: bool = False):
+    adam = adam or opt.AdamWConfig()
+    params = M.init_params(cfg, key, tp=tp)
+    opt_state = opt.adamw_init(params, adam)
+    residual = opt.compress_init(params) if compress else None
+    return params, opt_state, residual

@@ -1,0 +1,150 @@
+"""End-to-end CKKS client pipeline: encode/decode and encrypt/decrypt
+round-trips with noise-bound checks (paper Fig. 2a flow)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    boot_precision_bits,
+    decode,
+    decrypt,
+    encode,
+    encrypt,
+    encrypt_symmetric_seeded,
+    get_context,
+    keygen,
+)
+from repro.core.encoder import Plaintext
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return get_context("test")     # N=1024, 6 limbs, Delta=2^50
+
+
+@pytest.fixture(scope="module")
+def keys(ctx):
+    return keygen(ctx)
+
+
+def _msg(ctx, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(ctx.params.n_slots)
+            + 1j * rng.standard_normal(ctx.params.n_slots)) * 0.5
+
+
+def test_encode_decode_roundtrip(ctx):
+    z = _msg(ctx)
+    pt = encode(z, ctx)
+    # decode expects 2 limbs of the SAME (unencrypted) plaintext
+    z2 = decode(pt.data[:2], ctx)
+    prec = boot_precision_bits(z, z2)
+    # df64/complex128 reference pipeline: well above the 19.29-bit need
+    assert prec > 40, f"precision {prec}"
+
+
+def test_encode_is_exact_in_rns(ctx):
+    """Encoding the constant 1+0j must give round(Delta) in every limb of
+    coefficient 0 after INTT (checks the exact RNS reduction)."""
+    from repro.core import ntt as nttmod
+    z = np.ones(ctx.params.n_slots, dtype=np.complex128)
+    pt = encode(z, ctx)
+    c = np.asarray(nttmod.intt(pt.data[0], ctx.plans[0]))
+    want0 = int(ctx.params.delta) % ctx.q_list[0]
+    assert int(c[0]) == want0
+
+
+def test_encrypt_decrypt_public(ctx, keys):
+    sk, pk = keys
+    z = _msg(ctx, 1)
+    pt = encode(z, ctx)
+    ct = encrypt(pt, pk, ctx, nonce=3)
+    pt2 = decrypt(ct, sk, ctx)
+    z2 = decode(pt2, ctx)
+    prec = boot_precision_bits(z, z2)
+    # RLWE noise: |v*e + e0 + e1*s| ~ sigma^2*sqrt(N) coeffs; at Delta=2^50
+    # and N=2^10 the message should survive with > 25 bits of precision
+    assert prec > 25, f"precision after enc/dec {prec}"
+
+
+def test_encrypt_decrypt_seeded(ctx, keys):
+    sk, _ = keys
+    z = _msg(ctx, 2)
+    pt = encode(z, ctx)
+    ct = encrypt_symmetric_seeded(pt, sk, ctx, nonce=9)
+    assert ct.c1 is None        # compressed: only c0 + stream id travel
+    pt2 = decrypt(ct, sk, ctx)
+    z2 = decode(pt2, ctx)
+    assert boot_precision_bits(z, z2) > 25
+
+
+def test_decrypt_at_reduced_level(ctx, keys):
+    """Server returns 2-limb cts (paper §V-B): encrypt at 2 limbs directly."""
+    sk, pk = keys
+    z = _msg(ctx, 3)
+    pt = encode(z, ctx, n_limbs=2)
+    ct = encrypt(Plaintext(pt.data, 2, pt.scale), pk_limbs2(pk), ctx, nonce=4)
+    pt2 = decrypt(ct, sk, ctx)
+    z2 = decode(pt2, ctx)
+    assert boot_precision_bits(z, z2) > 25
+
+
+def pk_limbs2(pk):
+    from repro.core.encryptor import PublicKey
+    return PublicKey(b_mont=pk.b_mont[:2], a_mont=pk.a_mont[:2],
+                     a_stream=pk.a_stream)
+
+
+def test_noise_magnitude(ctx, keys):
+    """Decrypted coefficients must equal plaintext + small noise: check the
+    noise directly in the coefficient domain (exact CRT oracle)."""
+    from repro.core import ntt as nttmod, rns
+    sk, pk = keys
+    z = np.zeros(ctx.params.n_slots, dtype=np.complex128)   # message 0
+    pt = encode(z, ctx)
+    ct = encrypt(pt, pk, ctx, nonce=5)
+    dec = decrypt(ct, sk, ctx)
+    c0 = np.asarray(nttmod.intt(dec[0], ctx.plans[0]))
+    c1 = np.asarray(nttmod.intt(dec[1], ctx.plans[1]))
+    vals = rns.crt_exact(np.stack([c0, c1]), ctx.q_list[:2])
+    noise = max(abs(v) for v in vals)
+    # noise = v*e + e0 + e1*s: coefficients are sums of ~N products of
+    # sigma~3.2 terms: expect well under 2^30 for N=2^10
+    assert 0 < noise < 2 ** 30, f"noise {noise}"
+
+
+def test_wrong_key_fails(ctx, keys):
+    sk, pk = keys
+    z = _msg(ctx, 4)
+    pt = encode(z, ctx)
+    ct = encrypt(pt, pk, ctx, nonce=6)
+    sk2, _ = keygen(ctx, seed=0xDEADBEEF)
+    z2 = decode(decrypt(ct, sk2, ctx), ctx)
+    assert boot_precision_bits(z, z2) < 5   # garbage without the key
+
+
+def test_prng_streams_disjoint(ctx):
+    from repro.core import prng
+    a = np.asarray(prng.random_u32(ctx.params.seed, 1, 4096))
+    b = np.asarray(prng.random_u32(ctx.params.seed, 2, 4096))
+    assert not np.array_equal(a, b)
+    # determinism
+    a2 = np.asarray(prng.random_u32(ctx.params.seed, 1, 4096))
+    np.testing.assert_array_equal(a, a2)
+
+
+def test_uniform_mod_q_range_and_bias(ctx):
+    from repro.core import prng
+    q = ctx.q_list[0]
+    u = np.asarray(prng.uniform_mod_q(ctx.params.seed, 77, 1 << 15, q))
+    assert u.max() < q
+    # mean should be ~ q/2 within a few sigma
+    assert abs(u.mean() / q - 0.5) < 0.02
+
+
+def test_cbd_statistics(ctx):
+    from repro.core import prng
+    e = np.asarray(prng.cbd(ctx.params.seed, 88, 1 << 16))
+    assert abs(e.mean()) < 0.1
+    assert abs(e.std() - np.sqrt(21 / 2)) < 0.1
+    assert e.max() <= 21 and e.min() >= -21

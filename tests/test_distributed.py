@@ -1,0 +1,134 @@
+"""Distributed substrate: checkpoint atomicity/restore/resharding, elastic
+re-mesh policy, straggler detection, 8-bit optimizer, grad compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.elastic import FleetMonitor, remesh_shape
+from repro.training import optimizer as opt
+
+
+@pytest.fixture
+def tree():
+    k = jax.random.PRNGKey(0)
+    return {"layers": {"w": jax.random.normal(k, (8, 16)),
+                       "b": jnp.zeros((16,))},
+            "step_count": jnp.int32(7)}
+
+
+def test_checkpoint_roundtrip(tree, tmp_path):
+    d = str(tmp_path)
+    ckpt.save(tree, d, step=10)
+    restored, step = ckpt.restore(tree, d)
+    assert step == 10
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_latest_pointer_and_gc(tree, tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(tree, d, step=s, keep=2)
+    assert ckpt.latest_step(d) == 5
+    kept = [x for x in os.listdir(d) if x.startswith("step_")]
+    assert len(kept) == 2          # keep-last-k GC
+
+
+def test_checkpoint_async(tree, tmp_path):
+    d = str(tmp_path)
+    saver = ckpt.AsyncCheckpointer(d)
+    saver.save(tree, 42)
+    saver.wait()
+    _, step = ckpt.restore(tree, d)
+    assert step == 42
+
+
+def test_checkpoint_shape_mismatch_rejected(tree, tmp_path):
+    d = str(tmp_path)
+    ckpt.save(tree, d, step=1)
+    bad = dict(tree)
+    bad["layers"] = {"w": jnp.zeros((4, 4)), "b": tree["layers"]["b"]}
+    with pytest.raises(AssertionError):
+        ckpt.restore(bad, d)
+
+
+def test_elastic_remesh_policy():
+    # full 2-pod fleet
+    assert remesh_shape(512) == ((2, 16, 16), ("pod", "data", "model"))
+    # lose a pod -> single-pod mesh
+    assert remesh_shape(256) == ((16, 16), ("data", "model"))
+    # lose hosts below pod size -> shrink data axis, keep TP width
+    shape, axes = remesh_shape(240)
+    assert shape == (15, 16) and axes == ("data", "model")
+
+
+def test_fleet_monitor_failure_and_straggler():
+    t = [0.0]
+    mon = FleetMonitor(n_hosts=4, heartbeat_timeout=10.0,
+                       straggler_factor=1.5, patience=2,
+                       clock=lambda: t[0])
+    for h in range(4):
+        mon.heartbeat(h)
+    t[0] = 15.0
+    mon.heartbeat(0), mon.heartbeat(1), mon.heartbeat(2)
+    t[0] = 20.0                     # host 3 stale by 20s; 0-2 fresh (5s)
+    dead = mon.check_failures()
+    assert dead == [3]
+    assert mon.alive_hosts == [0, 1, 2]
+    # straggler: host 2 consistently 2x median
+    for _ in range(3):
+        for h, dt in ((0, 1.0), (1, 1.0), (2, 2.2)):
+            mon.report_step_time(h, dt)
+        slow = mon.stragglers()
+    assert slow == [2]
+
+
+def test_adamw_8bit_tracks_fp32():
+    """8-bit-moment AdamW must track the fp32 optimizer closely."""
+    k = jax.random.PRNGKey(1)
+    params = {"w": jax.random.normal(k, (64, 64)) * 0.1}
+    cfg8 = opt.AdamWConfig(lr=1e-2, warmup=1, eightbit=True,
+                           weight_decay=0.0)
+    cfg32 = opt.AdamWConfig(lr=1e-2, warmup=1, eightbit=False,
+                            weight_decay=0.0)
+    s8, s32 = opt.adamw_init(params, cfg8), opt.adamw_init(params, cfg32)
+    p8 = p32 = params
+    for i in range(5):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(i), (64, 64))}
+        p8, s8, _ = opt.adamw_update(p8, g, s8, cfg8)
+        p32, s32, _ = opt.adamw_update(p32, g, s32, cfg32)
+    diff = float(jnp.max(jnp.abs(p8["w"] - p32["w"])))
+    scale = float(jnp.max(jnp.abs(p32["w"] - params["w"])))
+    # 8-bit moments track within a fraction of the total update magnitude
+    assert diff < 0.25 * scale, (diff, scale)
+
+
+def test_grad_compression_error_feedback():
+    """int8-compressed grads with error feedback: the *accumulated* applied
+    gradient converges to the true accumulated gradient."""
+    g = {"w": jnp.asarray(np.random.default_rng(0)
+                          .standard_normal((32, 32)), jnp.float32)}
+    residual = opt.compress_init(g)
+    applied = jnp.zeros((32, 32))
+    for _ in range(20):
+        comp, residual = opt.compress_grads(g, residual)
+        deq = opt.decompress_grads(comp, g)
+        applied = applied + deq["w"]
+    true = 20 * g["w"]
+    rel = float(jnp.max(jnp.abs(applied - true)) / jnp.max(jnp.abs(true)))
+    assert rel < 0.02, rel           # error feedback keeps long-run bias ~0
+
+
+def test_q8_roundtrip_bound():
+    x = jnp.asarray(np.random.default_rng(3)
+                    .standard_normal(1000) * 5, jnp.float32)
+    q, s = opt._q8(x)
+    back = opt._dq8(q, s, x.shape)
+    blockmax = jnp.max(jnp.abs(x))
+    assert float(jnp.max(jnp.abs(back - x))) <= float(blockmax) / 127 + 1e-6

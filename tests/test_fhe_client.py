@@ -1,0 +1,61 @@
+"""FHE client pipeline: packing, batch encrypt/decrypt, seeded compression,
+noise budget, and the private-inference loop."""
+
+import numpy as np
+import pytest
+
+from repro.core import encryptor
+from repro.fhe_client.client import FHEClient, simulate_private_inference
+
+
+@pytest.fixture(scope="module")
+def client():
+    return FHEClient(profile="test")
+
+
+def test_pack_unpack_roundtrip(client):
+    rng = np.random.default_rng(0)
+    f = 100
+    x = rng.standard_normal((3, f))
+    z = client.pack(x)
+    assert z.shape == (3, client.ctx.params.n_slots)
+    np.testing.assert_allclose(client.unpack(z, f), x)
+
+
+def test_encrypt_decrypt_batch(client):
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((2, 64)) * 0.3
+    msgs = client.pack(x)
+    cts = client.encrypt_batch(msgs)
+    assert len(cts) == 2
+    two_limb = [encryptor.Ciphertext(c0=ct.c0[:2], c1=ct.c1[:2], n_limbs=2,
+                                     scale=ct.scale) for ct in cts]
+    z = client.decrypt_batch(two_limb)
+    got = client.unpack(z, 64)
+    np.testing.assert_allclose(got, x, atol=1e-5)
+
+
+def test_nonces_differ_across_batch(client):
+    """Two encryptions of the same message must differ (fresh randomness)."""
+    x = np.ones((2, 16)) * 0.1
+    cts = client.encrypt_batch(client.pack(x))
+    assert not np.array_equal(np.asarray(cts[0].c0), np.asarray(cts[1].c0))
+
+
+def test_seeded_compression_halves_traffic(client):
+    rep = client.upload_report(batch=4)
+    assert rep["compression"] > 1.9
+
+
+def test_private_inference_loop(client):
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((2, 32)) * 0.2
+
+    def serve_fn(xin):
+        return xin @ np.ones((32, 8), np.float32) * 0.1
+
+    y, stats = simulate_private_inference(client, serve_fn, x,
+                                          out_features=8)
+    assert stats["roundtrip_err"] < 1e-5
+    want = serve_fn(x.astype(np.float32))
+    np.testing.assert_allclose(y, want, atol=1e-3)

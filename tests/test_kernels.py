@@ -1,0 +1,206 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps, interpret=True.
+
+Every kernel is asserted bit-exact (integers) or allclose (df32 floats)
+against the pure-jnp/NumPy oracle across polynomial sizes, prime choices,
+batch shapes and block_rows tilings.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import ntt as nttmod
+from repro.core import fft as fftmod
+from repro.core import get_context, encode, encrypt, keygen
+from repro.core.primes import find_ntt_friendly_primes
+from repro.kernels import common, ntt_butterfly, ntt_matmul, ops, ref
+
+PRIMES = find_ntt_friendly_primes(p_bw=30, n_plus_1=17, count=6)
+
+
+# ---------------------------------------------------------------------------
+# butterfly NTT kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [256, 1024, 4096])
+@pytest.mark.parametrize("pi", [0, 3])
+@pytest.mark.parametrize("rows,block_rows", [(1, 1), (4, 2), (3, 1)])
+def test_butterfly_fwd_inv(n, pi, rows, block_rows):
+    plan = nttmod.make_plan(PRIMES[pi], n)
+    rng = np.random.default_rng(n + pi + rows)
+    x = rng.integers(0, plan.prime.q, size=(rows, n), dtype=np.uint32)
+    got = np.asarray(ntt_butterfly.ntt_rows(jnp.asarray(x), plan,
+                                            block_rows=block_rows))
+    want = np.asarray(ref.ntt_rows(x, plan))
+    np.testing.assert_array_equal(got, want)
+    back = np.asarray(ntt_butterfly.intt_rows(jnp.asarray(got), plan,
+                                              block_rows=block_rows))
+    np.testing.assert_array_equal(back, x)
+
+
+def test_butterfly_edge_values():
+    """q-1 (max residue) and 0 everywhere must survive the datapath."""
+    n = 256
+    plan = nttmod.make_plan(PRIMES[0], n)
+    q = plan.prime.q
+    for fill in (0, q - 1):
+        x = np.full((2, n), fill, np.uint32)
+        got = np.asarray(ntt_butterfly.ntt_rows(jnp.asarray(x), plan))
+        want = np.asarray(ref.ntt_rows(x, plan))
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# four-step MXU NTT kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [256, 1024, 2048])
+@pytest.mark.parametrize("pi", [0, 2])
+def test_fourstep_vs_ref_permutation(n, pi):
+    """Natural-order four-step output == bit-reversed ref output re-permuted."""
+    plan = nttmod.make_plan(PRIMES[pi], n)
+    rng = np.random.default_rng(n * 7 + pi)
+    x = rng.integers(0, plan.prime.q, size=(2, n), dtype=np.uint32)
+    got = np.asarray(ntt_matmul.ntt_rows_mm(jnp.asarray(x), plan))
+    brv = nttmod.bitrev_indices(n)
+    want = np.asarray(ref.ntt_rows(x, plan))[:, brv]
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n", [256, 1024])
+def test_fourstep_polymul_schoolbook(n):
+    """fwd -> pointwise -> inv == negacyclic schoolbook (domain-independent)."""
+    plan = nttmod.make_plan(PRIMES[1], n)
+    q = plan.prime.q
+    rng = np.random.default_rng(n)
+    a = rng.integers(0, q, size=(1, n), dtype=np.uint32)
+    b = rng.integers(0, q, size=(1, n), dtype=np.uint32)
+    ah = ntt_matmul.ntt_rows_mm(jnp.asarray(a), plan)
+    bh = ntt_matmul.ntt_rows_mm(jnp.asarray(b), plan)
+    from repro.core import modmul
+    bh_m = modmul.mulmod_montgomery_u64(
+        bh.astype(jnp.uint64), jnp.uint64(plan.mont.r2), plan.mont)
+    prod = modmul.mulmod_montgomery_u64(
+        ah.astype(jnp.uint64), bh_m, plan.mont).astype(jnp.uint32)
+    got = np.asarray(ntt_matmul.intt_rows_mm(prod, plan))[0]
+    want = nttmod.negacyclic_polymul_schoolbook(
+        a[0].astype(np.uint64), b[0].astype(np.uint64), q)
+    np.testing.assert_array_equal(got.astype(np.uint64), want)
+
+
+def test_balanced_digits_roundtrip():
+    rng = np.random.default_rng(3)
+    v = rng.integers(0, PRIMES[0].q, size=(64,), dtype=np.uint32)
+    digs = common.balanced_digits_jnp(jnp.asarray(v))
+    acc = np.zeros(64, np.int64)
+    for i, d in enumerate(digs):
+        acc += np.asarray(d, np.int64) << (8 * i)
+    np.testing.assert_array_equal(acc, v.astype(np.int64))
+    digs_np = common.balanced_digits_np(v)
+    for i in range(4):
+        np.testing.assert_array_equal(np.asarray(digs[i]), digs_np[i])
+
+
+# ---------------------------------------------------------------------------
+# df32 FFT kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [128, 512, 2048])
+@pytest.mark.parametrize("rows", [1, 3])
+def test_fft_kernel_vs_oracle(n, rows):
+    m = 4 * n
+    rng = np.random.default_rng(n + rows)
+    z = (rng.standard_normal((rows, n))
+         + 1j * rng.standard_normal((rows, n)))
+    got = ops.special_fft(z, m)
+    want = fftmod.special_fft(z, m)
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-9 * n)
+
+
+@pytest.mark.parametrize("n", [128, 512])
+def test_ifft_kernel_vs_oracle(n):
+    m = 4 * n
+    rng = np.random.default_rng(n)
+    z = (rng.standard_normal((2, n)) + 1j * rng.standard_normal((2, n)))
+    got = ops.special_ifft(z, m)
+    want = fftmod.special_ifft(z, m)
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-10)
+
+
+def test_fft_ifft_kernel_roundtrip():
+    n = 512
+    m = 4 * n
+    rng = np.random.default_rng(11)
+    z = rng.standard_normal((1, n)) + 1j * rng.standard_normal((1, n))
+    back = ops.special_fft(np.asarray(ops.special_ifft(z, m)), m)
+    np.testing.assert_allclose(back, z, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# fused streaming client kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return get_context("test")
+
+
+@pytest.fixture(scope="module")
+def keys(ctx):
+    return keygen(ctx)
+
+
+def test_encrypt_fused_matches_core(ctx, keys):
+    sk, pk = keys
+    rng = np.random.default_rng(0)
+    z = (rng.standard_normal(ctx.params.n_slots)
+         + 1j * rng.standard_normal(ctx.params.n_slots)) * 0.5
+    pt = encode(z, ctx)
+    from repro.core import encrypt as core_encrypt
+    ct = core_encrypt(pt, pk, ctx, nonce=0)
+    c0k, c1k = ops.encrypt_fused(pt.data, pk.b_mont, pk.a_mont, ctx,
+                                 nonce0=0)
+    np.testing.assert_array_equal(np.asarray(c0k), np.asarray(ct.c0))
+    np.testing.assert_array_equal(np.asarray(c1k), np.asarray(ct.c1))
+
+
+def test_fused_roundtrip_decrypts(ctx, keys):
+    """encrypt_fused -> decrypt_fused -> CRT -> FFT recovers the message."""
+    sk, pk = keys
+    rng = np.random.default_rng(5)
+    z = (rng.standard_normal(ctx.params.n_slots)
+         + 1j * rng.standard_normal(ctx.params.n_slots)) * 0.5
+    pt = encode(z, ctx)
+    c0, c1 = ops.encrypt_fused(pt.data, pk.b_mont, pk.a_mont, ctx, nonce0=3)
+    m_coeff = ops.decrypt_fused(c0[:2], c1[:2], sk.s_mont, ctx)
+    from repro.core import rns
+    v = rns.crt2_to_df(m_coeff[0].astype(jnp.uint64),
+                       m_coeff[1].astype(jnp.uint64),
+                       ctx.q_list[0], ctx.q_list[1])
+    coeffs = (np.asarray(v.hi) + np.asarray(v.lo)) / pt.scale
+    n = ctx.params.n
+    zc = coeffs[: n // 2] + 1j * coeffs[n // 2:]
+    z_got = fftmod.special_fft(zc, ctx.params.m)
+    np.testing.assert_allclose(z_got, z, atol=1e-4)
+
+
+def test_fused_batch(ctx, keys):
+    """Batched fused encrypt: each row uses its own nonce stream."""
+    sk, pk = keys
+    rng = np.random.default_rng(9)
+    batch = 3
+    zs = (rng.standard_normal((batch, ctx.params.n_slots))
+          + 1j * rng.standard_normal((batch, ctx.params.n_slots))) * 0.5
+    pts = [encode(zs[i], ctx) for i in range(batch)]
+    pt_stack = jnp.stack([p.data for p in pts])       # (B, L, N)
+    c0, c1 = ops.encrypt_fused(pt_stack, pk.b_mont, pk.a_mont, ctx,
+                               nonce0=10)
+    from repro.core import encrypt as core_encrypt
+    for i in range(batch):
+        ct = core_encrypt(pts[i], pk, ctx, nonce=10 + i)
+        np.testing.assert_array_equal(np.asarray(c0[i]), np.asarray(ct.c0))
+        np.testing.assert_array_equal(np.asarray(c1[i]), np.asarray(ct.c1))

@@ -1,0 +1,115 @@
+"""Unit + property tests for the eq.(8) prime family and the three modmul
+engines (paper §IV-A / Table I)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import modmul
+from repro.core.primes import (
+    NTTPrime,
+    find_ntt_friendly_primes,
+    is_prime,
+    primitive_2nth_root,
+)
+
+PRIMES = find_ntt_friendly_primes(p_bw=30, n_plus_1=17, count=32)
+CS = [modmul.MontgomeryConstants.make(p) for p in PRIMES[:8]]
+
+
+def test_prime_family_structure():
+    for p in PRIMES:
+        assert is_prime(p.q)
+        assert (p.q - 1) % (1 << 17) == 0, "must support N=2^16 negacyclic NTT"
+        assert p.q < 1 << 31
+        k = sum(s * (1 << e) for s, e in p.k_terms)
+        assert k == p.k
+        assert p.q == (1 << 30) + k * (1 << 17) + 1
+        assert p.max_ntt_logn() >= 16
+
+
+def test_eq11_closed_form():
+    # MontgomeryConstants.make asserts eq.(11) internally; touch all 32.
+    for p in PRIMES:
+        modmul.MontgomeryConstants.make(p)
+
+
+def test_primitive_root():
+    for p in PRIMES[:4]:
+        psi = primitive_2nth_root(p.q, 1 << 17)
+        assert pow(psi, 1 << 16, p.q) == p.q - 1
+        assert pow(psi, 1 << 17, p.q) == 1
+
+
+@pytest.mark.parametrize("c", CS, ids=lambda c: hex(c.q))
+def test_montgomery_u64_exact(c):
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, c.q, size=512, dtype=np.uint64)
+    b = rng.integers(0, c.q, size=512, dtype=np.uint64)
+    b_mont = modmul.to_mont_u64(jnp.asarray(b), c)
+    got = modmul.mulmod_montgomery_u64(jnp.asarray(a), b_mont, c)
+    want = (a.astype(object) * b.astype(object)) % c.q
+    np.testing.assert_array_equal(np.asarray(got).astype(object), want)
+
+
+@pytest.mark.parametrize("c", CS, ids=lambda c: hex(c.q))
+def test_limb_engines_agree(c):
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, c.q, size=2048, dtype=np.uint32)
+    b = rng.integers(0, c.q, size=2048, dtype=np.uint32)
+    want = (a.astype(np.uint64) * b.astype(np.uint64)) % np.uint64(c.q)
+
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    # Barrett: plain domain
+    got_b = modmul.mulmod_barrett_limb(aj, bj, c)
+    np.testing.assert_array_equal(np.asarray(got_b, dtype=np.uint64), want)
+    # Montgomery engines: put b in Montgomery form first
+    b_mont = jnp.asarray(
+        (b.astype(np.uint64) * ((1 << 32) % c.q)) % np.uint64(c.q), jnp.uint32
+    )
+    got_m = modmul.mulmod_montgomery_limb(aj, b_mont, c)
+    np.testing.assert_array_equal(np.asarray(got_m, dtype=np.uint64), want)
+    got_sa = modmul.mulmod_montgomery_sa_limb(aj, b_mont, c)
+    np.testing.assert_array_equal(np.asarray(got_sa, dtype=np.uint64), want)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=PRIMES[0].q - 1),
+    st.integers(min_value=0, max_value=PRIMES[0].q - 1),
+)
+def test_property_limb_vs_bigint(a, b):
+    c = CS[0]
+    want = (a * b) % c.q
+    b_mont = (b * ((1 << 32) % c.q)) % c.q
+    aj = jnp.asarray([a], jnp.uint32)
+    got = modmul.mulmod_montgomery_sa_limb(aj, jnp.asarray([b_mont], jnp.uint32), c)
+    assert int(got[0]) == want
+    got_b = modmul.mulmod_barrett_limb(aj, jnp.asarray([b], jnp.uint32), c)
+    assert int(got_b[0]) == want
+
+
+def test_op_cost_ordering():
+    oc = modmul.OP_COSTS
+    assert oc["ntt_friendly"]["mul"] < oc["montgomery"]["mul"] < oc["barrett"]["mul"]
+    # paper Table I: NTT-friendly saves 41.2% vs Montgomery, 67.7% vs Barrett
+    # (area). Multiplier-count analogue: 4/11 = 64% and 4/12 = 67% reductions.
+    assert oc["ntt_friendly"]["mul"] / oc["montgomery"]["mul"] < 0.6
+    assert oc["ntt_friendly"]["mul"] / oc["barrett"]["mul"] < 0.4
+
+
+def test_addmod_submod():
+    c = CS[0]
+    q = c.q
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, q, size=256, dtype=np.uint32)
+    b = rng.integers(0, q, size=256, dtype=np.uint32)
+    s = np.asarray(modmul.addmod(jnp.asarray(a), jnp.asarray(b), q))
+    d = np.asarray(modmul.submod(jnp.asarray(a), jnp.asarray(b), q))
+    np.testing.assert_array_equal(s, (a.astype(np.uint64) + b) % q)
+    np.testing.assert_array_equal(
+        d, (a.astype(np.int64) - b.astype(np.int64)) % q
+    )

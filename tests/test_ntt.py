@@ -1,0 +1,103 @@
+"""NTT/INTT correctness: roundtrip, schoolbook oracle, OTF twiddle seeds."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import ntt as nttmod
+from repro.core.primes import find_ntt_friendly_primes
+
+PRIMES = find_ntt_friendly_primes(p_bw=30, n_plus_1=17, count=8)
+
+
+@pytest.mark.parametrize("n", [16, 64, 256, 2048])
+@pytest.mark.parametrize("pi", [0, 3])
+def test_roundtrip(n, pi):
+    plan = nttmod.make_plan(PRIMES[pi], n)
+    rng = np.random.default_rng(n + pi)
+    a = rng.integers(0, plan.prime.q, size=(3, n), dtype=np.uint64)
+    ah = nttmod.ntt(jnp.asarray(a), plan)
+    back = nttmod.intt(ah, plan)
+    np.testing.assert_array_equal(np.asarray(back), a)
+
+
+@pytest.mark.parametrize("n", [8, 32, 128])
+def test_polymul_vs_schoolbook(n):
+    plan = nttmod.make_plan(PRIMES[0], n)
+    q = plan.prime.q
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, q, size=n, dtype=np.uint64)
+    b = rng.integers(0, q, size=n, dtype=np.uint64)
+    got = nttmod.negacyclic_polymul(jnp.asarray(a), jnp.asarray(b), plan)
+    want = nttmod.negacyclic_polymul_schoolbook(a, b, q)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_ntt_is_evaluation():
+    """NTT output (bit-reversed) must equal evaluation at psi^(2*brv(i)+1)."""
+    n = 32
+    plan = nttmod.make_plan(PRIMES[1], n)
+    q, psi = plan.prime.q, plan.psi
+    rng = np.random.default_rng(9)
+    a = rng.integers(0, q, size=n, dtype=np.uint64)
+    got = np.asarray(nttmod.ntt(jnp.asarray(a), plan))
+    brv = nttmod.bitrev_indices(n)
+    for i in range(n):
+        root = pow(psi, 2 * int(brv[i]) + 1, q)
+        want = sum(int(a[j]) * pow(root, j, q) for j in range(n)) % q
+        assert int(got[i]) == want
+
+
+@pytest.mark.parametrize("n", [64, 1024])
+def test_otf_seeds_regenerate_tables(n):
+    """The (base, step) seeds must regenerate every stage's twiddles —
+    the unified OTF TF Gen invariant (paper §IV-B)."""
+    plan = nttmod.make_plan(PRIMES[2], n)
+    q = plan.prime.q
+    r = (1 << 32) % q
+    logn = n.bit_length() - 1
+    psi_brv = (plan.psi_brv_mont * pow(pow(r, -1, q), 1, q)) % q  # un-Montgomery
+    for s in range(logn):
+        m = 1 << s
+        got = nttmod.stage_twiddles_np(
+            plan.seeds.fwd_base[s], plan.seeds.fwd_step[s], m, q
+        )
+        want = psi_brv[m:2 * m]
+        np.testing.assert_array_equal(got, want)
+
+
+def test_seed_memory_reduction():
+    """>99.9% on-chip memory reduction claim for the twiddle store."""
+    plan = nttmod.make_plan(PRIMES[0], 1 << 16)
+    assert plan.seeds.nbytes() / plan.table_nbytes() < 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=5))
+def test_property_linear(shift):
+    """NTT(a + b) == NTT(a) + NTT(b) and NTT(X^s * a) relation."""
+    n = 64
+    plan = nttmod.make_plan(PRIMES[0], n)
+    q = plan.prime.q
+    rng = np.random.default_rng(shift)
+    a = rng.integers(0, q, size=n, dtype=np.uint64)
+    b = rng.integers(0, q, size=n, dtype=np.uint64)
+    lhs = np.asarray(nttmod.ntt(jnp.asarray((a + b) % q), plan))
+    rhs = (
+        np.asarray(nttmod.ntt(jnp.asarray(a), plan)).astype(np.uint64)
+        + np.asarray(nttmod.ntt(jnp.asarray(b), plan))
+    ) % q
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+def test_multiplier_count_model():
+    # merging removes a column; higher radix reduces units monotonically
+    r2_unmerged = nttmod.mdc_multiplier_count(16, 8, 1, merged=False)
+    r2 = nttmod.mdc_multiplier_count(16, 8, 1, merged=True)
+    r4 = nttmod.mdc_multiplier_count(16, 8, 2, merged=True)
+    r2n = nttmod.mdc_multiplier_count(16, 8, 4, merged=True)
+    assert r2_unmerged > r2 >= r4 > r2n
+    assert nttmod.flowgraph_multiply_count(3, merged=True) == 12  # Fig. 4a

@@ -1,0 +1,71 @@
+"""Dual-RSC scheduler + analytic model invariants (paper Fig. 2b/5b/6b)."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scheduler import (ClientWorkload, HardwareModel, Job, Mode,
+                                  mode_at, schedule)
+
+
+def test_op_imbalance_order_of_magnitude():
+    w = ClientWorkload(logn=16, enc_limbs=24, dec_limbs=2)
+    assert w.op_ratio() > 5            # encrypt bundle dominates
+    assert 5 < w.op_ratio_fused() < 15  # paper reports ~10x
+
+
+def test_lane_knee_matches_paper():
+    hw = HardwareModel()               # LPDDR5 + 2 shared cores
+    w = ClientWorkload(logn=16)
+    sweep = hw.lane_sweep(w, lanes_list=(1, 2, 4, 8, 16, 32))
+    knee = next(p for p, _s, _c, bound in sweep if bound == "memory")
+    assert knee == 8                   # paper Fig. 5b: max useful P = 8
+    # throughput must stop improving at/after the knee
+    thr = [c for _p, _s, c, _b in sweep]
+    assert thr[4] / thr[3] < 1.1       # P=16 barely better than P=8
+
+
+def test_memory_ablation_ordering():
+    hw = HardwareModel()
+    abl = hw.memory_ablation(ClientWorkload(logn=16))
+    assert abl["base"] > abl["tf_gen"] > abl["all"]
+    assert 3.0 < abl["base"] / abl["all"] < 12.0   # paper: 8.2-9.3x
+
+
+def test_hbm_shifts_knee():
+    """On HBM-class bandwidth the P=8 cap disappears (TPU adaptation)."""
+    hw = HardwareModel(dram_gbps=819.0)
+    w = ClientWorkload(logn=16)
+    sweep = hw.lane_sweep(w, lanes_list=(8, 16, 32))
+    assert all(b == "compute" for _p, _s, _c, b in sweep)
+
+
+def test_schedule_two_cores_beat_one():
+    hw = HardwareModel()
+    w = ClientWorkload(logn=14)
+    jobs = [Job("enc")] * 10 + [Job("dec")] * 1
+    makespan, log = schedule(jobs, hw, w)
+    serial = sum(hw.job_seconds(w, j.kind == "enc") for j in jobs)
+    assert makespan < serial * 0.6     # near-2x from dual cores
+    assert mode_at(log, makespan / 2) in (Mode.ENC2, Mode.MIX)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_enc=st.integers(0, 20), n_dec=st.integers(0, 20))
+def test_schedule_invariants(n_enc, n_dec):
+    hw = HardwareModel()
+    w = ClientWorkload(logn=12)
+    jobs = [Job("enc")] * n_enc + [Job("dec")] * n_dec
+    makespan, log = schedule(jobs, hw, w)
+    serial = sum(hw.job_seconds(w, j.kind == "enc") for j in jobs)
+    assert len(log) == len(jobs)
+    # list scheduling bounds: serial/2 <= makespan <= serial
+    assert makespan <= serial + 1e-12
+    if jobs:
+        assert makespan >= serial / 2 - 1e-12
+    # no core runs two jobs at once
+    per_core: dict = {}
+    for kind, core, s, e in log:
+        for (s2, e2) in per_core.get(core, []):
+            assert e <= s2 or s >= e2
+        per_core.setdefault(core, []).append((s, e))

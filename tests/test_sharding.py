@@ -1,0 +1,86 @@
+"""Sharding rules: every parameter/batch/cache leaf gets a spec whose
+sharded dims divide evenly on the production meshes; specs place TP dims
+on 'model' and FSDP/EP dims on 'data' as designed."""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as sh
+from repro.models import model as M
+from repro.models.archs import ARCHS, get_arch, reduced_config
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 16 logical devices is enough to validate divisibility rules (4x4)
+    devs = np.asarray(jax.devices("cpu") * 16)[:16].reshape(4, 4)
+    from jax.sharding import Mesh
+    return Mesh(devs, ("data", "model"))
+
+
+def _check_divisible(leaf, spec, mesh):
+    for dim, axis in enumerate(spec):
+        if axis is None:
+            continue
+        names = (axis,) if isinstance(axis, str) else axis
+        n = int(np.prod([mesh.shape[a] for a in names]))
+        assert leaf.shape[dim] % n == 0, (leaf.shape, spec)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_specs_divide(name, mesh):
+    cfg = reduced_config(get_arch(name), d_model=256, vocab=512)
+    tp = mesh.shape["model"]
+    params = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0), tp=tp))
+    shardings = sh.param_shardings(params, mesh)
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_s = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "spec"))
+    assert len(flat_p) == len(flat_s)
+    for leaf, s in zip(flat_p, flat_s):
+        _check_divisible(leaf, s.spec, mesh)
+
+
+def test_matrix_rules(mesh):
+    """Column-parallel wq -> model on out dim; row-parallel wo -> model on
+    in dim; embeddings vocab -> model."""
+    cfg = reduced_config(get_arch("yi-34b"), d_model=256, vocab=512)
+    params = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0),
+                              tp=mesh.shape["model"]))
+    sp = sh.param_shardings(params, mesh)
+    assert sp["layers"]["attn"]["wq"].spec == P(None, "data", "model")
+    assert sp["layers"]["attn"]["wo"].spec == P(None, "model", "data")
+    assert sp["layers"]["mlp"]["wo"].spec == P(None, "model", "data")
+    assert sp["embed"]["tok"].spec == P("model", "data")
+
+
+def test_moe_expert_parallel(mesh):
+    cfg = reduced_config(get_arch("phi3.5-moe-42b-a6.6b"),
+                         d_model=256, vocab=512)
+    params = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0),
+                              tp=mesh.shape["model"]))
+    sp = sh.param_shardings(params, mesh)
+    spec = sp["layers"]["moe"]["wi"].spec
+    assert spec[1] == "data"           # experts -> EP over data
+    assert spec[3] == "model"          # expert d_ff -> TP
+
+
+def test_cache_specs(mesh):
+    cfg = get_arch("yi-34b")
+    cache = M.cache_spec(cfg, batch=128, cache_len=32768,
+                         tp=mesh.shape["model"])
+    cs = sh.cache_shardings(cache, mesh, cfg)
+    assert cs.k.spec[1] == "data"      # batch
+    assert cs.k.spec[2] == "model"     # sequence
+    # long-context: sequence over the whole mesh
+    cfg_h = get_arch("hymba-1.5b")
+    cache_l = M.cache_spec(cfg_h, batch=1, cache_len=524288,
+                           tp=mesh.shape["model"])
+    cl = sh.cache_shardings(cache_l, mesh, cfg_h, long_context=True)
+    assert cl.k.spec[2] == ("data", "model")
