@@ -19,8 +19,8 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core import (boot_precision_bits, decode, encode, get_context,
-                        keygen)
+from repro.core import (boot_precision_bits, decode, decode_coeff, encode,
+                        get_context, keygen)
 from repro.core.encryptor import Ciphertext
 from repro.kernels import ops as kops
 
@@ -57,15 +57,7 @@ def main():
 
     t0 = time.perf_counter()
     m_coeff = kops.decrypt_fused(ct2.c0, ct2.c1, sk.s_mont, ctx)
-    from repro.core import rns
-    from repro.core import fft as fftmod
-    import jax.numpy as jnp
-    v = rns.crt2_to_df(m_coeff[0].astype(jnp.uint64),
-                       m_coeff[1].astype(jnp.uint64),
-                       ctx.q_list[0], ctx.q_list[1])
-    coeffs = (np.asarray(v.hi) + np.asarray(v.lo)) / ct2.scale
-    zc = coeffs[: p.n // 2] + 1j * coeffs[p.n // 2:]
-    z_got = fftmod.special_fft(zc, p.m)
+    z_got = decode_coeff(m_coeff, ctx, scale=ct2.scale)
     t_decrypt = time.perf_counter() - t0
 
     prec = boot_precision_bits(z, z_got)

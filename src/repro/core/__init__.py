@@ -1,9 +1,18 @@
 """Core CKKS client-side library (the paper's contribution)."""
 
 from repro.core.context import CKKSContext, CKKSParams, PROFILES, get_context
-from repro.core.encoder import Plaintext, decode, encode, boot_precision_bits
+from repro.core.encoder import (
+    Plaintext,
+    PlaintextBatch,
+    decode,
+    decode_coeff,
+    encode,
+    encode_batch,
+    boot_precision_bits,
+)
 from repro.core.encryptor import (
     Ciphertext,
+    CiphertextBatch,
     PublicKey,
     SecretKey,
     decrypt,
@@ -15,7 +24,8 @@ from repro.core.encryptor import (
 
 __all__ = [
     "CKKSContext", "CKKSParams", "PROFILES", "get_context",
-    "Plaintext", "decode", "encode", "boot_precision_bits",
-    "Ciphertext", "PublicKey", "SecretKey",
+    "Plaintext", "PlaintextBatch", "decode", "decode_coeff", "encode",
+    "encode_batch", "boot_precision_bits",
+    "Ciphertext", "CiphertextBatch", "PublicKey", "SecretKey",
     "decrypt", "encrypt", "encrypt_symmetric_seeded", "expand_seeded", "keygen",
 ]

@@ -82,6 +82,14 @@ class CKKSContext:
     def n(self) -> int:
         return self.params.n
 
+    def stacked_plans(self, n_limbs: int | None = None) -> "nttmod.StackedPlans":
+        """Struct-of-arrays view of the first `n_limbs` plans: per-limb
+        (q, -q^-1, R^2, N^-1, twiddle tables) stacked along a limb axis so
+        the vectorized reference transforms and the limb-folded kernels run
+        the whole RNS stack in one pass."""
+        n_limbs = n_limbs if n_limbs is not None else self.params.n_limbs
+        return nttmod.stack_plans(self.plans[:n_limbs])
+
     def q_product(self, n_limbs: int) -> int:
         import math
         return math.prod(self.q_list[:n_limbs])

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import numpy as np
 import jax.numpy as jnp
 
 
@@ -48,10 +49,11 @@ def df_from(x, dtype=jnp.float32) -> DF:
 
 
 def df_const(value: float, dtype=jnp.float32) -> DF:
-    """Split a python float (f64) into a df constant of the target dtype."""
-    hi = jnp.asarray(value, dtype)
-    lo = jnp.asarray(value - float(hi), dtype)
-    return DF(hi, lo)
+    """Split a python float (f64) into a df constant of the target dtype.
+    The split happens in numpy so the function stays jit-traceable."""
+    hi = np.asarray(value, jnp.dtype(dtype))
+    lo = np.asarray(value - float(hi), jnp.dtype(dtype))
+    return DF(jnp.asarray(hi), jnp.asarray(lo))
 
 
 def two_sum(a, b):

@@ -33,33 +33,85 @@ class Plaintext:
     scale: float
 
 
+@dataclasses.dataclass
+class PlaintextBatch:
+    """Struct-of-arrays plaintext batch, NTT domain, (B, n_limbs, N) uint32.
+
+    The batch-major layout matches the limb-folded encrypt kernel's input
+    blocks; ``encode_batch`` produces it in one vectorized pass (batched
+    SpecialIFFT, broadcasted RNS reduction, stacked-limb NTT)."""
+
+    data: jnp.ndarray
+    n_limbs: int
+    scale: float
+
+
+def slots_to_coeffs(z, ctx: CKKSContext) -> np.ndarray:
+    """(..., n_slots) complex slots -> (..., N) float64 polynomial
+    coefficients (batched SpecialIFFT + real/imag unpacking)."""
+    p = ctx.params
+    z = np.asarray(z, dtype=np.complex128)
+    assert z.shape[-1] == p.n_slots
+    w = fftmod.special_ifft(z, p.m)
+    return np.concatenate([w.real, w.imag], axis=-1)
+
+
+def coeffs_to_plaintext_data(coeffs, ctx: CKKSContext, n_limbs: int):
+    """(..., N) float64 coefficients -> (L, ..., N) NTT-domain residues.
+    Pure jnp (jit-safe): Delta-scale + exact rounding + broadcasted RNS
+    reduction + stacked-limb NTT (one vectorized stage loop, all limbs)."""
+    p = ctx.params
+    hi, lo = dfl.two_prod(jnp.asarray(coeffs), jnp.float64(p.delta))
+    scaled = dfl.df_round(dfl.DF(hi, lo))
+    residues = rns.to_rns_df(scaled, ctx.q_list[:n_limbs])   # (L, ..., N)
+    return nttmod.ntt_stacked(residues, ctx.stacked_plans(n_limbs))
+
+
 def encode(z, ctx: CKKSContext, n_limbs: int | None = None) -> Plaintext:
     """z: (..., n_slots) complex -> Plaintext at `n_limbs` (default fresh)."""
     p = ctx.params
     n_limbs = n_limbs if n_limbs is not None else p.n_limbs
-    z = np.asarray(z, dtype=np.complex128)
-    assert z.shape[-1] == p.n_slots
-    w = fftmod.special_ifft(z, p.m)
-    coeffs = np.concatenate([w.real, w.imag], axis=-1)       # (..., N) float64
-    hi, lo = dfl.two_prod(jnp.asarray(coeffs), jnp.float64(p.delta))
-    scaled = dfl.df_round(dfl.DF(hi, lo))
-    residues = rns.to_rns_df(scaled, ctx.q_list[:n_limbs])   # (L, ..., N)
-    # NTT per limb
-    rows = [nttmod.ntt(residues[i], ctx.plans[i]) for i in range(n_limbs)]
-    return Plaintext(jnp.stack(rows), n_limbs, p.delta)
+    coeffs = slots_to_coeffs(z, ctx)                         # (..., N) float64
+    return Plaintext(coeffs_to_plaintext_data(coeffs, ctx, n_limbs),
+                     n_limbs, p.delta)
+
+
+def encode_batch(z, ctx: CKKSContext,
+                 n_limbs: int | None = None) -> PlaintextBatch:
+    """z: (B, n_slots) complex -> batch-major (B, L, N) PlaintextBatch."""
+    pt = encode(z, ctx, n_limbs)
+    return PlaintextBatch(jnp.swapaxes(pt.data, 0, 1), pt.n_limbs, pt.scale)
+
+
+def coeffs_to_slots(coeffs: np.ndarray, ctx: CKKSContext,
+                    scale) -> np.ndarray:
+    """(..., N) integer-valued float64 coefficients -> (..., n_slots) complex
+    slots: /Delta then batched SpecialFFT. `scale` may be a scalar or an
+    array broadcasting over the batch dims (per-ciphertext scales)."""
+    p = ctx.params
+    coeffs = np.asarray(coeffs) / scale                      # |v| < Q/2
+    n = p.n
+    zc = coeffs[..., : n // 2] + 1j * coeffs[..., n // 2:]
+    return fftmod.special_fft(zc, p.m)
+
+
+def decode_coeff(m_coeff, ctx: CKKSContext,
+                 scale=None) -> np.ndarray:
+    """Coefficient-domain decode: (2, ..., N) uint32 residues (post-INTT,
+    e.g. straight out of the fused decrypt kernel) -> (..., n_slots) slots
+    via two-limb CRT + SpecialFFT."""
+    p = ctx.params
+    scale = scale if scale is not None else p.delta
+    v = rns.crt2_to_df(m_coeff[0].astype(jnp.uint64),
+                       m_coeff[1].astype(jnp.uint64),
+                       ctx.q_list[0], ctx.q_list[1])
+    return coeffs_to_slots(np.asarray(v.hi) + np.asarray(v.lo), ctx, scale)
 
 
 def decode(pt_ntt, ctx: CKKSContext, scale: float | None = None) -> np.ndarray:
     """pt_ntt: (2, ..., N) uint32 NTT-domain residues -> (..., n_slots) complex."""
-    p = ctx.params
-    scale = scale if scale is not None else p.delta
-    c0 = nttmod.intt(pt_ntt[0], ctx.plans[0])
-    c1 = nttmod.intt(pt_ntt[1], ctx.plans[1])
-    v = rns.crt2_to_df(c0, c1, ctx.q_list[0], ctx.q_list[1])
-    coeffs = (np.asarray(v.hi) + np.asarray(v.lo)) / scale   # |v| < Q/2
-    n = p.n
-    zc = coeffs[..., : n // 2] + 1j * coeffs[..., n // 2:]
-    return fftmod.special_fft(zc, p.m)
+    coeff = nttmod.intt_stacked(pt_ntt[:2], ctx.stacked_plans(2))
+    return decode_coeff(coeff, ctx, scale)
 
 
 def boot_precision_bits(z_ref: np.ndarray, z_got: np.ndarray) -> float:

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
 import jax.numpy as jnp
 
 from repro.core import modmul, ntt as nttmod, prng
@@ -57,42 +58,95 @@ class Ciphertext:
     a_stream: int | None = None
 
 
+@dataclasses.dataclass
+class CiphertextBatch:
+    """Struct-of-arrays ciphertext batch: (B, L, N) residue stacks.
+
+    The batched client pipeline keeps whole batches on-device as two dense
+    arrays (the limb-folded kernels consume/produce exactly this layout);
+    ``list[Ciphertext]`` interop is provided via indexing/iteration, which
+    yield zero-copy per-row views.
+    """
+
+    c0: jnp.ndarray           # (B, L, N) NTT domain
+    c1: jnp.ndarray           # (B, L, N)
+    n_limbs: int
+    scale: float
+
+    def __len__(self) -> int:
+        return self.c0.shape[0]
+
+    def __getitem__(self, i: int) -> Ciphertext:
+        return Ciphertext(c0=self.c0[i], c1=self.c1[i],
+                          n_limbs=self.n_limbs, scale=self.scale)
+
+    def __iter__(self):
+        return (self[i] for i in range(len(self)))
+
+    def truncated(self, n_limbs: int) -> "CiphertextBatch":
+        """First `n_limbs` limbs (e.g. the 2-limb server-return view)."""
+        return CiphertextBatch(c0=self.c0[:, :n_limbs],
+                               c1=self.c1[:, :n_limbs],
+                               n_limbs=n_limbs, scale=self.scale)
+
+    @classmethod
+    def from_cts(cls, cts) -> "CiphertextBatch":
+        cts = list(cts)
+        if not cts:
+            raise ValueError("cannot build a CiphertextBatch from 0 "
+                             "ciphertexts")
+        if any(ct.scale != cts[0].scale for ct in cts):
+            raise ValueError("CiphertextBatch holds one shared scale; for "
+                             "mixed scales decode rows with a per-row "
+                             "scale array (FHEClient.decrypt_batch does)")
+        n_limbs = min(ct.n_limbs for ct in cts)
+        return cls(c0=jnp.stack([ct.c0[:n_limbs] for ct in cts]),
+                   c1=jnp.stack([ct.c1[:n_limbs] for ct in cts]),
+                   n_limbs=n_limbs, scale=cts[0].scale)
+
+
+# Stacked-limb helpers: per-limb constants broadcast as (L, 1, ...) arrays,
+# so every op below is a single vectorized pass over the whole (L, ..., N)
+# residue stack instead of a Python list-comprehension of per-limb calls.
+# Bit-identical per limb to the scalar-constant paths (same elementwise ops).
+
+
 def _small_poly_to_ntt(coeffs_i32, ctx: CKKSContext, n_limbs: int):
-    """Signed small polynomial -> per-limb NTT-domain residues (L, N)."""
-    rows = []
-    for i in range(n_limbs):
-        r = prng.signed_to_residue(coeffs_i32, ctx.q_list[i])
-        rows.append(nttmod.ntt(r, ctx.plans[i]))
-    return jnp.stack(rows)
+    """Signed small polynomial -> NTT-domain residues, all limbs at once.
+    coeffs_i32: (..., N) -> (L, ..., N)."""
+    sp = ctx.stacked_plans(n_limbs)
+    q = sp.q.astype(np.int64).reshape(
+        (n_limbs,) + (1,) * jnp.ndim(coeffs_i32))
+    r = prng.signed_to_residue(coeffs_i32[None], q)
+    return nttmod.ntt_stacked(r, sp)
 
 
 def _to_mont(x, ctx: CKKSContext, n_limbs: int):
-    rows = [
-        modmul.mulmod_montgomery_u64(x[i], jnp.uint64(ctx.plans[i].mont.r2),
-                                     ctx.plans[i].mont)
-        for i in range(n_limbs)
-    ]
-    return jnp.stack(rows)
+    sp = ctx.stacked_plans(n_limbs)
+    r2 = jnp.asarray(sp.bcast(sp.r2, x.ndim))
+    return modmul.mulmod_montgomery_u64_stacked(
+        x, r2, jnp.asarray(sp.bcast(sp.q, x.ndim)),
+        jnp.asarray(sp.bcast(sp.qinv_neg, x.ndim)))
 
 
 def _mont_mul(a, b_mont, ctx: CKKSContext, n_limbs: int):
-    rows = [
-        modmul.mulmod_montgomery_u64(a[i], b_mont[i], ctx.plans[i].mont)
-        for i in range(n_limbs)
-    ]
-    return jnp.stack(rows)
+    sp = ctx.stacked_plans(n_limbs)
+    return modmul.mulmod_montgomery_u64_stacked(
+        a, b_mont, jnp.asarray(sp.bcast(sp.q, a.ndim)),
+        jnp.asarray(sp.bcast(sp.qinv_neg, a.ndim)))
+
+
+def _q_rows(ctx, n_limbs, ndim):
+    sp = ctx.stacked_plans(n_limbs)
+    return jnp.asarray(sp.bcast(sp.q, ndim))
 
 
 def _addmod_rows(a, b, ctx, n_limbs):
-    return jnp.stack(
-        [modmul.addmod(a[i], b[i], ctx.q_list[i]) for i in range(n_limbs)]
-    )
+    return modmul.addmod(a, b, _q_rows(ctx, n_limbs, a.ndim))
 
 
 def _submod_rows(a, b, ctx, n_limbs):
-    return jnp.stack(
-        [modmul.submod(a[i], b[i], ctx.q_list[i]) for i in range(n_limbs)]
-    )
+    return modmul.submod(a, b, _q_rows(ctx, n_limbs, a.ndim))
 
 
 def keygen(ctx: CKKSContext, seed: int | None = None):

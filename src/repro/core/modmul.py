@@ -96,6 +96,21 @@ def mulmod_montgomery_u64(a, b_mont, c: MontgomeryConstants):
     return jnp.where(u >= c.q, u - jnp.uint64(c.q), u).astype(a.dtype)
 
 
+def mulmod_montgomery_u64_stacked(a, b_mont, q, qinv_neg):
+    """REDC on stacked limbs: per-limb constants come in as broadcastable
+    arrays instead of a single ``MontgomeryConstants``.
+
+    a, b_mont: (L, ..., N) operands (any unsigned dtype, values < 2^32);
+    q: (L, 1, ..., 1) uint64, qinv_neg: (L, 1, ..., 1) uint32. Bit-identical
+    per limb to ``mulmod_montgomery_u64`` with that limb's constants.
+    """
+    t = a.astype(U64) * b_mont.astype(U64)
+    m = (t.astype(U32) * qinv_neg.astype(U32)).astype(U64)   # mod 2^32
+    u = (t + m * q.astype(U64)) >> jnp.uint64(_R_BITS)
+    qq = q.astype(U64)
+    return jnp.where(u >= qq, u - qq, u).astype(a.dtype)
+
+
 def to_mont_u64(a, c: MontgomeryConstants):
     return mulmod_montgomery_u64(a, jnp.uint64(c.r2), c)
 
@@ -104,14 +119,26 @@ def from_mont_u64(a, c: MontgomeryConstants):
     return mulmod_montgomery_u64(a, jnp.uint64(1), c)
 
 
-def addmod(a, b, q: int):
-    qq = a.dtype.type(q)
+def _q_like(q, a):
+    """Modulus as an operand matching `a`'s dtype.
+
+    Accepts a Python/numpy int (the classic per-limb static case), a numpy /
+    jnp array of stacked per-limb moduli broadcasting against `a`, or a
+    traced scalar read from a kernel ref (the limb-folded grid case).
+    """
+    if isinstance(q, (int, np.integer)):
+        return a.dtype.type(q)
+    return q.astype(a.dtype)
+
+
+def addmod(a, b, q):
+    qq = _q_like(q, a)
     s = a + b
     return jnp.where(s >= qq, s - qq, s)
 
 
-def submod(a, b, q: int):
-    qq = a.dtype.type(q)
+def submod(a, b, q):
+    qq = _q_like(q, a)
     return jnp.where(a >= b, a - b, a + (qq - b))
 
 
@@ -188,6 +215,24 @@ def mulmod_montgomery_limb(a, b_mont, c: MontgomeryConstants):
     q = np.uint32(c.q)
     t_hi, t_lo = mul32x32(a, b_mont)                       # 4 mul
     m = mul32x32_lo(t_lo, np.uint32(c.qinv_neg))          # 3 mul
+    mq_hi, _mq_lo = mul32x32(m, q)                         # 4 mul
+    u = t_hi + mq_hi + (t_lo != 0).astype(U32)
+    return jnp.where(u >= q, u - q, u)
+
+
+def mulmod_montgomery_limb_t(a, b_mont, q, qinv_neg):
+    """Montgomery REDC on 32-bit limbs with *traced* per-limb constants.
+
+    The limb-folded Pallas kernels run all limbs through one grid, so q and
+    -q^{-1} mod 2^32 arrive as scalar reads from the stacked-constants ref
+    rather than Python closure ints. The shift-add specialization of
+    ``mulmod_montgomery_sa_limb`` needs static k-term exponents and cannot be
+    traced, but REDC's output is the same for any correct (q, qinv_neg) pair:
+    m = t_lo * (-q^{-1}) mod 2^32 and u = (t + m*q) >> 32 are computed here
+    with general 16-bit-limb multiplies, giving bit-identical results.
+    """
+    t_hi, t_lo = mul32x32(a, b_mont)                       # 4 mul
+    m = mul32x32_lo(t_lo, qinv_neg)                        # 3 mul
     mq_hi, _mq_lo = mul32x32(m, q)                         # 4 mul
     u = t_hi + mq_hi + (t_lo != 0).astype(U32)
     return jnp.where(u >= q, u - q, u)

@@ -203,6 +203,117 @@ def intt(a, plan: NTTPlan):
     return modmul.mulmod_montgomery_u64(x, jnp.uint64(plan.n_inv_mont), c)
 
 
+# ---------------------------------------------------------------------------
+# Stacked-limb reference transforms (one vectorized pass over all RNS limbs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedPlans:
+    """Per-limb constants of several same-N plans stacked into arrays.
+
+    This is the struct-of-arrays analogue of ``list[NTTPlan]``: the limb axis
+    becomes a leading array dimension so the whole RNS stack runs through one
+    vectorized stage loop (or one limb-folded kernel grid) instead of a
+    Python loop of per-limb calls.
+    """
+
+    n: int
+    logn: int
+    n_limbs: int
+    q: np.ndarray                   # (L,) uint64
+    qinv_neg: np.ndarray            # (L,) uint32   (-q^{-1} mod 2^32)
+    r2: np.ndarray                  # (L,) uint64   (R^2 mod q)
+    n_inv_mont: np.ndarray          # (L,) uint64
+    psi_brv_mont: np.ndarray        # (L, N) uint64
+    psi_inv_brv_mont: np.ndarray    # (L, N) uint64
+
+    def bcast(self, arr_1d: np.ndarray, ndim: int):
+        """(L,) -> (L, 1, ..., 1) for broadcasting against (L, ..., N)."""
+        return arr_1d.reshape((self.n_limbs,) + (1,) * (ndim - 1))
+
+
+_STACKED_MEMO: dict[tuple[int, ...], StackedPlans] = {}
+
+
+def stack_plans(plans) -> StackedPlans:
+    """Memoised by plan identities (plans come from the lru-cached
+    ``make_plan``, so identity is stable per (prime, N))."""
+    key = tuple(id(p) for p in plans)
+    cached = _STACKED_MEMO.get(key)
+    if cached is not None:
+        return cached
+    n = plans[0].n
+    assert all(p.n == n for p in plans)
+    sp = StackedPlans(
+        n=n,
+        logn=n.bit_length() - 1,
+        n_limbs=len(plans),
+        q=np.array([p.prime.q for p in plans], np.uint64),
+        qinv_neg=np.array([p.mont.qinv_neg for p in plans], np.uint32),
+        r2=np.array([p.mont.r2 for p in plans], np.uint64),
+        n_inv_mont=np.array([p.n_inv_mont for p in plans], np.uint64),
+        psi_brv_mont=np.stack([p.psi_brv_mont for p in plans]),
+        psi_inv_brv_mont=np.stack([p.psi_inv_brv_mont for p in plans]),
+    )
+    _STACKED_MEMO[key] = sp
+    return sp
+
+
+def ntt_stacked(a, sp: StackedPlans):
+    """Forward negacyclic NTT of all limbs at once. a: (L, ..., N) residues
+    (uint32 or uint64) -> same shape, bit-reversed order per limb.
+    Bit-identical per limb to ``ntt(a[i], plans[i])``."""
+    n = sp.n
+    batch = a.shape[1:-1]
+    L = sp.n_limbs
+    psi = jnp.asarray(sp.psi_brv_mont)
+    q = jnp.asarray(sp.q).reshape((L,) + (1,) * (len(batch) + 2))
+    qinv = jnp.asarray(sp.qinv_neg).reshape(q.shape)
+    x = a.reshape((L,) + batch + (1, n))
+    m, t = 1, n
+    while m < n:
+        t //= 2
+        x = x.reshape((L,) + batch + (m, 2, t))
+        s = psi[:, m:2 * m].reshape((L,) + (1,) * len(batch) + (m, 1))
+        u = x[..., 0, :]
+        v = modmul.mulmod_montgomery_u64_stacked(x[..., 1, :], s, q, qinv)
+        x = jnp.stack([modmul.addmod(u, v, q), modmul.submod(u, v, q)],
+                      axis=-2)
+        x = x.reshape((L,) + batch + (2 * m, t))
+        m *= 2
+    return x.reshape((L,) + batch + (n,))
+
+
+def intt_stacked(a, sp: StackedPlans):
+    """Inverse negacyclic NTT of all limbs at once (bit-reversed input,
+    in-order output, N^-1 folded in). Bit-identical per limb to ``intt``."""
+    n = sp.n
+    batch = a.shape[1:-1]
+    L = sp.n_limbs
+    psi_inv = jnp.asarray(sp.psi_inv_brv_mont)
+    q = jnp.asarray(sp.q).reshape((L,) + (1,) * (len(batch) + 2))
+    qinv = jnp.asarray(sp.qinv_neg).reshape(q.shape)
+    x = a.reshape((L,) + batch + (n, 1))
+    h, t = n // 2, 1
+    while h >= 1:
+        x = x.reshape((L,) + batch + (h, 2, t))
+        s = psi_inv[:, h:2 * h].reshape((L,) + (1,) * len(batch) + (h, 1))
+        u, v = x[..., 0, :], x[..., 1, :]
+        even = modmul.addmod(u, v, q)
+        odd = modmul.mulmod_montgomery_u64_stacked(
+            modmul.submod(u, v, q), s, q, qinv)
+        x = jnp.concatenate([even, odd], axis=-1)
+        x = x.reshape((L,) + batch + (h, 2 * t))
+        t *= 2
+        h //= 2
+    x = x.reshape((L,) + batch + (n,))
+    qf = jnp.asarray(sp.q).reshape((L,) + (1,) * len(batch) + (1,))
+    qinvf = jnp.asarray(sp.qinv_neg).reshape(qf.shape)
+    ninv = jnp.asarray(sp.n_inv_mont).reshape(qf.shape)
+    return modmul.mulmod_montgomery_u64_stacked(x, ninv, qf, qinvf)
+
+
 def negacyclic_polymul(a, b, plan: NTTPlan):
     """(a * b) mod (X^N + 1, q) through the transform domain."""
     c = plan.mont

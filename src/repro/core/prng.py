@@ -148,7 +148,8 @@ def cbd(seed128: int, stream: int, n: int, eta: int = 21):
             - _popcount21(b).astype(jnp.int32))
 
 
-def signed_to_residue(x, q: int):
-    """int32 in (-q, q) -> uint32 residue in [0, q)."""
-    qq = jnp.int64(q)
+def signed_to_residue(x, q):
+    """int32 in (-q, q) -> uint32 residue in [0, q). `q` may be a scalar or
+    a broadcastable array of stacked per-limb moduli."""
+    qq = jnp.asarray(q, jnp.int64)
     return ((x.astype(jnp.int64) % qq + qq) % qq).astype(U32)

@@ -24,15 +24,18 @@ def to_rns_df(x: dfl.DF, q_list: tuple[int, ...]) -> jnp.ndarray:
     hi and lo are integer-valued float64 with |lo| <= ulp(hi)/2; fmod of an
     integer-valued double by q < 2^31 is exact, so each limb residue is an
     exact function of the true integer hi + lo.
+
+    The limb loop is a single broadcasted pass: q_list becomes a (L, 1, ...)
+    array against (…,)-shaped hi/lo, producing all residues at once (the
+    batched-client SoA layout). Elementwise fmod is unchanged, so results
+    stay bit-identical to the per-limb loop.
     """
-    outs = []
-    for q in q_list:
-        qf = jnp.float64(q)
-        r = jnp.fmod(x.hi, qf) + jnp.fmod(x.lo, qf)   # in (-2q, 2q)
-        r = jnp.fmod(r, qf)
-        r = jnp.where(r < 0, r + qf, r)
-        outs.append(r.astype(jnp.uint32))
-    return jnp.stack(outs)
+    qf = jnp.asarray(np.asarray(q_list, np.float64).reshape(
+        (len(q_list),) + (1,) * jnp.ndim(x.hi)))
+    r = jnp.fmod(x.hi[None], qf) + jnp.fmod(x.lo[None], qf)   # in (-2q, 2q)
+    r = jnp.fmod(r, qf)
+    r = jnp.where(r < 0, r + qf, r)
+    return r.astype(jnp.uint32)
 
 
 def crt2_to_df(c0, c1, q0: int, q1: int) -> dfl.DF:

@@ -9,8 +9,13 @@ This module glues the CKKS core to the LM substrate:
 
   * messages are model activations (e.g. prompt embeddings of width d_model)
     packed into CKKS slot vectors (n_slots = N/2 complex = N real values);
-  * a batch of messages is encrypted with the FUSED streaming kernels
-    (PRNG + NTT + pointwise in one pass per limb — the RSC datapath);
+  * a batch of messages travels as struct-of-arrays (B, L, N) residue stacks
+    (``CiphertextBatch``) and is encrypted with the FUSED limb-folded
+    streaming kernels — PRNG + NTT + pointwise in ONE pallas_call for the
+    whole batch (the RSC datapath with the limb loop in the Pallas grid);
+  * the device-side pipeline (Delta-scale, RNS, stacked-limb NTT, fused
+    kernels, CRT) is jit-compiled end to end; only the complex128
+    SpecialFFT/IFFT stays on the host (the CPU oracle datapath);
   * on a mesh, ciphertext batches shard over the flattened device axis
     (each device runs its own RSC-equivalent stream; the dual-RSC scheduler
     generalises to device groups).
@@ -22,14 +27,14 @@ the paper's on-chip `a`-regeneration trick.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import encoder, encryptor, fft as fftmod, rns
+from repro.core import encoder, encryptor, rns
 from repro.core.context import CKKSContext, get_context
+from repro.core.encryptor import CiphertextBatch
 from repro.kernels import ops as kops
 
 
@@ -47,6 +52,10 @@ class FHEClient:
         sk, pk = encryptor.keygen(self.ctx, seed=seed)
         self.keys = ClientKeys(sk, pk)
         self._nonce = 0
+        # jit-compiled device cores (shape-polymorphic via retrace-per-B;
+        # the nonce base is a traced operand so fresh nonces never retrace).
+        self._encrypt_core = jax.jit(self._encrypt_core_impl)
+        self._decrypt_core = jax.jit(self._decrypt_core_impl)
 
     # --- message packing ----------------------------------------------------
 
@@ -74,38 +83,74 @@ class FHEClient:
         buf = np.concatenate([z.real, z.imag], axis=-1)  # (B*k, cap)
         return buf.reshape(b, k * cap)[:, :f]
 
-    # --- encrypt / decrypt (fused streaming kernels) -------------------------
+    # --- batched encode+encrypt / decrypt+decode (fused streaming kernels) --
 
-    def encrypt_batch(self, messages: np.ndarray):
-        """(B, n_slots) complex -> list of ciphertexts (fused kernel path)."""
-        b = messages.shape[0]
-        pts = [encoder.encode(messages[i], self.ctx) for i in range(b)]
-        pt_stack = jnp.stack([p.data for p in pts])
+    def _encrypt_core_impl(self, coeffs, nonce0):
+        """(B, N) float64 slot-IFFT coefficients -> (c0, c1) (B, L, N).
+        Jit-traced: Delta-scale + RNS + stacked-limb NTT + ONE folded
+        encrypt pallas_call."""
+        ctx = self.ctx
+        L = ctx.params.n_limbs
+        residues = encoder.coeffs_to_plaintext_data(coeffs, ctx, L)
+        pt = jnp.swapaxes(residues, 0, 1)                 # (B, L, N)
+        return kops.encrypt_fused(pt, self.keys.pk.b_mont,
+                                  self.keys.pk.a_mont, ctx, nonce0=nonce0)
+
+    def _decrypt_core_impl(self, c0, c1):
+        """(B, 2, N) ciphertext stacks -> exact df64 CRT coefficients.
+        Jit-traced: ONE folded decrypt pallas_call + two-limb CRT."""
+        ctx = self.ctx
+        m = kops.decrypt_fused(c0, c1, self.keys.sk.s_mont, ctx)
+        v = rns.crt2_to_df(m[:, 0].astype(jnp.uint64),
+                           m[:, 1].astype(jnp.uint64),
+                           ctx.q_list[0], ctx.q_list[1])
+        return v.hi, v.lo
+
+    def encode_encrypt_batch(self, messages: np.ndarray) -> CiphertextBatch:
+        """(B, n_slots) complex messages -> CiphertextBatch (B, L, N).
+
+        Host work is a single batched SpecialIFFT; everything after runs in
+        the jitted device core with one fused kernel launch for the batch.
+        """
+        p = self.ctx.params
+        if np.shape(messages)[0] == 0:
+            raise ValueError("encode_encrypt_batch needs a non-empty batch")
+        coeffs = encoder.slots_to_coeffs(messages, self.ctx)  # (B, N) f64
         nonce0 = self._nonce
-        self._nonce += b
-        c0, c1 = kops.encrypt_fused(
-            pt_stack, self.keys.pk.b_mont, self.keys.pk.a_mont, self.ctx,
-            nonce0=nonce0)
-        return [encryptor.Ciphertext(c0=c0[i], c1=c1[i],
-                                     n_limbs=self.ctx.params.n_limbs,
-                                     scale=pts[i].scale)
-                for i in range(b)]
+        self._nonce += coeffs.shape[0]
+        c0, c1 = self._encrypt_core(
+            jnp.asarray(coeffs), jnp.uint32(nonce0))
+        return CiphertextBatch(c0=c0, c1=c1, n_limbs=p.n_limbs,
+                               scale=p.delta)
+
+    def decrypt_decode_batch(self, cts: CiphertextBatch) -> np.ndarray:
+        """CiphertextBatch (server-returned view; first 2 limbs are used)
+        -> (B, n_slots) complex messages."""
+        hi, lo = self._decrypt_core(cts.c0[:, :2], cts.c1[:, :2])
+        return encoder.coeffs_to_slots(np.asarray(hi) + np.asarray(lo),
+                                       self.ctx, cts.scale)
+
+    # --- list[Ciphertext] interop (legacy per-ciphertext protocol) ----------
+
+    def encrypt_batch(self, messages: np.ndarray) -> list:
+        """(B, n_slots) complex -> list of ciphertexts (fused kernel path).
+        Thin wrapper over ``encode_encrypt_batch``; rows are views into the
+        batch arrays."""
+        return list(self.encode_encrypt_batch(messages))
 
     def decrypt_batch(self, cts) -> np.ndarray:
-        """Server-returned (2-limb) ciphertexts -> (B, n_slots) complex."""
+        """Server-returned (2-limb) ciphertexts -> (B, n_slots) complex.
+        Accepts a CiphertextBatch or a list of Ciphertexts; list rows may
+        carry per-ciphertext scales (e.g. different rescale depths)."""
+        if isinstance(cts, CiphertextBatch):
+            return self.decrypt_decode_batch(cts)
+        cts = list(cts)
         c0 = jnp.stack([ct.c0[:2] for ct in cts])
         c1 = jnp.stack([ct.c1[:2] for ct in cts])
-        m_coeff = kops.decrypt_fused(c0, c1, self.keys.sk.s_mont, self.ctx)
-        out = []
-        p = self.ctx.params
-        for i in range(len(cts)):
-            v = rns.crt2_to_df(m_coeff[i, 0].astype(jnp.uint64),
-                               m_coeff[i, 1].astype(jnp.uint64),
-                               self.ctx.q_list[0], self.ctx.q_list[1])
-            coeffs = (np.asarray(v.hi) + np.asarray(v.lo)) / cts[i].scale
-            zc = coeffs[: p.n // 2] + 1j * coeffs[p.n // 2:]
-            out.append(fftmod.special_fft(zc, p.m))
-        return np.stack(out)
+        hi, lo = self._decrypt_core(c0, c1)
+        scale = np.array([ct.scale for ct in cts])[:, None]
+        return encoder.coeffs_to_slots(np.asarray(hi) + np.asarray(lo),
+                                       self.ctx, scale)
 
     # --- traffic accounting (paper Table/figs analogues) ---------------------
 
@@ -130,21 +175,17 @@ def simulate_private_inference(client: FHEClient, serve_fn, x: np.ndarray,
     result -> decrypt. `serve_fn`: (B, F) -> (B, out_features) plaintext
     model function standing in for the FHE server."""
     msgs = client.pack(x)
-    cts = client.encrypt_batch(msgs)
+    cts = client.encode_encrypt_batch(msgs)
 
     # --- server boundary (simulated; see module docstring) -----------------
-    served_inputs = client.decrypt_batch(
-        [encryptor.Ciphertext(c0=ct.c0[:2], c1=ct.c1[:2], n_limbs=2,
-                              scale=ct.scale) for ct in cts])
+    served_inputs = client.decrypt_decode_batch(cts.truncated(2))
     x_rec = client.unpack(served_inputs, x.shape[1])
     y = serve_fn(x_rec.astype(np.float32))
     y_msgs = client.pack(y.astype(np.float64))
-    y_cts = client.encrypt_batch(y_msgs)
+    y_cts = client.encode_encrypt_batch(y_msgs)
     # ------------------------------------------------------------------------
 
-    y_dec = client.decrypt_batch(
-        [encryptor.Ciphertext(c0=ct.c0[:2], c1=ct.c1[:2], n_limbs=2,
-                              scale=ct.scale) for ct in y_cts])
+    y_dec = client.decrypt_decode_batch(y_cts.truncated(2))
     return client.unpack(y_dec, out_features), {
         "roundtrip_err": float(np.max(np.abs(x_rec - x))),
     }

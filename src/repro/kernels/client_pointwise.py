@@ -13,10 +13,20 @@ ABC-FHE_All configuration (Fig. 6b). The Philox streams match the host-side
 ``repro.core.prng`` bit-for-bit, so fused ciphertexts decrypt with the
 reference path and vice versa.
 
-Grid = (batch,); one grid step processes one ciphertext row for one limb.
-Per-limb constants (q, k-terms, twiddle seeds, PRNG stream ids) are static,
-so ``ops.py`` emits one pallas_call per limb — the limb loop is also where
-multi-device sharding splits (limbs are independent until CRT).
+Two launch shapes are provided:
+
+  * per-limb (``encrypt_limb``/``decrypt_limb``): grid = (batch,), per-limb
+    constants baked statically into the kernel closure — the reference
+    oracle, one pallas_call per limb;
+  * limb-folded (``encrypt_limbs``/``decrypt_limbs``): grid = (L, batch),
+    per-limb constants (q, -q^-1, OTF twiddle seed/step scalars, N^-1)
+    streamed from a stacked (L, K) SMEM table — ONE pallas_call for the
+    whole (B, L, N) batch, the hot path of the batched client pipeline.
+
+Both are bit-identical (the folded REDC uses traced general multiplies in
+place of static shift-add k-terms; see ``modmul.mulmod_montgomery_limb_t``).
+Limbs remain independent until CRT, so multi-device sharding can still
+split the leading grid axis.
 """
 
 from __future__ import annotations
@@ -42,15 +52,18 @@ from repro.kernels import common
 # ---------------------------------------------------------------------------
 
 
-def _random_u32_k(seed128: int, stream, n: int, word: int):
-    """One (1, n) uint32 Philox draw; `stream` may be a traced scalar.
+def _random_u32_k(seed128: int, stream, n: int, word: int, rows: int = 1):
+    """(rows, n) uint32 Philox draw; `stream` may be a traced scalar (one
+    stream for every row) or a traced (rows, 1) column (one stream per row,
+    the batch-blocked kernels).
 
-    Bit-identical to ``prng.random_u32`` (same counter layout), but built
-    from numpy-literal key material and a 2D iota so Pallas captures nothing.
+    Bit-identical per row to ``prng.random_u32`` (same counter layout), but
+    built from numpy-literal key material and a 2D iota so Pallas captures
+    nothing.
     """
     parts = [np.uint32((seed128 >> (32 * i)) & 0xFFFFFFFF) for i in range(4)]
     key = (parts[0], parts[1])
-    idx = jax.lax.broadcasted_iota(jnp.uint32, (1, n), 1)
+    idx = jax.lax.broadcasted_iota(jnp.uint32, (rows, n), 1)
     z = jnp.zeros_like(idx)
     ctr = (
         idx,
@@ -61,23 +74,25 @@ def _random_u32_k(seed128: int, stream, n: int, word: int):
     return prng.philox_4x32(ctr, key)[0]
 
 
-def _zo_k(seed128: int, stream, n: int):
-    u = _random_u32_k(seed128, stream, n, 0)
+def _zo_k(seed128: int, stream, n: int, rows: int = 1):
+    u = _random_u32_k(seed128, stream, n, 0, rows)
     return jnp.where(
         u < np.uint32(1 << 30), jnp.int32(1),
         jnp.where(u < np.uint32(1 << 31), jnp.int32(-1), jnp.int32(0)))
 
 
-def _cbd_k(seed128: int, stream, n: int):
-    a = _random_u32_k(seed128, stream, n, 0)
-    b = _random_u32_k(seed128, stream, n, 1)
+def _cbd_k(seed128: int, stream, n: int, rows: int = 1):
+    a = _random_u32_k(seed128, stream, n, 0, rows)
+    b = _random_u32_k(seed128, stream, n, 1, rows)
     return (prng._popcount21(a).astype(jnp.int32)
             - prng._popcount21(b).astype(jnp.int32))
 
 
-def _to_residue_k(x, q: int):
-    """Signed int32 in (-q, q) -> uint32 residue, no 64-bit ops."""
-    return jnp.where(x < 0, x + np.int32(q), x).astype(jnp.uint32)
+def _to_residue_k(x, q):
+    """Signed int32 in (-q, q) -> uint32 residue, no 64-bit ops. `q` may be
+    a Python int or a traced uint32 scalar (limb-folded kernels)."""
+    qi = np.int32(q) if isinstance(q, (int, np.integer)) else q.astype(jnp.int32)
+    return jnp.where(x < 0, x + qi, x).astype(jnp.uint32)
 
 
 # ---------------------------------------------------------------------------
@@ -155,3 +170,128 @@ def decrypt_limb(c0_l, c1_l, s_mont_l, ctx: CKKSContext, limb: int,
         interpret=interpret,
     )
     return call(c0_l, c1_l, s_mont_l.reshape(1, n))
+
+
+# ---------------------------------------------------------------------------
+# Limb-folded fused kernels: grid = (L, B/bb), ONE pallas_call per batch
+# ---------------------------------------------------------------------------
+# The per-limb launches above are kept as the reference oracle; the folded
+# variants below stream the per-limb constants from a (L, K) SMEM table
+# (common.stacked_kernel_consts) and the nonce base from a (1, 1) SMEM
+# scalar, so one launch covers the whole (B, L, N) batch. Each grid step
+# owns a (bb, N) *block* of batch rows (default: the whole batch), running
+# the PRNG, NTT stages and pointwise algebra vectorized across rows — the
+# batching win on top of the launch-count win. Philox streams depend only
+# on (seed, nonce = nonce0 + batch_idx), never on the limb, so row r of
+# block b regenerates exactly the randomness the reference path samples
+# for ciphertext b*bb + r — bit-identical outputs.
+
+
+def _encrypt_kernel_folded(c_ref, nz_ref, pt_ref, b_ref, a_ref,
+                           c0_ref, c1_ref, *,
+                           kc: common.StackedKernelConsts, seed: int):
+    n = kc.n
+    rows = pt_ref.shape[0]
+    q = c_ref[0, common.OFF_Q]
+    qinv = c_ref[0, common.OFF_QINV]
+    nonce = (nz_ref[0, 0]
+             + pl.program_id(1).astype(jnp.uint32) * np.uint32(rows)
+             + jax.lax.broadcasted_iota(jnp.uint32, (rows, 1), 0))
+    sv = np.uint32(STREAM_ENC_V) + np.uint32(16) * nonce     # (rows, 1)
+    s0 = np.uint32(STREAM_ENC_E0) + np.uint32(16) * nonce
+    s1 = np.uint32(STREAM_ENC_E1) + np.uint32(16) * nonce
+
+    v = _to_residue_k(_zo_k(seed, sv, n, rows), q)
+    e0 = _to_residue_k(_cbd_k(seed, s0, n, rows), q)
+    e1 = _to_residue_k(_cbd_k(seed, s1, n, rows), q)
+
+    v_h = common.ntt_stages_t(v, c_ref, kc, q, qinv)
+    e0_h = common.ntt_stages_t(e0, c_ref, kc, q, qinv)
+    e1_h = common.ntt_stages_t(e1, c_ref, kc, q, qinv)
+
+    vb = modmul.mulmod_montgomery_limb_t(v_h, b_ref[...], q, qinv)
+    va = modmul.mulmod_montgomery_limb_t(v_h, a_ref[...], q, qinv)
+    c0_ref[:, 0, :] = modmul.addmod(
+        modmul.addmod(vb, e0_h, q), pt_ref[:, 0, :], q)
+    c1_ref[:, 0, :] = modmul.addmod(va, e1_h, q)
+
+
+def _batch_block(batch: int, batch_block: int | None) -> int:
+    if batch_block is None:
+        return batch                      # whole batch per grid step
+    bb = min(batch_block, batch)
+    return bb if batch % bb == 0 else 1
+
+
+def encrypt_limbs(pt, b_mont, a_mont, ctx: CKKSContext, seed: int,
+                  nonce0=0, batch_block: int | None = None,
+                  interpret: bool = True):
+    """Fused encrypt of a whole batch, all limbs in ONE pallas_call.
+
+    pt: (B, L, N) uint32 NTT-domain plaintext; b_mont/a_mont: (L, N) public
+    key rows. nonce0 may be a Python int or a traced uint32 scalar/array
+    (jit-friendly: changing the nonce base does not retrace). batch_block
+    bounds the rows processed per grid step (None = whole batch; pass a
+    divisor of B to cap the VMEM working set on real TPUs).
+    Returns (c0, c1), each (B, L, N).
+    """
+    batch, n_limbs, n = pt.shape
+    bb = _batch_block(batch, batch_block)
+    kc = common.stacked_kernel_consts(ctx.plans[:n_limbs])
+    nz = jnp.asarray(nonce0, jnp.uint32).reshape(1, 1)
+    cspec = pl.BlockSpec((1, kc.n_scalars), lambda l, b: (l, 0),
+                         memory_space=pltpu.SMEM)
+    nzspec = pl.BlockSpec((1, 1), lambda l, b: (0, 0),
+                          memory_space=pltpu.SMEM)
+    dspec = pl.BlockSpec((bb, 1, n), lambda l, b: (b, l, 0),
+                         memory_space=pltpu.VMEM)
+    kspec = pl.BlockSpec((1, n), lambda l, b: (l, 0),
+                         memory_space=pltpu.VMEM)
+    shape = jax.ShapeDtypeStruct((batch, n_limbs, n), jnp.uint32)
+    call = pl.pallas_call(
+        functools.partial(_encrypt_kernel_folded, kc=kc, seed=seed),
+        grid=(n_limbs, batch // bb),
+        in_specs=[cspec, nzspec, dspec, kspec, kspec],
+        out_specs=(dspec, dspec),
+        out_shape=(shape, shape),
+        interpret=interpret,
+    )
+    return call(jnp.asarray(kc.table), nz, pt,
+                b_mont[:n_limbs], a_mont[:n_limbs])
+
+
+def _decrypt_kernel_folded(c_ref, c0_ref, c1_ref, s_ref, m_ref, *,
+                           kc: common.StackedKernelConsts):
+    q = c_ref[0, common.OFF_Q]
+    qinv = c_ref[0, common.OFF_QINV]
+    c1s = modmul.mulmod_montgomery_limb_t(c1_ref[:, 0, :], s_ref[...],
+                                          q, qinv)
+    m_ntt = modmul.addmod(c0_ref[:, 0, :], c1s, q)
+    m_ref[:, 0, :] = common.intt_stages_t(m_ntt, c_ref, kc, q, qinv)
+
+
+def decrypt_limbs(c0, c1, s_mont, ctx: CKKSContext,
+                  batch_block: int | None = None, interpret: bool = True):
+    """Fused decrypt of a whole batch, all limbs in ONE pallas_call.
+
+    c0/c1: (B, L_dec, N) uint32; s_mont: (L, N) secret key rows. Returns
+    coefficient-domain residues (B, L_dec, N).
+    """
+    batch, n_limbs, n = c0.shape
+    bb = _batch_block(batch, batch_block)
+    kc = common.stacked_kernel_consts(ctx.plans[:n_limbs])
+    cspec = pl.BlockSpec((1, kc.n_scalars), lambda l, b: (l, 0),
+                         memory_space=pltpu.SMEM)
+    dspec = pl.BlockSpec((bb, 1, n), lambda l, b: (b, l, 0),
+                         memory_space=pltpu.VMEM)
+    kspec = pl.BlockSpec((1, n), lambda l, b: (l, 0),
+                         memory_space=pltpu.VMEM)
+    call = pl.pallas_call(
+        functools.partial(_decrypt_kernel_folded, kc=kc),
+        grid=(n_limbs, batch // bb),
+        in_specs=[cspec, dspec, dspec, kspec],
+        out_specs=dspec,
+        out_shape=jax.ShapeDtypeStruct((batch, n_limbs, n), jnp.uint32),
+        interpret=interpret,
+    )
+    return call(jnp.asarray(kc.table), c0, c1, s_mont[:n_limbs])

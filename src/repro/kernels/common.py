@@ -1,10 +1,13 @@
 """Shared in-kernel building blocks for the Pallas TPU kernels.
 
-Everything per-prime is *static* (baked into the kernel closure): modulus,
-shift-add k-terms, Montgomery constants, and the OTF twiddle-generator seeds.
-This mirrors the ASIC, where these live in registers / a 27 KB seed SRAM —
-the TPU analogue is compile-time constants + VMEM-regenerated vectors, never
-HBM traffic.
+Per-prime constants come in two flavours. In the per-limb kernels everything
+is *static* (baked into the kernel closure): modulus, shift-add k-terms,
+Montgomery constants, and the OTF twiddle-generator seeds. In the
+limb-folded kernels (grid = (L, ...)) the same scalars are stacked into one
+(L, K) uint32 table (``stacked_kernel_consts``) and read per grid step at
+static column offsets. Both mirror the ASIC, where these live in registers /
+a 27 KB seed SRAM — the TPU analogue is compile-time constants or an SMEM
+seed table + VMEM-regenerated vectors, never HBM traffic.
 
 The helpers here are pure uint32 jnp code, so the *same functions* run
 
@@ -99,6 +102,94 @@ def plan_consts(plan: NTTPlan) -> PlanConsts:
 
 
 # ---------------------------------------------------------------------------
+# Stacked per-limb constants for limb-folded kernels (grid = (L, ...))
+# ---------------------------------------------------------------------------
+# Folding the limb loop into the Pallas grid means per-limb constants can no
+# longer be Python-closure scalars: they arrive as one (L, K) uint32 array,
+# block-indexed by the limb grid axis, and the kernel reads each scalar at a
+# *static* column offset. Layout per limb row:
+#
+#   [0] q   [1] -q^{-1} mod 2^32   [2] N^{-1} (Montgomery form)
+#   then per forward stage s = 0..logn-1:  base_s, f_0..f_{s-1}
+#   then per inverse stage t = 0..logn-1:  base_t, f_0..f_{logn-2-t}
+#
+# This is the array-of-seeds analogue of the paper's 27 KB seed SRAM: one
+# row of OTF TF Gen state per prime, streamed to the grid step that owns
+# that limb.
+
+OFF_Q = 0
+OFF_QINV = 1
+OFF_NINV = 2
+_OFF_STAGES = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedKernelConsts:
+    """(L, K) uint32 table of per-limb kernel constants + column offsets."""
+
+    n: int
+    logn: int
+    n_limbs: int
+    fwd_off: tuple[int, ...]     # column of stage-s [base, factors...]
+    inv_off: tuple[int, ...]
+    n_scalars: int
+    table: np.ndarray            # (L, n_scalars) uint32
+
+    def fwd_nfac(self, s: int) -> int:
+        return s                                  # m = 2^s -> log2(m) factors
+
+    def inv_nfac(self, st: int) -> int:
+        return self.logn - 1 - st                 # h = N >> (st+1)
+
+
+_STACKED_KC_MEMO: dict[tuple[int, ...], StackedKernelConsts] = {}
+
+
+def stacked_kernel_consts(plans) -> StackedKernelConsts:
+    """Stack ``plan_consts`` of several same-N plans into one (L, K) table.
+    Memoised by plan identity (plans come from the lru-cached make_plan)."""
+    key = tuple(id(p) for p in plans)
+    cached = _STACKED_KC_MEMO.get(key)
+    if cached is not None:
+        return cached
+    pcs = [plan_consts(p) for p in plans]
+    n, logn = pcs[0].n, pcs[0].logn
+    assert all(pc.n == n for pc in pcs)
+
+    fwd_off, inv_off = [], []
+    cur = _OFF_STAGES
+    for s in range(logn):
+        fwd_off.append(cur)
+        cur += 1 + s
+    for st in range(logn):
+        inv_off.append(cur)
+        cur += 1 + (logn - 1 - st)
+
+    table = np.zeros((len(pcs), cur), np.uint32)
+    for i, pc in enumerate(pcs):
+        table[i, OFF_Q] = pc.q
+        table[i, OFF_QINV] = pc.mont.qinv_neg
+        table[i, OFF_NINV] = pc.n_inv_mont
+        for s in range(logn):
+            o = fwd_off[s]
+            table[i, o] = pc.fwd_base_mont[s]
+            table[i, o + 1:o + 1 + s] = pc.fwd_factors[s]
+        for st in range(logn):
+            o = inv_off[st]
+            nf = logn - 1 - st
+            table[i, o] = pc.inv_base_mont[st]
+            table[i, o + 1:o + 1 + nf] = pc.inv_factors[st]
+
+    kc = StackedKernelConsts(
+        n=n, logn=logn, n_limbs=len(pcs),
+        fwd_off=tuple(fwd_off), inv_off=tuple(inv_off),
+        n_scalars=cur, table=table,
+    )
+    _STACKED_KC_MEMO[key] = kc
+    return kc
+
+
+# ---------------------------------------------------------------------------
 # In-kernel OTF twiddle generation (the unified OTF TF Gen)
 # ---------------------------------------------------------------------------
 
@@ -183,6 +274,75 @@ def intt_stages(x: jnp.ndarray, pc: PlanConsts) -> jnp.ndarray:
 
 def _s(m: int) -> int:
     return m.bit_length() - 1
+
+
+# ---------------------------------------------------------------------------
+# Traced-constant variants: same stage loops, per-limb scalars read from the
+# stacked-constants ref at static offsets (limb-folded grid kernels)
+# ---------------------------------------------------------------------------
+# REDC with traced (q, -q^-1) uses the general 16-bit-limb multiply path
+# (modmul.mulmod_montgomery_limb_t) because shift-add k-term exponents are
+# structurally per-prime and cannot be traced; outputs are bit-identical
+# (see the modmul docstring), so the folded kernels match the per-limb
+# shift-add kernels word-for-word.
+
+
+def gen_twiddles_t(c_ref, off: int, nfac: int, q, qinv_neg) -> jnp.ndarray:
+    """Traced OTF twiddle doubling: base/factors read from c_ref columns
+    [off, off+nfac], q/qinv_neg traced scalars. Returns (2^nfac,) uint32."""
+    zero = jax.lax.broadcasted_iota(jnp.uint32, (1,), 0)
+    a = zero + c_ref[0, off]
+    for j in range(nfac):
+        prod = modmul.mulmod_montgomery_limb_t(
+            a, c_ref[0, off + 1 + j], q, qinv_neg)
+        a = jnp.concatenate([a, prod])
+    return a
+
+
+def ntt_stages_t(x: jnp.ndarray, c_ref, kc: StackedKernelConsts,
+                 q, qinv_neg) -> jnp.ndarray:
+    """Forward negacyclic NTT on (rows, N) uint32 with traced per-limb
+    constants. Same butterfly schedule as ``ntt_stages``."""
+    n = kc.n
+    rows = x.shape[0]
+    m, t = 1, n
+    while m < n:
+        t //= 2
+        s = _s(m)
+        tw = gen_twiddles_t(c_ref, kc.fwd_off[s], kc.fwd_nfac(s), q, qinv_neg)
+        x = x.reshape(rows, m, 2, t)
+        u = x[:, :, 0, :]
+        v = modmul.mulmod_montgomery_limb_t(
+            x[:, :, 1, :], tw[None, :, None], q, qinv_neg)
+        x = jnp.stack(
+            [modmul.addmod(u, v, q), modmul.submod(u, v, q)], axis=2
+        ).reshape(rows, n)
+        m *= 2
+    return x
+
+
+def intt_stages_t(x: jnp.ndarray, c_ref, kc: StackedKernelConsts,
+                  q, qinv_neg) -> jnp.ndarray:
+    """Inverse negacyclic NTT on (rows, N) with traced per-limb constants,
+    N^-1 (read from the consts row) folded in at the end."""
+    n = kc.n
+    rows = x.shape[0]
+    h, t = n // 2, 1
+    st = 0
+    while h >= 1:
+        tw = gen_twiddles_t(c_ref, kc.inv_off[st], kc.inv_nfac(st),
+                            q, qinv_neg)
+        x = x.reshape(rows, h, 2, t)
+        u, v = x[:, :, 0, :], x[:, :, 1, :]
+        even = modmul.addmod(u, v, q)
+        odd = modmul.mulmod_montgomery_limb_t(
+            modmul.submod(u, v, q), tw[None, :, None], q, qinv_neg)
+        x = jnp.concatenate([even, odd], axis=-1).reshape(rows, h * 2 * t)
+        t *= 2
+        h //= 2
+        st += 1
+    x = x.reshape(rows, n)
+    return modmul.mulmod_montgomery_limb_t(x, c_ref[0, OFF_NINV], q, qinv_neg)
 
 
 # ---------------------------------------------------------------------------

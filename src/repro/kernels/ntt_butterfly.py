@@ -14,6 +14,12 @@ multiplies per butterfly are the four 16x16 partial products of a*b.
 Grid/BlockSpec: grid = (rows / block_rows,); block = (block_rows, N) uint32
 in VMEM. For N = 2^16 a row is 256 KB; block_rows = 4 keeps in+out+twiddle
 working set ~2.5 MB, well inside a v5e core's 16 MB VMEM budget.
+
+The limb-folded variants (``ntt_limb_rows``/``intt_limb_rows``) extend the
+grid to (L, rows / block_rows) and stream per-limb constants from a stacked
+(L, K) SMEM table (``common.stacked_kernel_consts``), so a whole (L, R, N)
+RNS stack transforms in ONE pallas_call — the launch shape used by
+``ops.ntt_limbs``/``ops.intt_limbs`` and the batched client pipeline.
 """
 
 from __future__ import annotations
@@ -52,6 +58,67 @@ def _build(pc: common.PlanConsts, rows: int, block_rows: int,
         out_shape=jax.ShapeDtypeStruct((rows, n), jnp.uint32),
         interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Limb-folded variants: grid = (L, rows/block_rows), ONE pallas_call for the
+# whole RNS stack. Per-limb constants stream in as a (L, K) SMEM table
+# (common.stacked_kernel_consts) instead of Python-closure scalars.
+# ---------------------------------------------------------------------------
+
+
+def _kernel_fwd_folded(c_ref, x_ref, o_ref, *, kc: common.StackedKernelConsts):
+    q = c_ref[0, common.OFF_Q]
+    qinv = c_ref[0, common.OFF_QINV]
+    o_ref[0] = common.ntt_stages_t(x_ref[0], c_ref, kc, q, qinv)
+
+
+def _kernel_inv_folded(c_ref, x_ref, o_ref, *, kc: common.StackedKernelConsts):
+    q = c_ref[0, common.OFF_Q]
+    qinv = c_ref[0, common.OFF_QINV]
+    o_ref[0] = common.intt_stages_t(x_ref[0], c_ref, kc, q, qinv)
+
+
+def _build_folded(kc: common.StackedKernelConsts, rows: int, block_rows: int,
+                  forward: bool, interpret: bool):
+    n, L = kc.n, kc.n_limbs
+    body = functools.partial(
+        _kernel_fwd_folded if forward else _kernel_inv_folded, kc=kc)
+    grid = (L, rows // block_rows)
+    cspec = pl.BlockSpec((1, kc.n_scalars), lambda l, r: (l, 0),
+                         memory_space=pltpu.SMEM)
+    dspec = pl.BlockSpec((1, block_rows, n), lambda l, r: (l, r, 0),
+                         memory_space=pltpu.VMEM)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[cspec, dspec],
+        out_specs=dspec,
+        out_shape=jax.ShapeDtypeStruct((L, rows, n), jnp.uint32),
+        interpret=interpret,
+    )
+
+
+def _rows_folded(x, plans, forward: bool, block_rows: int, interpret: bool):
+    """x: (L, rows, N) uint32 -> NTT/INTT of every limb, one kernel launch."""
+    kc = common.stacked_kernel_consts(plans)
+    rows = x.shape[1]
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        block_rows = 1
+    call = _build_folded(kc, rows, block_rows, forward, interpret)
+    return call(jnp.asarray(kc.table), x)
+
+
+def ntt_limb_rows(x, plans, block_rows: int = 1, interpret: bool = True):
+    """Forward negacyclic NTT of (L, rows, N) uint32 — all limbs in one
+    limb-folded pallas_call."""
+    return _rows_folded(x, plans, True, block_rows, interpret)
+
+
+def intt_limb_rows(x, plans, block_rows: int = 1, interpret: bool = True):
+    """Inverse negacyclic NTT of (L, rows, N) uint32 — one pallas_call."""
+    return _rows_folded(x, plans, False, block_rows, interpret)
 
 
 def ntt_rows(x, plan: NTTPlan, block_rows: int = 1, interpret: bool = True):

@@ -8,10 +8,22 @@ Domains: the butterfly path produces bit-reversed evaluation order (matching
 ``repro.core.ntt``); the four-step MXU path produces natural order. Pointwise
 ciphertext algebra is order-agnostic as long as both operands share a domain;
 the client pipeline uses the butterfly domain as canonical.
+
+Batched, limb-folded launches
+-----------------------------
+The client hot path is batched struct-of-arrays: residue stacks travel as
+``(L, ..., N)`` (NTT) or ``(B, L, N)`` (ciphertexts) arrays and the limb loop
+lives in the Pallas grid (``grid = (L, B)``), with per-limb constants
+streamed from a stacked (L, K) table. ``encrypt_fused``, ``decrypt_fused``,
+``ntt_limbs`` and ``intt_limbs`` therefore each issue exactly ONE
+pallas_call per invocation regardless of limb count or batch size (the
+four-step ``path='matmul'`` NTT keeps its per-limb launches: its precomputed
+F matrices are per-prime MXU operands, not scalar seeds).
 """
 
 from __future__ import annotations
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -33,18 +45,23 @@ def ntt_limbs(x, ctx: CKKSContext, n_limbs: int | None = None,
               interpret: bool | None = None):
     """x: (L, ..., N) uint32 residues -> forward negacyclic NTT per limb.
 
-    path: 'butterfly' (VPU streaming kernel, bit-reversed out) or
-          'matmul' (four-step MXU kernel, natural out).
+    path: 'butterfly' (VPU streaming kernel, bit-reversed out; limb-folded,
+          one pallas_call for the whole stack) or
+          'matmul' (four-step MXU kernel, natural out; per-limb launches).
     """
     interpret = default_interpret() if interpret is None else interpret
     n_limbs = x.shape[0] if n_limbs is None else n_limbs
-    fn = (ntt_butterfly.ntt_rows if path == "butterfly"
-          else ntt_matmul.ntt_rows_mm)
+    if path == "butterfly":
+        x2 = x[:n_limbs].reshape(n_limbs, -1, x.shape[-1])
+        out = ntt_butterfly.ntt_limb_rows(
+            x2, ctx.plans[:n_limbs], block_rows=block_rows,
+            interpret=interpret)
+        return out.reshape(x[:n_limbs].shape)
     rows = []
     for i in range(n_limbs):
         xi = x[i].reshape(-1, x.shape[-1])
-        out = fn(xi, ctx.plans[i], block_rows=block_rows,
-                 interpret=interpret)
+        out = ntt_matmul.ntt_rows_mm(xi, ctx.plans[i], block_rows=block_rows,
+                                     interpret=interpret)
         rows.append(out.reshape(x.shape[1:]))
     return jnp.stack(rows)
 
@@ -54,13 +71,17 @@ def intt_limbs(x, ctx: CKKSContext, n_limbs: int | None = None,
                interpret: bool | None = None):
     interpret = default_interpret() if interpret is None else interpret
     n_limbs = x.shape[0] if n_limbs is None else n_limbs
-    fn = (ntt_butterfly.intt_rows if path == "butterfly"
-          else ntt_matmul.intt_rows_mm)
+    if path == "butterfly":
+        x2 = x[:n_limbs].reshape(n_limbs, -1, x.shape[-1])
+        out = ntt_butterfly.intt_limb_rows(
+            x2, ctx.plans[:n_limbs], block_rows=block_rows,
+            interpret=interpret)
+        return out.reshape(x[:n_limbs].shape)
     rows = []
     for i in range(n_limbs):
         xi = x[i].reshape(-1, x.shape[-1])
-        out = fn(xi, ctx.plans[i], block_rows=block_rows,
-                 interpret=interpret)
+        out = ntt_matmul.intt_rows_mm(xi, ctx.plans[i], block_rows=block_rows,
+                                      interpret=interpret)
         rows.append(out.reshape(x.shape[1:]))
     return jnp.stack(rows)
 
@@ -71,27 +92,22 @@ def intt_limbs(x, ctx: CKKSContext, n_limbs: int | None = None,
 
 
 def encrypt_fused(pt_data, pk_b_mont, pk_a_mont, ctx: CKKSContext,
-                  seed: int | None = None, nonce0: int = 0,
+                  seed: int | None = None, nonce0=0,
                   interpret: bool | None = None):
     """Streaming encrypt. pt_data: (L, N) or (batch, L, N) uint32 NTT-domain
-    plaintext; returns (c0, c1) of the same shape. PRNG + NTT run in-kernel.
+    plaintext; returns (c0, c1) of the same shape. PRNG + NTT run in-kernel,
+    all limbs and batch rows in ONE limb-folded pallas_call.
 
-    Matches ``repro.core.encrypt`` bit-for-bit for nonce = nonce0 + batch_idx.
+    Matches ``repro.core.encrypt`` bit-for-bit for nonce = nonce0 + batch_idx
+    (nonce0 may be a traced uint32 scalar for jit-stable entry points).
     """
     interpret = default_interpret() if interpret is None else interpret
     seed = ctx.params.seed if seed is None else seed
     squeeze = pt_data.ndim == 2
     pt = pt_data[None] if squeeze else pt_data           # (B, L, N)
-    b, L, n = pt.shape
-    c0s, c1s = [], []
-    for i in range(L):
-        c0, c1 = client_pointwise.encrypt_limb(
-            pt[:, i, :], pk_b_mont[i], pk_a_mont[i], ctx, i,
-            seed=seed, nonce0=nonce0, interpret=interpret)
-        c0s.append(c0)
-        c1s.append(c1)
-    c0 = jnp.stack(c0s, axis=1)
-    c1 = jnp.stack(c1s, axis=1)
+    c0, c1 = client_pointwise.encrypt_limbs(
+        pt, pk_b_mont, pk_a_mont, ctx, seed=seed, nonce0=nonce0,
+        interpret=interpret)
     if squeeze:
         return c0[0], c1[0]
     return c0, c1
@@ -99,18 +115,15 @@ def encrypt_fused(pt_data, pk_b_mont, pk_a_mont, ctx: CKKSContext,
 
 def decrypt_fused(c0, c1, s_mont, ctx: CKKSContext, n_limbs: int = 2,
                   interpret: bool | None = None):
-    """Streaming decrypt -> coefficient-domain residues (…, n_limbs, N)."""
+    """Streaming decrypt -> coefficient-domain residues (…, n_limbs, N).
+    One limb-folded pallas_call for the whole batch."""
     interpret = default_interpret() if interpret is None else interpret
     squeeze = c0.ndim == 2
     c0b = c0[None] if squeeze else c0
     c1b = c1[None] if squeeze else c1
-    outs = []
-    for i in range(n_limbs):
-        m = client_pointwise.decrypt_limb(
-            c0b[:, i, :], c1b[:, i, :], s_mont[i], ctx, i,
-            interpret=interpret)
-        outs.append(m)
-    out = jnp.stack(outs, axis=1)
+    out = client_pointwise.decrypt_limbs(
+        c0b[:, :n_limbs], c1b[:, :n_limbs], s_mont, ctx,
+        interpret=interpret)
     return out[0] if squeeze else out
 
 
@@ -122,7 +135,6 @@ def decrypt_fused(c0, c1, s_mont, ctx: CKKSContext, n_limbs: int = 2,
 def special_fft(z, m: int, block_rows: int = 1, interpret: bool | None = None):
     """(rows, n) complex -> slots, df32 Pallas kernel."""
     interpret = default_interpret() if interpret is None else interpret
-    import numpy as np
     z = np.asarray(z)
     squeeze = z.ndim == 1
     z2 = z[None] if squeeze else z
@@ -134,7 +146,6 @@ def special_fft(z, m: int, block_rows: int = 1, interpret: bool | None = None):
 def special_ifft(z, m: int, block_rows: int = 1,
                  interpret: bool | None = None):
     interpret = default_interpret() if interpret is None else interpret
-    import numpy as np
     z = np.asarray(z)
     squeeze = z.ndim == 1
     z2 = z[None] if squeeze else z

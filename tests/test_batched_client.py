@@ -1,0 +1,196 @@
+"""Batched SoA client pipeline: bit-identity against the per-ciphertext
+reference path, nonce bookkeeping, and the one-pallas_call-per-fused-op
+regression guard for the limb-folded kernels."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import encoder, encryptor, get_context
+from repro.core import ntt as nttmod
+from repro.fhe_client.client import FHEClient
+from repro.kernels import ops as kops
+
+
+@pytest.fixture(scope="module")
+def client():
+    return FHEClient(profile="tiny")
+
+
+def _messages(ctx, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((batch, ctx.params.n_slots))
+            + 1j * rng.standard_normal((batch, ctx.params.n_slots))) * 0.5
+
+
+# ---------------------------------------------------------------------------
+# bit-identity vs the per-ciphertext reference path
+# ---------------------------------------------------------------------------
+
+
+def test_encode_batch_matches_per_message(client):
+    ctx = client.ctx
+    msgs = _messages(ctx, 3)
+    ptb = encoder.encode_batch(msgs, ctx)
+    assert ptb.data.shape == (3, ctx.params.n_limbs, ctx.params.n)
+    for i in range(3):
+        pt = encoder.encode(msgs[i], ctx)
+        np.testing.assert_array_equal(np.asarray(ptb.data[i]),
+                                      np.asarray(pt.data))
+
+
+def test_encode_encrypt_batch_bit_identical(client):
+    """Batched fused pipeline == encode + core encrypt per message, for the
+    nonce layout nonce0 + batch_idx."""
+    ctx = client.ctx
+    msgs = _messages(ctx, 3, seed=1)
+    nonce0 = client._nonce
+    batch = client.encode_encrypt_batch(msgs)
+    assert client._nonce == nonce0 + 3
+    for i in range(3):
+        pt = encoder.encode(msgs[i], ctx)
+        ct = encryptor.encrypt(pt, client.keys.pk, ctx, nonce=nonce0 + i)
+        np.testing.assert_array_equal(np.asarray(batch.c0[i]),
+                                      np.asarray(ct.c0))
+        np.testing.assert_array_equal(np.asarray(batch.c1[i]),
+                                      np.asarray(ct.c1))
+
+
+def test_nonces_advance_across_batches(client):
+    """A second batch continues the nonce sequence where the first ended."""
+    ctx = client.ctx
+    msgs = _messages(ctx, 2, seed=2)
+    nonce0 = client._nonce
+    first = client.encode_encrypt_batch(msgs)
+    second = client.encode_encrypt_batch(msgs)
+    assert not np.array_equal(np.asarray(first.c0), np.asarray(second.c0))
+    pt = encoder.encode(msgs[0], ctx)
+    ct = encryptor.encrypt(pt, client.keys.pk, ctx, nonce=nonce0 + 2)
+    np.testing.assert_array_equal(np.asarray(second.c0[0]),
+                                  np.asarray(ct.c0))
+
+
+def test_decrypt_decode_batch_matches_reference(client):
+    """Batched fused decrypt+decode == core decrypt + encoder.decode rows."""
+    ctx = client.ctx
+    msgs = _messages(ctx, 3, seed=3)
+    batch = client.encode_encrypt_batch(msgs)
+    got = client.decrypt_decode_batch(batch.truncated(2))
+    for i in range(3):
+        m = encryptor.decrypt(batch[i], client.keys.sk, ctx)
+        want = encoder.decode(m, ctx, scale=batch.scale)
+        np.testing.assert_array_equal(got[i], want)
+    np.testing.assert_allclose(got, msgs, atol=1e-4)
+
+
+def test_legacy_list_protocol_roundtrip(client):
+    """list[Ciphertext] wrappers stay bit-compatible with the batch path."""
+    ctx = client.ctx
+    msgs = _messages(ctx, 2, seed=4)
+    cts = client.encrypt_batch(msgs)
+    assert len(cts) == 2 and isinstance(cts[0], encryptor.Ciphertext)
+    two_limb = [encryptor.Ciphertext(c0=ct.c0[:2], c1=ct.c1[:2], n_limbs=2,
+                                     scale=ct.scale) for ct in cts]
+    z = client.decrypt_batch(two_limb)
+    np.testing.assert_allclose(z, msgs, atol=1e-4)
+
+
+def test_ciphertext_batch_from_cts_roundtrip(client):
+    """from_cts rebuilds the SoA arrays from row views (min-limb truncation)
+    and rejects mixed scales with a pointer at the per-row decode path."""
+    ctx = client.ctx
+    msgs = _messages(ctx, 3, seed=9)
+    batch = client.encode_encrypt_batch(msgs)
+    rows = list(batch)
+    rows[1] = encryptor.Ciphertext(c0=rows[1].c0[:2], c1=rows[1].c1[:2],
+                                   n_limbs=2, scale=rows[1].scale)
+    rebuilt = encryptor.CiphertextBatch.from_cts(rows)
+    assert rebuilt.n_limbs == 2                      # truncated to min depth
+    np.testing.assert_array_equal(np.asarray(rebuilt.c0),
+                                  np.asarray(batch.c0[:, :2]))
+    with pytest.raises(ValueError, match="0 ciphertexts"):
+        encryptor.CiphertextBatch.from_cts([])
+    rows[0] = encryptor.Ciphertext(c0=rows[0].c0, c1=rows[0].c1,
+                                   n_limbs=rows[0].n_limbs,
+                                   scale=rows[0].scale * 2)
+    with pytest.raises(ValueError, match="shared scale"):
+        encryptor.CiphertextBatch.from_cts(rows)
+
+
+def test_stacked_ntt_matches_per_limb(client):
+    ctx = client.ctx
+    L, n = ctx.params.n_limbs, ctx.params.n
+    rng = np.random.default_rng(5)
+    x = np.stack([rng.integers(0, ctx.q_list[i], size=(2, n),
+                               dtype=np.uint32) for i in range(L)])
+    sp = ctx.stacked_plans(L)
+    got = np.asarray(nttmod.ntt_stacked(jnp.asarray(x), sp))
+    for i in range(L):
+        want = np.asarray(nttmod.ntt(jnp.asarray(x[i]), ctx.plans[i]))
+        np.testing.assert_array_equal(got[i], want)
+    back = np.asarray(nttmod.intt_stacked(jnp.asarray(got), sp))
+    np.testing.assert_array_equal(back, x)
+
+
+# ---------------------------------------------------------------------------
+# one pallas_call per fused op (limb-folded grid regression guard)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def pallas_call_counter(monkeypatch):
+    calls = []
+    real = pl.pallas_call
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("grid"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pl, "pallas_call", counting)
+    return calls
+
+
+def test_fused_ops_issue_single_pallas_call(client, pallas_call_counter):
+    ctx = client.ctx
+    L, n = ctx.params.n_limbs, ctx.params.n
+    msgs = _messages(ctx, 4, seed=6)
+    ptb = encoder.encode_batch(msgs, ctx)
+
+    pallas_call_counter.clear()
+    c0, c1 = kops.encrypt_fused(ptb.data, client.keys.pk.b_mont,
+                                client.keys.pk.a_mont, ctx, nonce0=0)
+    assert len(pallas_call_counter) == 1
+    # limb axis folded into the grid; whole batch per grid step by default
+    assert pallas_call_counter[0] == (L, 1)
+
+    pallas_call_counter.clear()
+    kops.decrypt_fused(c0[:, :2], c1[:, :2], client.keys.sk.s_mont, ctx)
+    assert len(pallas_call_counter) == 1
+    assert pallas_call_counter[0] == (2, 1)
+
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(np.stack([
+        rng.integers(0, ctx.q_list[i], size=(3, n), dtype=np.uint32)
+        for i in range(L)]))
+    pallas_call_counter.clear()
+    y = kops.ntt_limbs(x, ctx)
+    assert len(pallas_call_counter) == 1
+    pallas_call_counter.clear()
+    kops.intt_limbs(y, ctx)
+    assert len(pallas_call_counter) == 1
+
+
+def test_test_profile_batch_roundtrip():
+    """One equivalence point on the larger 'test' profile (N=2^10, 6 limbs):
+    the batched pipeline stays bit-identical to the reference path there."""
+    client = FHEClient(profile="test")
+    ctx = client.ctx
+    msgs = _messages(ctx, 2, seed=8)
+    nonce0 = client._nonce
+    batch = client.encode_encrypt_batch(msgs)
+    pt = encoder.encode(msgs[1], ctx)
+    ct = encryptor.encrypt(pt, client.keys.pk, ctx, nonce=nonce0 + 1)
+    np.testing.assert_array_equal(np.asarray(batch.c1[1]), np.asarray(ct.c1))
+    z = client.decrypt_decode_batch(batch.truncated(2))
+    np.testing.assert_allclose(z, msgs, atol=1e-5)

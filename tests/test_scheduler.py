@@ -1,8 +1,10 @@
 """Dual-RSC scheduler + analytic model invariants (paper Fig. 2b/5b/6b)."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core.scheduler import (ClientWorkload, HardwareModel, Job, Mode,
                                   mode_at, schedule)
