@@ -16,7 +16,10 @@ imbalance) to show the 3-mode packing.
 Additionally reports the fused *batched* client pipeline (``batched_client``
 rows): ciphertexts/sec through the jit-compiled SoA path — one limb-folded
 pallas_call per batch — at B=1 per-message looping vs B=16, tracking the
-batching speedup in the benchmark JSON.
+batching speedup in the benchmark JSON. The ``device_fourier`` rows compare
+the host-Fourier oracle client against the fully device-resident client
+(df32 SpecialFFT Pallas kernels inside the jit — zero host FFT round-trips)
+at B=1/16, both directions synchronized with ``jax.block_until_ready``.
 """
 
 import time
@@ -76,7 +79,9 @@ def _fused_batched_rows(profile: str = "test", big_b: int = 16,
     from repro.core import encoder as enc_mod
     from repro.kernels import ops as kops
 
-    client = FHEClient(profile=profile)
+    # host-Fourier client: keeps these rows comparable with the PR 1
+    # pipeline; the device engine gets its own `device_fourier` section
+    client = FHEClient(profile=profile, fourier="host")
     ctx = client.ctx
     rng = np.random.default_rng(0)
 
@@ -163,6 +168,74 @@ def _fused_batched_rows(profile: str = "test", big_b: int = 16,
     }]
 
 
+def _device_fourier_rows(profile: str = "test", big_b: int = 16,
+                         reps: int = 3):
+    """Host-round-trip elimination: host-Fourier oracle client vs the fully
+    device-resident client (df32 SpecialFFT/IFFT Pallas kernels traced into
+    the jitted cores) at B=1 and B=big_b.
+
+    Every section is synchronized with ``jax.block_until_ready`` (the
+    device decrypt path returns numpy, which is already synchronous). The
+    comparison isolates the Fourier engine: identical fused encrypt/decrypt
+    kernels, identical batching, only the slot<->coefficient transform and
+    its host<->device round-trip differ.
+    """
+    import jax
+
+    clients = {
+        "host": FHEClient(profile=profile, fourier="host"),
+        "device": FHEClient(profile=profile),
+    }
+    ctx = clients["host"].ctx
+    rng = np.random.default_rng(0)
+
+    def msgs(b):
+        return (rng.standard_normal((b, ctx.params.n_slots))
+                + 1j * rng.standard_normal((b, ctx.params.n_slots))) * 0.5
+
+    m1, mb = msgs(1), msgs(big_b)
+    times = {}                                   # (engine, op, B) -> seconds
+    for name, cl in clients.items():
+        def enc_sync(m):
+            ct = cl.encode_encrypt_batch(m)
+            jax.block_until_ready((ct.c0, ct.c1))
+            return ct
+
+        # warm: jit trace + compile for both shapes and directions
+        ct1, ctb = enc_sync(m1), enc_sync(mb)
+        one, two = ct1.truncated(2), ctb.truncated(2)
+        cl.decrypt_decode_batch(one)
+        cl.decrypt_decode_batch(two)
+
+        for b, m in ((1, m1), (big_b, mb)):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                enc_sync(m)
+            times[name, "encode_encrypt", b] = \
+                (time.perf_counter() - t0) / reps
+        for b, ct in ((1, one), (big_b, two)):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                cl.decrypt_decode_batch(ct)      # numpy out: synchronous
+            times[name, "decrypt_decode", b] = \
+                (time.perf_counter() - t0) / reps
+
+    rows = []
+    for op in ("encode_encrypt", "decrypt_decode"):
+        for b in (1, big_b):
+            t_host = times["host", op, b]
+            t_dev = times["device", op, b]
+            rows.append({
+                "bench": "device_fourier",
+                "name": f"{profile}_{op}_b{b}_device",
+                "us_per_call": round(t_dev * 1e6, 1),
+                "derived": f"ct_per_s={b / t_dev:.1f};"
+                           f"host_fourier_us={t_host * 1e6:.1f};"
+                           f"vs_host_fourier={t_host / t_dev:.2f}x",
+            })
+    return rows
+
+
 def run():
     rows = []
     hw = HardwareModel()
@@ -207,4 +280,6 @@ def run():
     # fused batched pipeline: amortization of the limb-folded single-launch
     # path across the batch axis (B=1 looping vs B=16, jit-cached)
     rows += _fused_batched_rows()
+    # device-resident Fourier engine vs the host complex128 round-trip
+    rows += _device_fourier_rows()
     return rows

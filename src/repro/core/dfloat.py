@@ -125,6 +125,25 @@ def dfc_from(z, dtype=jnp.float32) -> DFComplex:
     return DFComplex(df_from(jnp.real(z), dtype), df_from(jnp.imag(z), dtype))
 
 
+def dfc_from_parts(re, im, dtype=jnp.float32) -> DFComplex:
+    """Real/imag float arrays -> DFComplex (hi = cast, lo = residual).
+    jit-traceable; the device-Fourier encode entry uses it to split f64
+    slot parts into df32 planes without materialising a complex array."""
+    return DFComplex(df_from(jnp.asarray(re), dtype),
+                     df_from(jnp.asarray(im), dtype))
+
+
+def dfc_to_planes(z: DFComplex):
+    """DFComplex -> the four (re_hi, re_lo, im_hi, im_lo) planes — the
+    canonical kernel/BlockSpec layout of a complex df array."""
+    return z.re.hi, z.re.lo, z.im.hi, z.im.lo
+
+
+def dfc_from_planes(planes) -> DFComplex:
+    rh, rl, ih, il = planes
+    return DFComplex(DF(rh, rl), DF(ih, il))
+
+
 def dfc_add(a: DFComplex, b: DFComplex) -> DFComplex:
     return DFComplex(df_add(a.re, b.re), df_add(a.im, b.im))
 

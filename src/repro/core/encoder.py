@@ -8,6 +8,15 @@ decode:  2-limb ciphertext --INTT--> residues --CRT (df64)--> centered ints
 The Delta-scaling and RNS reduction are exact (error-free df64 transforms +
 exact fmod); the only approximation in the pipeline is the Fourier transform
 itself, whose precision is the paper's Fig. 3c subject.
+
+Fourier engine selection (the paper's NTT/FFT mode switch, DESIGN.md):
+the slot<->coefficient transforms take ``fourier='host'|'device'``.
+
+  * ``'host'``   — complex128 numpy oracle (bit-equivalent reference path);
+  * ``'device'`` — df32 SpecialFFT Pallas kernel via ``kernels.ops``. The
+    ``*_device`` entry points are jit-traceable on real/imag parts, so the
+    client pipeline runs encode->encrypt and decrypt->decode as single
+    jitted programs with no host FFT round-trip.
 """
 
 from __future__ import annotations
@@ -46,14 +55,46 @@ class PlaintextBatch:
     scale: float
 
 
-def slots_to_coeffs(z, ctx: CKKSContext) -> np.ndarray:
+def slots_to_coeffs(z, ctx: CKKSContext, fourier: str = "host") -> np.ndarray:
     """(..., n_slots) complex slots -> (..., N) float64 polynomial
     coefficients (batched SpecialIFFT + real/imag unpacking)."""
     p = ctx.params
+    if fourier == "device":
+        z = jnp.asarray(z)
+        return slots_to_coeffs_device(jnp.real(z), jnp.imag(z), ctx)
     z = np.asarray(z, dtype=np.complex128)
     assert z.shape[-1] == p.n_slots
     w = fftmod.special_ifft(z, p.m)
     return np.concatenate([w.real, w.imag], axis=-1)
+
+
+def slots_to_coeffs_device(re, im, ctx: CKKSContext, block_rows: int = 1,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """Device-Fourier encode front end: (..., n_slots) f64 real/imag slot
+    parts -> (..., N) f64 coefficients via the df32 Pallas SpecialIFFT.
+
+    Jit-traceable end to end (df32 split, kernel, df->f64 collapse are all
+    jnp): no complex128 array and no host FFT anywhere. The df32 planes
+    (~49 effective mantissa bits >= the paper's 43-bit FP55 requirement,
+    DESIGN.md) bound the only approximation in the encode pipeline.
+    """
+    # lazy kernel imports: break the core <-> kernels import cycle
+    from repro.kernels import common as kcommon
+    from repro.kernels import ops as kops
+    p = ctx.params
+    re = jnp.asarray(re)
+    im = jnp.asarray(im)
+    assert re.shape[-1] == p.n_slots and re.shape == im.shape
+    shp = re.shape
+    z = dfl.dfc_from_parts(re.reshape(-1, p.n_slots),
+                           im.reshape(-1, p.n_slots))
+    cfg = kcommon.FourierConfig(mode="fft", block_rows=block_rows,
+                                interpret=interpret)
+    out = kops.fourier(dfl.dfc_to_planes(z), ctx, cfg, inverse=True)
+    w = dfl.dfc_from_planes(out)
+    w_re = dfl.df_to_float(w.re).reshape(shp)
+    w_im = dfl.df_to_float(w.im).reshape(shp)
+    return jnp.concatenate([w_re, w_im], axis=-1)
 
 
 def coeffs_to_plaintext_data(coeffs, ctx: CKKSContext, n_limbs: int):
@@ -67,36 +108,73 @@ def coeffs_to_plaintext_data(coeffs, ctx: CKKSContext, n_limbs: int):
     return nttmod.ntt_stacked(residues, ctx.stacked_plans(n_limbs))
 
 
-def encode(z, ctx: CKKSContext, n_limbs: int | None = None) -> Plaintext:
+def encode(z, ctx: CKKSContext, n_limbs: int | None = None,
+           fourier: str = "host") -> Plaintext:
     """z: (..., n_slots) complex -> Plaintext at `n_limbs` (default fresh)."""
     p = ctx.params
     n_limbs = n_limbs if n_limbs is not None else p.n_limbs
-    coeffs = slots_to_coeffs(z, ctx)                         # (..., N) float64
+    coeffs = slots_to_coeffs(z, ctx, fourier=fourier)        # (..., N) float64
     return Plaintext(coeffs_to_plaintext_data(coeffs, ctx, n_limbs),
                      n_limbs, p.delta)
 
 
-def encode_batch(z, ctx: CKKSContext,
-                 n_limbs: int | None = None) -> PlaintextBatch:
+def encode_batch(z, ctx: CKKSContext, n_limbs: int | None = None,
+                 fourier: str = "host") -> PlaintextBatch:
     """z: (B, n_slots) complex -> batch-major (B, L, N) PlaintextBatch."""
-    pt = encode(z, ctx, n_limbs)
+    pt = encode(z, ctx, n_limbs, fourier=fourier)
     return PlaintextBatch(jnp.swapaxes(pt.data, 0, 1), pt.n_limbs, pt.scale)
 
 
-def coeffs_to_slots(coeffs: np.ndarray, ctx: CKKSContext,
-                    scale) -> np.ndarray:
+def coeffs_to_slots(coeffs: np.ndarray, ctx: CKKSContext, scale,
+                    fourier: str = "host") -> np.ndarray:
     """(..., N) integer-valued float64 coefficients -> (..., n_slots) complex
     slots: /Delta then batched SpecialFFT. `scale` may be a scalar or an
     array broadcasting over the batch dims (per-ciphertext scales)."""
     p = ctx.params
+    if fourier == "device":
+        coeffs = jnp.asarray(coeffs)
+        re, im = coeffs_to_slots_device(coeffs, jnp.zeros_like(coeffs),
+                                        ctx, scale)
+        return np.asarray(re) + 1j * np.asarray(im)
     coeffs = np.asarray(coeffs) / scale                      # |v| < Q/2
     n = p.n
     zc = coeffs[..., : n // 2] + 1j * coeffs[..., n // 2:]
     return fftmod.special_fft(zc, p.m)
 
 
-def decode_coeff(m_coeff, ctx: CKKSContext,
-                 scale=None) -> np.ndarray:
+def coeffs_to_slots_device(hi, lo, ctx: CKKSContext, scale,
+                           block_rows: int = 1,
+                           interpret: bool | None = None):
+    """Device-Fourier decode back end: integer-valued df64 coefficient pair
+    (hi, lo), shape (..., N) -> (..., n_slots) f64 (re, im) slot parts.
+
+    Jit-traceable: /scale in f64 (exact for the power-of-two Delta), df32
+    split, Pallas SpecialFFT — no host FFT, no complex128. `scale` may be a
+    traced scalar or a broadcasting array (per-ciphertext scales).
+    """
+    # lazy kernel imports: break the core <-> kernels import cycle
+    from repro.kernels import common as kcommon
+    from repro.kernels import ops as kops
+    p = ctx.params
+    n = p.n
+    assert hi.shape[-1] == n
+    scale = jnp.asarray(scale, jnp.float64)
+    coeffs = hi / scale + lo / scale                         # |v| < Q/2
+    re = coeffs[..., : n // 2]
+    im = coeffs[..., n // 2:]
+    shp = re.shape
+    z = dfl.dfc_from_parts(re.reshape(-1, p.n_slots),
+                           im.reshape(-1, p.n_slots))
+    cfg = kcommon.FourierConfig(mode="fft", block_rows=block_rows,
+                                interpret=interpret)
+    out = kops.fourier(dfl.dfc_to_planes(z), ctx, cfg)
+    w = dfl.dfc_from_planes(out)
+    return (dfl.df_to_float(w.re).reshape(shp),
+            dfl.df_to_float(w.im).reshape(shp))
+
+
+def decode_coeff(m_coeff, ctx: CKKSContext, scale=None,
+                 fourier: str = "host") -> np.ndarray:
     """Coefficient-domain decode: (2, ..., N) uint32 residues (post-INTT,
     e.g. straight out of the fused decrypt kernel) -> (..., n_slots) slots
     via two-limb CRT + SpecialFFT."""
@@ -105,13 +183,17 @@ def decode_coeff(m_coeff, ctx: CKKSContext,
     v = rns.crt2_to_df(m_coeff[0].astype(jnp.uint64),
                        m_coeff[1].astype(jnp.uint64),
                        ctx.q_list[0], ctx.q_list[1])
+    if fourier == "device":
+        re, im = coeffs_to_slots_device(v.hi, v.lo, ctx, scale)
+        return np.asarray(re) + 1j * np.asarray(im)
     return coeffs_to_slots(np.asarray(v.hi) + np.asarray(v.lo), ctx, scale)
 
 
-def decode(pt_ntt, ctx: CKKSContext, scale: float | None = None) -> np.ndarray:
+def decode(pt_ntt, ctx: CKKSContext, scale: float | None = None,
+           fourier: str = "host") -> np.ndarray:
     """pt_ntt: (2, ..., N) uint32 NTT-domain residues -> (..., n_slots) complex."""
     coeff = nttmod.intt_stacked(pt_ntt[:2], ctx.stacked_plans(2))
-    return decode_coeff(coeff, ctx, scale)
+    return decode_coeff(coeff, ctx, scale, fourier=fourier)
 
 
 def boot_precision_bits(z_ref: np.ndarray, z_got: np.ndarray) -> float:

@@ -6,17 +6,22 @@ through evaluation at the Galois orbit of a primitive 2N-th root zeta:
 
     z_j = m(zeta^{5^j}),   j = 0..N/2-1,   zeta = exp(i*pi/N)
 
-Three datapaths:
-  * ``special_fft`` / ``special_ifft``        — complex128 oracle (CPU);
-  * ``special_fft_df`` / ``special_ifft_df``  — double-float (df32 target,
-    the FP55-equivalent kernel datapath, paper Fig. 3c);
+Four datapaths:
+  * ``special_fft`` / ``special_ifft``        — complex128 oracle (CPU); the
+    ``fourier='host'`` reference engine of the client pipeline;
+  * ``special_fft_df`` / ``special_ifft_df``  — double-float jnp reference
+    of the df32 datapath (FP55-equivalent, paper Fig. 3c);
+  * ``kernels.fft_df``                        — the Pallas kernel instance
+    of the df32 datapath (the ``fourier='device'`` engine, dispatched via
+    ``kernels.ops.fourier``);
   * ``special_fft_quantized``                 — NumPy path with per-op
     rounding to ``mbits`` mantissa bits, reproducing the paper's mantissa
     sweep that justified FP55 (>= 43 bits -> Boot.prec 23.39 > 19.29).
 
-Twiddles follow the same on-the-fly philosophy as the NTT: stage twiddles
-are powers of e^{2*pi*i/lenq} indexed by the rotation group 5^j, and the
-kernel path regenerates them from per-stage seeds.
+Stage twiddles are powers of e^{2*pi*i/lenq} indexed by the rotation group
+5^j — a non-geometric orbit, so unlike the NTT the kernel path keeps them
+as a packed VMEM-resident table rather than an OTF doubling generator
+(DESIGN.md §2).
 """
 
 from __future__ import annotations

@@ -13,9 +13,12 @@ This module glues the CKKS core to the LM substrate:
     (``CiphertextBatch``) and is encrypted with the FUSED limb-folded
     streaming kernels — PRNG + NTT + pointwise in ONE pallas_call for the
     whole batch (the RSC datapath with the limb loop in the Pallas grid);
-  * the device-side pipeline (Delta-scale, RNS, stacked-limb NTT, fused
-    kernels, CRT) is jit-compiled end to end; only the complex128
-    SpecialFFT/IFFT stays on the host (the CPU oracle datapath);
+  * with the default ``fourier='device'`` engine the WHOLE pipeline —
+    df32 SpecialIFFT/FFT Pallas kernels, Delta-scale, RNS, stacked-limb
+    NTT, fused kernels, CRT — runs inside a single jit per direction: no
+    complex128 array and no host FFT between entry and exit (the paper's
+    no-off-chip-round-trip property). ``fourier='host'`` keeps the
+    complex128 CPU oracle Fourier path as a bit-stable reference;
   * on a mesh, ciphertext batches shard over the flattened device axis
     (each device runs its own RSC-equivalent stream; the dual-RSC scheduler
     generalises to device groups).
@@ -45,10 +48,26 @@ class ClientKeys:
 
 
 class FHEClient:
-    """Client-side encode/encrypt + decode/decrypt over model activations."""
+    """Client-side encode/encrypt + decode/decrypt over model activations.
 
-    def __init__(self, profile: str = "test", seed: int | None = None):
+    ``fourier`` selects the Fourier engine for the slot<->coefficient
+    transforms (the paper's NTT/FFT mode switch, DESIGN.md):
+
+      * ``'device'`` (default) — df32 SpecialFFT Pallas kernels traced into
+        the jitted cores: encode+encrypt and decrypt+decode are each ONE
+        jitted program, fully device-resident;
+      * ``'host'`` — complex128 numpy oracle FFTs outside the jit
+        (bit-equivalent to the pre-device-Fourier pipeline; the reference
+        path equivalence tests compare against).
+    """
+
+    def __init__(self, profile: str = "test", seed: int | None = None,
+                 fourier: str = "device"):
+        if fourier not in ("device", "host"):
+            raise ValueError(f"fourier must be 'device' or 'host', "
+                             f"got {fourier!r}")
         self.ctx: CKKSContext = get_context(profile)
+        self.fourier = fourier
         sk, pk = encryptor.keygen(self.ctx, seed=seed)
         self.keys = ClientKeys(sk, pk)
         self._nonce = 0
@@ -56,6 +75,8 @@ class FHEClient:
         # the nonce base is a traced operand so fresh nonces never retrace).
         self._encrypt_core = jax.jit(self._encrypt_core_impl)
         self._decrypt_core = jax.jit(self._decrypt_core_impl)
+        self._encrypt_core_dev = jax.jit(self._encrypt_core_dev_impl)
+        self._decrypt_core_dev = jax.jit(self._decrypt_core_dev_impl)
 
     # --- message packing ----------------------------------------------------
 
@@ -106,26 +127,66 @@ class FHEClient:
                            ctx.q_list[0], ctx.q_list[1])
         return v.hi, v.lo
 
+    # --- fully device-resident cores (fourier='device') ---------------------
+
+    def _encrypt_core_dev_impl(self, re, im, nonce0):
+        """(B, n_slots) f64 slot parts -> (c0, c1) (B, L, N): the ENTIRE
+        encode+encrypt — df32 SpecialIFFT Pallas kernel, Delta-scale + RNS
+        rounding, stacked-limb NTT, ONE folded encrypt pallas_call — in a
+        single traced region. No complex128 array, no host FFT."""
+        ctx = self.ctx
+        L = ctx.params.n_limbs
+        coeffs = encoder.slots_to_coeffs_device(re, im, ctx)  # (B, N) f64
+        residues = encoder.coeffs_to_plaintext_data(coeffs, ctx, L)
+        pt = jnp.swapaxes(residues, 0, 1)                 # (B, L, N)
+        return kops.encrypt_fused(pt, self.keys.pk.b_mont,
+                                  self.keys.pk.a_mont, ctx, nonce0=nonce0)
+
+    def _decrypt_core_dev_impl(self, c0, c1, scale):
+        """(B, 2, N) ciphertext stacks -> (B, n_slots) f64 (re, im) slot
+        parts: ONE folded decrypt pallas_call + two-limb CRT + /scale +
+        df32 SpecialFFT Pallas kernel, all in one traced region. `scale` is
+        a traced f64 scalar or (B, 1) array (per-ciphertext scales)."""
+        ctx = self.ctx
+        m = kops.decrypt_fused(c0, c1, self.keys.sk.s_mont, ctx)
+        v = rns.crt2_to_df(m[:, 0].astype(jnp.uint64),
+                           m[:, 1].astype(jnp.uint64),
+                           ctx.q_list[0], ctx.q_list[1])
+        return encoder.coeffs_to_slots_device(v.hi, v.lo, ctx, scale)
+
     def encode_encrypt_batch(self, messages: np.ndarray) -> CiphertextBatch:
         """(B, n_slots) complex messages -> CiphertextBatch (B, L, N).
 
-        Host work is a single batched SpecialIFFT; everything after runs in
-        the jitted device core with one fused kernel launch for the batch.
+        fourier='device': one jitted program does everything (df32 Pallas
+        SpecialIFFT included) — the only host work is splitting the message
+        into real/imag operand planes at entry.
+        fourier='host': host batched complex128 SpecialIFFT, then the
+        jitted device core (the PR 1 pipeline, kept as oracle).
         """
         p = self.ctx.params
         if np.shape(messages)[0] == 0:
             raise ValueError("encode_encrypt_batch needs a non-empty batch")
-        coeffs = encoder.slots_to_coeffs(messages, self.ctx)  # (B, N) f64
         nonce0 = self._nonce
-        self._nonce += coeffs.shape[0]
-        c0, c1 = self._encrypt_core(
-            jnp.asarray(coeffs), jnp.uint32(nonce0))
+        self._nonce += np.shape(messages)[0]
+        if self.fourier == "device":
+            msgs = np.asarray(messages, np.complex128)
+            c0, c1 = self._encrypt_core_dev(
+                jnp.asarray(msgs.real), jnp.asarray(msgs.imag),
+                jnp.uint32(nonce0))
+        else:
+            coeffs = encoder.slots_to_coeffs(messages, self.ctx)  # (B, N) f64
+            c0, c1 = self._encrypt_core(
+                jnp.asarray(coeffs), jnp.uint32(nonce0))
         return CiphertextBatch(c0=c0, c1=c1, n_limbs=p.n_limbs,
                                scale=p.delta)
 
     def decrypt_decode_batch(self, cts: CiphertextBatch) -> np.ndarray:
         """CiphertextBatch (server-returned view; first 2 limbs are used)
         -> (B, n_slots) complex messages."""
+        if self.fourier == "device":
+            re, im = self._decrypt_core_dev(cts.c0[:, :2], cts.c1[:, :2],
+                                            jnp.float64(cts.scale))
+            return np.asarray(re) + 1j * np.asarray(im)
         hi, lo = self._decrypt_core(cts.c0[:, :2], cts.c1[:, :2])
         return encoder.coeffs_to_slots(np.asarray(hi) + np.asarray(lo),
                                        self.ctx, cts.scale)
@@ -147,8 +208,11 @@ class FHEClient:
         cts = list(cts)
         c0 = jnp.stack([ct.c0[:2] for ct in cts])
         c1 = jnp.stack([ct.c1[:2] for ct in cts])
-        hi, lo = self._decrypt_core(c0, c1)
         scale = np.array([ct.scale for ct in cts])[:, None]
+        if self.fourier == "device":
+            re, im = self._decrypt_core_dev(c0, c1, jnp.asarray(scale))
+            return np.asarray(re) + 1j * np.asarray(im)
+        hi, lo = self._decrypt_core(c0, c1)
         return encoder.coeffs_to_slots(np.asarray(hi) + np.asarray(lo),
                                        self.ctx, scale)
 

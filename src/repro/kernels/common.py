@@ -22,10 +22,70 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import modmul
 from repro.core.modmul import MontgomeryConstants
 from repro.core.ntt import NTTPlan
+
+
+# ---------------------------------------------------------------------------
+# Fourier engine: unified launch config + row-streaming grid surface
+# ---------------------------------------------------------------------------
+# The ASIC multiplexes ONE Fourier datapath between two transform modes
+# (paper Fig. 3a); on TPU the analogue is one launch-configuration surface
+# that both Pallas kernels share: the NTT butterfly kernel and the df32
+# SpecialFFT kernel stream row blocks through the same grid shape, and
+# ``ops.fourier`` dispatches on ``FourierConfig.mode`` (see DESIGN.md).
+
+
+@dataclasses.dataclass(frozen=True)
+class FourierConfig:
+    """Launch configuration of the reconfigurable Fourier engine.
+
+    mode:
+      * ``'ntt'``  — modular negacyclic NTT over RNS limb stacks
+        (limb-folded grid, OTF twiddle generation, uint32 datapath);
+      * ``'fft'``  — df32 complex canonical-embedding SpecialFFT
+        (rows grid, VMEM-resident packed twiddle table, f32-pair datapath);
+      * ``'host'`` — complex128 numpy oracle (reference path, not a kernel).
+
+    block_rows is the rows-per-grid-step block of the streaming kernels;
+    interpret=None auto-selects interpret mode on CPU (ops.default_interpret).
+    """
+
+    mode: str = "fft"
+    block_rows: int = 1
+    interpret: bool | None = None
+
+
+FOURIER_MODES = ("ntt", "fft", "host")
+
+
+def row_grid(rows: int, block_rows: int) -> tuple[tuple[int, ...], int]:
+    """Grid + clamped block size for a rows-streaming kernel.
+
+    block_rows is clamped to ``rows`` and must divide it (falls back to 1).
+    Shared by the NTT butterfly and df32 FFT kernels so both Fourier modes
+    launch through the same grid arithmetic.
+    """
+    br = max(1, min(block_rows, rows))
+    if rows % br:
+        br = 1
+    return (rows // br,), br
+
+
+def row_block_spec(block_rows: int, n: int) -> pl.BlockSpec:
+    """(block_rows, N) VMEM block indexed by the rows grid axis."""
+    return pl.BlockSpec((block_rows, n), lambda i: (i, 0),
+                        memory_space=pltpu.VMEM)
+
+
+def table_block_spec(k: int, n: int) -> pl.BlockSpec:
+    """Whole (k, n) VMEM-resident table, identical at every grid step
+    (the df32 kernel's packed twiddle planes)."""
+    return pl.BlockSpec((k, n), lambda i: (0, 0), memory_space=pltpu.VMEM)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -15,6 +15,14 @@ non-geometric, so unlike the NTT the doubling OTF generator does not apply
 
 Bit-reversal is applied OUTSIDE the kernel (an XLA relayout/copy), so the
 kernel runs the pure stage pipeline, as the hardware commutators do.
+
+Two entry layers:
+  * ``special_fft_planes`` / ``special_ifft_planes`` — jit-traceable, four
+    (rows, n) f32 planes in/out. These nest inside the client's jitted
+    encode/decrypt cores, making the whole pipeline device-resident (the
+    ``ops.fourier`` FFT mode).
+  * ``special_fft_rows`` / ``special_ifft_rows`` — numpy complex128
+    convenience wrappers over the plane layer (tests, eager callers).
 """
 
 from __future__ import annotations
@@ -25,11 +33,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import dfloat as dfl
 from repro.core import fft as fftmod
 from repro.core.ntt import bitrev_indices
+from repro.kernels import common
 
 
 # ---------------------------------------------------------------------------
@@ -75,30 +83,19 @@ def packed_twiddles(n: int, m: int, inverse: bool):
     return out
 
 
-def _df(hi, lo):
-    return dfl.DF(hi, lo)
-
-
-def _dfc(planes):
-    rh, rl, ih, il = planes
-    return dfl.DFComplex(_df(rh, rl), _df(ih, il))
-
-
-def _planes(z: dfl.DFComplex):
-    return z.re.hi, z.re.lo, z.im.hi, z.im.lo
-
-
 def _reshape(z, shape):
-    return _dfc(tuple(p.reshape(shape) for p in _planes(z)))
+    return dfl.dfc_from_planes(
+        tuple(p.reshape(shape) for p in dfl.dfc_to_planes(z)))
 
 
 def _index(z, idx):
-    return _dfc(tuple(p[idx] for p in _planes(z)))
+    return dfl.dfc_from_planes(tuple(p[idx] for p in dfl.dfc_to_planes(z)))
 
 
 def _stack2(a, b, axis):
-    return _dfc(tuple(jnp.stack([x, y], axis=axis)
-                      for x, y in zip(_planes(a), _planes(b))))
+    return dfl.dfc_from_planes(
+        tuple(jnp.stack([x, y], axis=axis)
+              for x, y in zip(dfl.dfc_to_planes(a), dfl.dfc_to_planes(b))))
 
 
 # ---------------------------------------------------------------------------
@@ -108,13 +105,15 @@ def _stack2(a, b, axis):
 
 def _kernel(rh_ref, rl_ref, ih_ref, il_ref, tw_ref,
             orh, orl, oih, oil, *, n, offsets, inverse):
-    x = _dfc((rh_ref[...], rl_ref[...], ih_ref[...], il_ref[...]))
+    x = dfl.dfc_from_planes(
+        (rh_ref[...], rl_ref[...], ih_ref[...], il_ref[...]))
     rows = x.re.hi.shape[0]
     tw = tw_ref[...]                                    # (4, n)
 
     def stage_tw(off, lenh):
-        return _dfc((tw[0, off:off + lenh], tw[1, off:off + lenh],
-                     tw[2, off:off + lenh], tw[3, off:off + lenh]))
+        return dfl.dfc_from_planes(
+            (tw[0, off:off + lenh], tw[1, off:off + lenh],
+             tw[2, off:off + lenh], tw[3, off:off + lenh]))
 
     if not inverse:
         length, s = 2, 0
@@ -145,18 +144,17 @@ def _kernel(rh_ref, rl_ref, ih_ref, il_ref, tw_ref,
         inv_n = 1.0 / n
         hi = np.float32(inv_n)
         lo = np.float32(inv_n - float(hi))
-        scale = _df(hi, lo)
+        scale = dfl.DF(hi, lo)
         x = dfl.DFComplex(dfl.df_mul(x.re, scale), dfl.df_mul(x.im, scale))
-    orh[...], orl[...], oih[...], oil[...] = _planes(x)
+    orh[...], orl[...], oih[...], oil[...] = dfl.dfc_to_planes(x)
 
 
 def _build(n: int, rows: int, block_rows: int, offsets, inverse: bool,
            interpret: bool):
     body = functools.partial(_kernel, n=n, offsets=offsets, inverse=inverse)
-    grid = (rows // block_rows,)
-    dspec = pl.BlockSpec((block_rows, n), lambda i: (i, 0),
-                         memory_space=pltpu.VMEM)
-    tspec = pl.BlockSpec((4, n), lambda i: (0, 0), memory_space=pltpu.VMEM)
+    grid, block_rows = common.row_grid(rows, block_rows)
+    dspec = common.row_block_spec(block_rows, n)
+    tspec = common.table_block_spec(4, n)
     shape = jax.ShapeDtypeStruct((rows, n), jnp.float32)
     return pl.pallas_call(
         body,
@@ -169,45 +167,67 @@ def _build(n: int, rows: int, block_rows: int, offsets, inverse: bool,
 
 
 # ---------------------------------------------------------------------------
-# Wrappers (complex <-> df32 planes, bit-reversal outside the kernel)
+# Jit-traceable plane entry points (the device-resident client path)
+# ---------------------------------------------------------------------------
+
+
+def special_fft_planes(planes, m: int, block_rows: int = 1,
+                       interpret: bool = True):
+    """Decode-direction transform on four (rows, n) f32 df planes.
+
+    Fully jit-traceable: the bit-reversal is a jnp gather outside the
+    kernel and the pallas_call traces into the surrounding jit, so no host
+    complex128 array is ever materialised.
+    """
+    n = planes[0].shape[-1]
+    rev = bitrev_indices(n)
+    planes = tuple(p[..., rev] for p in planes)
+    tw, offsets = packed_twiddles(n, m, inverse=False)
+    rows = planes[0].shape[0]
+    call = _build(n, rows, block_rows, offsets, False, interpret)
+    return call(*planes, jnp.asarray(tw))
+
+
+def special_ifft_planes(planes, m: int, block_rows: int = 1,
+                        interpret: bool = True):
+    """Encode-direction transform (includes 1/n) on df planes; traceable."""
+    n = planes[0].shape[-1]
+    tw, offsets = packed_twiddles(n, m, inverse=True)
+    rows = planes[0].shape[0]
+    call = _build(n, rows, block_rows, offsets, True, interpret)
+    out = call(*planes, jnp.asarray(tw))
+    rev = bitrev_indices(n)
+    return tuple(p[..., rev] for p in out)
+
+
+# ---------------------------------------------------------------------------
+# complex128 wrappers (host entry/exit around the plane layer)
 # ---------------------------------------------------------------------------
 
 
 def _to_planes(z: np.ndarray):
-    re = np.asarray(z.real, np.float64)
-    im = np.asarray(z.imag, np.float64)
-    rh = re.astype(np.float32)
-    ih = im.astype(np.float32)
-    return (jnp.asarray(rh), jnp.asarray((re - rh).astype(np.float32)),
-            jnp.asarray(ih), jnp.asarray((im - ih).astype(np.float32)))
+    return dfl.dfc_to_planes(dfl.dfc_from_parts(z.real, z.imag))
 
 
 def _from_planes(planes):
-    rh, rl, ih, il = (np.asarray(p, np.float64) for p in planes)
-    return (rh + rl) + 1j * (ih + il)
+    w = dfl.dfc_from_planes(planes)
+    return (np.asarray(dfl.df_to_float(w.re))
+            + 1j * np.asarray(dfl.df_to_float(w.im)))
 
 
 def special_fft_rows(z: np.ndarray, m: int, block_rows: int = 1,
                      interpret: bool = True) -> np.ndarray:
     """Decode-direction transform of (rows, n) complex, df32 kernel."""
-    n = z.shape[-1]
-    z = np.asarray(z, np.complex128)[..., bitrev_indices(n)]
-    tw, offsets = packed_twiddles(n, m, inverse=False)
-    rows = z.shape[0]
-    br = block_rows if rows % block_rows == 0 else 1
-    call = _build(n, rows, min(br, rows), offsets, False, interpret)
-    out = call(*_to_planes(z), jnp.asarray(tw))
+    z = np.asarray(z, np.complex128)
+    out = special_fft_planes(_to_planes(z), m, block_rows=block_rows,
+                             interpret=interpret)
     return _from_planes(out)
 
 
 def special_ifft_rows(z: np.ndarray, m: int, block_rows: int = 1,
                       interpret: bool = True) -> np.ndarray:
     """Encode-direction transform (includes 1/n), df32 kernel."""
-    n = z.shape[-1]
-    tw, offsets = packed_twiddles(n, m, inverse=True)
-    rows = z.shape[0]
-    br = block_rows if rows % block_rows == 0 else 1
-    call = _build(n, rows, min(br, rows), offsets, True, interpret)
-    out = call(*_to_planes(np.asarray(z, np.complex128)), jnp.asarray(tw))
-    res = _from_planes(out)
-    return res[..., bitrev_indices(n)]
+    z = np.asarray(z, np.complex128)
+    out = special_ifft_planes(_to_planes(z), m, block_rows=block_rows,
+                              interpret=interpret)
+    return _from_planes(out)

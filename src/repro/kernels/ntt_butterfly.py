@@ -47,9 +47,9 @@ def _build(pc: common.PlanConsts, rows: int, block_rows: int,
            forward: bool, interpret: bool):
     n = pc.n
     body = functools.partial(_kernel_fwd if forward else _kernel_inv, pc=pc)
-    grid = (rows // block_rows,)
-    spec = pl.BlockSpec((block_rows, n), lambda i: (i, 0),
-                        memory_space=pltpu.VMEM)
+    # same rows-streaming grid surface as the df32 FFT kernel (common.row_grid)
+    grid, block_rows = common.row_grid(rows, block_rows)
+    spec = common.row_block_spec(block_rows, n)
     return pl.pallas_call(
         body,
         grid=grid,
@@ -84,7 +84,8 @@ def _build_folded(kc: common.StackedKernelConsts, rows: int, block_rows: int,
     n, L = kc.n, kc.n_limbs
     body = functools.partial(
         _kernel_fwd_folded if forward else _kernel_inv_folded, kc=kc)
-    grid = (L, rows // block_rows)
+    (row_steps,), block_rows = common.row_grid(rows, block_rows)
+    grid = (L, row_steps)
     cspec = pl.BlockSpec((1, kc.n_scalars), lambda l, r: (l, 0),
                          memory_space=pltpu.SMEM)
     dspec = pl.BlockSpec((1, block_rows, n), lambda l, r: (l, r, 0),
@@ -102,11 +103,7 @@ def _build_folded(kc: common.StackedKernelConsts, rows: int, block_rows: int,
 def _rows_folded(x, plans, forward: bool, block_rows: int, interpret: bool):
     """x: (L, rows, N) uint32 -> NTT/INTT of every limb, one kernel launch."""
     kc = common.stacked_kernel_consts(plans)
-    rows = x.shape[1]
-    block_rows = min(block_rows, rows)
-    if rows % block_rows:
-        block_rows = 1
-    call = _build_folded(kc, rows, block_rows, forward, interpret)
+    call = _build_folded(kc, x.shape[1], block_rows, forward, interpret)
     return call(jnp.asarray(kc.table), x)
 
 
@@ -124,18 +121,10 @@ def intt_limb_rows(x, plans, block_rows: int = 1, interpret: bool = True):
 def ntt_rows(x, plan: NTTPlan, block_rows: int = 1, interpret: bool = True):
     """Forward negacyclic NTT of (rows, N) uint32 residues (one prime)."""
     pc = common.plan_consts(plan)
-    rows = x.shape[0]
-    block_rows = min(block_rows, rows)
-    if rows % block_rows:
-        block_rows = 1
-    return _build(pc, rows, block_rows, True, interpret)(x)
+    return _build(pc, x.shape[0], block_rows, True, interpret)(x)
 
 
 def intt_rows(x, plan: NTTPlan, block_rows: int = 1, interpret: bool = True):
     """Inverse negacyclic NTT of (rows, N) uint32 (bit-reversed input)."""
     pc = common.plan_consts(plan)
-    rows = x.shape[0]
-    block_rows = min(block_rows, rows)
-    if rows % block_rows:
-        block_rows = 1
-    return _build(pc, rows, block_rows, False, interpret)(x)
+    return _build(pc, x.shape[0], block_rows, False, interpret)(x)

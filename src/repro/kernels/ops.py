@@ -27,12 +27,55 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import fft as fftmod
 from repro.core.context import CKKSContext
-from repro.kernels import client_pointwise, fft_df, ntt_butterfly, ntt_matmul
+from repro.kernels import client_pointwise, common, fft_df, ntt_butterfly, \
+    ntt_matmul
 
 
 def default_interpret() -> bool:
     return jax.default_backend() == "cpu"
+
+
+# ---------------------------------------------------------------------------
+# Unified Fourier engine dispatch (the paper's NTT/FFT mode switch)
+# ---------------------------------------------------------------------------
+
+
+def fourier(x, ctx: CKKSContext, cfg: common.FourierConfig | None = None,
+            *, inverse: bool = False, n_limbs: int | None = None):
+    """Single entry point for the reconfigurable Fourier engine.
+
+    Dispatches on ``cfg.mode`` (see ``common.FourierConfig``):
+
+      * ``'ntt'``:  x is a (L, ..., N) uint32 RNS residue stack ->
+        limb-folded modular NTT/INTT (one pallas_call for the stack);
+      * ``'fft'``:  x is a four-plane df32 tuple of (rows, n) f32 ->
+        SpecialFFT/IFFT stage-pipeline kernel (jit-traceable; the
+        device-resident client path);
+      * ``'host'``: x is (rows, n) complex128 -> numpy oracle (reference).
+
+    The two kernel modes launch through the same rows-streaming grid
+    surface (``common.row_grid``/``row_block_spec``) — the TPU analogue of
+    the ASIC multiplexing one datapath between both transforms.
+    """
+    cfg = common.FourierConfig() if cfg is None else cfg
+    if cfg.mode == "ntt":
+        f = intt_limbs if inverse else ntt_limbs
+        return f(x, ctx, n_limbs=n_limbs, block_rows=cfg.block_rows,
+                 interpret=cfg.interpret)
+    if cfg.mode == "fft":
+        f = special_ifft_planes if inverse else special_fft_planes
+        return f(x, ctx.params.m, block_rows=cfg.block_rows,
+                 interpret=cfg.interpret)
+    if cfg.mode == "host":
+        # attribute access (not a from-import) so tests can monkeypatch the
+        # oracle to count host FFT invocations
+        f = fftmod.special_ifft if inverse else fftmod.special_fft
+        return f(np.asarray(x), ctx.params.m)
+    raise ValueError(
+        f"unknown Fourier mode {cfg.mode!r}; expected one of "
+        f"{common.FOURIER_MODES}")
 
 
 # ---------------------------------------------------------------------------
@@ -130,6 +173,23 @@ def decrypt_fused(c0, c1, s_mont, ctx: CKKSContext, n_limbs: int = 2,
 # ---------------------------------------------------------------------------
 # df32 Fourier transforms
 # ---------------------------------------------------------------------------
+
+
+def special_fft_planes(planes, m: int, block_rows: int = 1,
+                       interpret: bool | None = None):
+    """Jit-traceable df32 SpecialFFT on a four-plane (rows, n) f32 tuple.
+    Nests inside the client's jitted decode core (no host round-trip)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return fft_df.special_fft_planes(planes, m, block_rows=block_rows,
+                                     interpret=interpret)
+
+
+def special_ifft_planes(planes, m: int, block_rows: int = 1,
+                        interpret: bool | None = None):
+    """Jit-traceable df32 SpecialIFFT on df planes (encode direction)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return fft_df.special_ifft_planes(planes, m, block_rows=block_rows,
+                                      interpret=interpret)
 
 
 def special_fft(z, m: int, block_rows: int = 1, interpret: bool | None = None):

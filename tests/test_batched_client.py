@@ -1,6 +1,12 @@
 """Batched SoA client pipeline: bit-identity against the per-ciphertext
 reference path, nonce bookkeeping, and the one-pallas_call-per-fused-op
-regression guard for the limb-folded kernels."""
+regression guard for the limb-folded kernels.
+
+These tests pin ``fourier='host'`` — the complex128 oracle Fourier engine —
+because they assert BIT-identity against the per-message host reference
+path. The df32 device-Fourier engine (the default) is covered by
+tests/test_device_fourier.py, which asserts precision-budget equivalence
+instead."""
 
 import numpy as np
 import pytest
@@ -15,7 +21,7 @@ from repro.kernels import ops as kops
 
 @pytest.fixture(scope="module")
 def client():
-    return FHEClient(profile="tiny")
+    return FHEClient(profile="tiny", fourier="host")
 
 
 def _messages(ctx, batch, seed=0):
@@ -184,7 +190,7 @@ def test_fused_ops_issue_single_pallas_call(client, pallas_call_counter):
 def test_test_profile_batch_roundtrip():
     """One equivalence point on the larger 'test' profile (N=2^10, 6 limbs):
     the batched pipeline stays bit-identical to the reference path there."""
-    client = FHEClient(profile="test")
+    client = FHEClient(profile="test", fourier="host")
     ctx = client.ctx
     msgs = _messages(ctx, 2, seed=8)
     nonce0 = client._nonce

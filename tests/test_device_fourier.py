@@ -1,0 +1,208 @@
+"""Device-resident Fourier client pipeline (the df32 SpecialFFT path).
+
+Covers the tentpole guarantees of the device Fourier engine:
+
+  * encode_encrypt_batch / decrypt_decode_batch on ``fourier='device'``
+    perform ZERO host complex128 FFT calls (counted via monkeypatched
+    ``fftmod.special_ifft`` / ``special_fft``), while ``fourier='host'``
+    still routes through the oracle;
+  * device round-trips stay within the paper's bootstrapping precision
+    budget (19.29 bits) and close to the complex128 oracle, across N and
+    scale edge cases;
+  * the unified ``ops.fourier`` mode switch dispatches NTT / FFT / host
+    modes through one config surface.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import dfloat as dfl
+from repro.core import encoder, fft as fftmod
+from repro.core import boot_precision_bits, get_context
+from repro.core.context import CKKSContext, CKKSParams
+from repro.fhe_client.client import FHEClient, simulate_private_inference
+from repro.kernels import common as kcommon
+from repro.kernels import ops as kops
+
+# the paper's bootstrapping precision requirement (Fig. 3c)
+BOOT_PREC_BITS = 19.29
+
+
+def _messages(ctx, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((batch, ctx.params.n_slots))
+            + 1j * rng.standard_normal((batch, ctx.params.n_slots))) * 0.5
+
+
+@pytest.fixture()
+def fft_counter(monkeypatch):
+    """Counts every host complex128 SpecialFFT/IFFT invocation."""
+    calls = {"ifft": 0, "fft": 0}
+    real_ifft, real_fft = fftmod.special_ifft, fftmod.special_fft
+
+    def counting_ifft(*a, **k):
+        calls["ifft"] += 1
+        return real_ifft(*a, **k)
+
+    def counting_fft(*a, **k):
+        calls["fft"] += 1
+        return real_fft(*a, **k)
+
+    monkeypatch.setattr(fftmod, "special_ifft", counting_ifft)
+    monkeypatch.setattr(fftmod, "special_fft", counting_fft)
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# zero host FFT calls on the device path (the off-chip-round-trip guard)
+# ---------------------------------------------------------------------------
+
+
+def test_device_path_zero_host_fft_calls(fft_counter):
+    """The whole encode+encrypt / decrypt+decode pipeline — including the
+    jit trace — never touches the host complex128 transforms."""
+    client = FHEClient(profile="tiny")          # fresh client: traces here
+    msgs = _messages(client.ctx, 3)
+    batch = client.encode_encrypt_batch(msgs)
+    got = client.decrypt_decode_batch(batch.truncated(2))
+    assert fft_counter == {"ifft": 0, "fft": 0}
+    np.testing.assert_allclose(got, msgs, atol=1e-4)
+
+
+def test_host_path_still_uses_oracle(fft_counter):
+    """fourier='host' keeps routing through the complex128 oracle — the
+    counter proves the monkeypatch observes the dispatch point."""
+    client = FHEClient(profile="tiny", fourier="host")
+    msgs = _messages(client.ctx, 2)
+    batch = client.encode_encrypt_batch(msgs)
+    client.decrypt_decode_batch(batch.truncated(2))
+    assert fft_counter["ifft"] == 1 and fft_counter["fft"] == 1
+
+
+def test_fourier_arg_validated():
+    with pytest.raises(ValueError, match="device.*host"):
+        FHEClient(profile="tiny", fourier="numpy")
+
+
+# ---------------------------------------------------------------------------
+# precision: device engine vs complex128 oracle, paper budget
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("profile", ["tiny", "test"])
+def test_device_roundtrip_within_boot_budget(profile):
+    """Full encode_encrypt_batch -> decrypt_decode_batch on the device
+    engine recovers the message within the paper's bootstrapping precision
+    budget, and tracks the host-oracle client closely."""
+    dev = FHEClient(profile=profile)
+    host = FHEClient(profile=profile, fourier="host")
+    msgs = _messages(dev.ctx, 4, seed=1)
+    got_dev = dev.decrypt_decode_batch(
+        dev.encode_encrypt_batch(msgs).truncated(2))
+    got_host = host.decrypt_decode_batch(
+        host.encode_encrypt_batch(msgs).truncated(2))
+    assert boot_precision_bits(msgs, got_dev) >= BOOT_PREC_BITS
+    # both engines decode the same messages; the df32 kernel may only add
+    # error far below the budget (not the same ciphertexts: fresh noise)
+    np.testing.assert_allclose(got_dev, got_host, atol=1e-6)
+
+
+@pytest.mark.parametrize("logn,delta_bits", [(6, 30), (6, 40), (8, 45)])
+def test_encode_decode_precision_edges(logn, delta_bits):
+    """N and Delta edge cases (smallest ring; small/large scale): the
+    encode->decode plaintext round trip on the device engine stays inside
+    the precision budget and near the host oracle."""
+    ctx = CKKSContext(CKKSParams(logn=logn, n_limbs=3,
+                                 delta_bits=delta_bits))
+    rng = np.random.default_rng(logn * 100 + delta_bits)
+    z = (rng.standard_normal(ctx.params.n_slots)
+         + 1j * rng.standard_normal(ctx.params.n_slots)) * 0.5
+
+    coeffs_host = encoder.slots_to_coeffs(z, ctx)
+    coeffs_dev = np.asarray(encoder.slots_to_coeffs(z, ctx,
+                                                    fourier="device"))
+    # df32 SpecialIFFT vs complex128: ~49-bit agreement on O(1) coefficients
+    assert np.max(np.abs(coeffs_host - coeffs_dev)) < 1e-9
+
+    pt = encoder.encode(z, ctx, fourier="device")
+    back = encoder.decode(np.asarray(pt.data), ctx, fourier="device")
+    assert boot_precision_bits(z, back) >= BOOT_PREC_BITS
+
+    back_host = encoder.decode(np.asarray(pt.data), ctx)
+    np.testing.assert_allclose(back, back_host, atol=1e-8)
+
+
+def test_legacy_list_decrypt_per_row_scales_device():
+    """decrypt_batch on a list with per-ciphertext scales drives the
+    device core with a (B, 1) traced scale array."""
+    from repro.core import encryptor
+    client = FHEClient(profile="tiny")
+    msgs = _messages(client.ctx, 2, seed=5)
+    cts = client.encrypt_batch(msgs)
+    two = [encryptor.Ciphertext(c0=ct.c0[:2], c1=ct.c1[:2], n_limbs=2,
+                                scale=ct.scale) for ct in cts]
+    got = client.decrypt_batch(two)
+    np.testing.assert_allclose(got, msgs, atol=1e-4)
+
+
+def test_private_inference_loop_device():
+    """End-to-end private-inference loop on the device engine."""
+    client = FHEClient(profile="tiny")
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((2, 16)) * 0.2
+
+    def serve_fn(xin):
+        return xin @ np.ones((16, 4), np.float32) * 0.1
+
+    y, stats = simulate_private_inference(client, serve_fn, x, out_features=4)
+    assert stats["roundtrip_err"] < 1e-5
+    np.testing.assert_allclose(y, serve_fn(x.astype(np.float32)), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# unified Fourier-engine dispatch (ops.fourier mode switch)
+# ---------------------------------------------------------------------------
+
+
+def test_fourier_dispatch_fft_mode_matches_oracle():
+    ctx = get_context("tiny")
+    z = _messages(ctx, 2, seed=3)
+    planes = dfl.dfc_to_planes(
+        dfl.dfc_from_parts(jnp.asarray(z.real), jnp.asarray(z.imag)))
+    cfg = kcommon.FourierConfig(mode="fft")
+    out = dfl.dfc_from_planes(kops.fourier(planes, ctx, cfg, inverse=True))
+    got = np.asarray(dfl.df_to_float(out.re)) \
+        + 1j * np.asarray(dfl.df_to_float(out.im))
+    want = kops.fourier(z, ctx, kcommon.FourierConfig(mode="host"),
+                        inverse=True)
+    np.testing.assert_allclose(got, want, atol=1e-12)
+    # forward direction round-trips back to the slots
+    planes_b = dfl.dfc_to_planes(dfl.dfc_from_parts(
+        jnp.asarray(got.real), jnp.asarray(got.imag)))
+    back = dfl.dfc_from_planes(kops.fourier(planes_b, ctx, cfg))
+    got_b = np.asarray(dfl.df_to_float(back.re)) \
+        + 1j * np.asarray(dfl.df_to_float(back.im))
+    np.testing.assert_allclose(got_b, z, atol=1e-10)
+
+
+def test_fourier_dispatch_ntt_mode_matches_ntt_limbs():
+    ctx = get_context("tiny")
+    L, n = ctx.params.n_limbs, ctx.params.n
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(np.stack([
+        rng.integers(0, ctx.q_list[i], size=(2, n), dtype=np.uint32)
+        for i in range(L)]))
+    cfg = kcommon.FourierConfig(mode="ntt")
+    got = kops.fourier(x, ctx, cfg)
+    want = kops.ntt_limbs(x, ctx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    back = kops.fourier(got, ctx, cfg, inverse=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_fourier_dispatch_rejects_unknown_mode():
+    ctx = get_context("tiny")
+    with pytest.raises(ValueError, match="unknown Fourier mode"):
+        kops.fourier(np.zeros((1, ctx.params.n_slots)), ctx,
+                     kcommon.FourierConfig(mode="dct"))
