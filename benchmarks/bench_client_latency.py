@@ -168,25 +168,14 @@ def _fused_batched_rows(profile: str = "test", big_b: int = 16,
     }]
 
 
-def _device_fourier_rows(profile: str = "test", big_b: int = 16,
-                         reps: int = 3):
-    """Host-round-trip elimination: host-Fourier oracle client vs the fully
-    device-resident client (df32 SpecialFFT/IFFT Pallas kernels traced into
-    the jitted cores) at B=1 and B=big_b.
-
-    Every section is synchronized with ``jax.block_until_ready`` (the
-    device decrypt path returns numpy, which is already synchronous). The
-    comparison isolates the Fourier engine: identical fused encrypt/decrypt
-    kernels, identical batching, only the slot<->coefficient transform and
-    its host<->device round-trip differ.
-    """
+def _time_client_pair(clients: dict, big_b: int, reps: int):
+    """Shared comparison harness: warm both clients on both shapes and
+    directions, then time encode_encrypt / decrypt_decode at B=1 and
+    B=big_b, everything ``jax.block_until_ready``-synchronized (decrypt
+    returns numpy, already synchronous). Returns {(client, op, B): s}."""
     import jax
 
-    clients = {
-        "host": FHEClient(profile=profile, fourier="host"),
-        "device": FHEClient(profile=profile),
-    }
-    ctx = clients["host"].ctx
+    ctx = next(iter(clients.values())).ctx
     rng = np.random.default_rng(0)
 
     def msgs(b):
@@ -194,7 +183,7 @@ def _device_fourier_rows(profile: str = "test", big_b: int = 16,
                 + 1j * rng.standard_normal((b, ctx.params.n_slots))) * 0.5
 
     m1, mb = msgs(1), msgs(big_b)
-    times = {}                                   # (engine, op, B) -> seconds
+    times = {}
     for name, cl in clients.items():
         def enc_sync(m):
             ct = cl.encode_encrypt_batch(m)
@@ -216,24 +205,66 @@ def _device_fourier_rows(profile: str = "test", big_b: int = 16,
         for b, ct in ((1, one), (big_b, two)):
             t0 = time.perf_counter()
             for _ in range(reps):
-                cl.decrypt_decode_batch(ct)      # numpy out: synchronous
+                cl.decrypt_decode_batch(ct)
             times[name, "decrypt_decode", b] = \
                 (time.perf_counter() - t0) / reps
+    return times
 
-    rows = []
-    for op in ("encode_encrypt", "decrypt_decode"):
-        for b in (1, big_b):
-            t_host = times["host", op, b]
-            t_dev = times["device", op, b]
-            rows.append({
-                "bench": "device_fourier",
-                "name": f"{profile}_{op}_b{b}_device",
-                "us_per_call": round(t_dev * 1e6, 1),
-                "derived": f"ct_per_s={b / t_dev:.1f};"
-                           f"host_fourier_us={t_host * 1e6:.1f};"
-                           f"vs_host_fourier={t_host / t_dev:.2f}x",
-            })
-    return rows
+
+def _pair_rows(times, bench, base, variant, big_b, fmt):
+    """Rows for `variant` timings with `base` as the comparison column."""
+    return [{
+        "bench": bench,
+        "name": fmt["name"].format(op=op, b=b),
+        "us_per_call": round(times[variant, op, b] * 1e6, 1),
+        "derived": (f"ct_per_s={b / times[variant, op, b]:.1f};"
+                    + fmt["derived"].format(
+                        base_us=times[base, op, b] * 1e6,
+                        ratio=times[base, op, b] / times[variant, op, b])),
+    } for op in ("encode_encrypt", "decrypt_decode") for b in (1, big_b)]
+
+
+def _device_fourier_rows(profile: str = "test", big_b: int = 16,
+                         reps: int = 3):
+    """Host-round-trip elimination: host-Fourier oracle client vs the fully
+    device-resident client (df32 SpecialFFT/IFFT Pallas kernels traced into
+    the jitted cores) at B=1 and B=big_b.
+
+    The comparison isolates the Fourier engine: identical fused
+    encrypt/decrypt kernels, identical batching, only the
+    slot<->coefficient transform and its host<->device round-trip differ.
+    """
+    times = _time_client_pair({
+        "host": FHEClient(profile=profile, fourier="host"),
+        "device": FHEClient(profile=profile),
+    }, big_b, reps)
+    return _pair_rows(times, "device_fourier", "host", "device", big_b, {
+        "name": profile + "_{op}_b{b}_device",
+        "derived": "host_fourier_us={base_us:.1f};"
+                   "vs_host_fourier={ratio:.2f}x",
+    })
+
+
+def _megakernel_rows(profile: str = "test", big_b: int = 16, reps: int = 3):
+    """Single-launch streaming megakernel vs the staged device pipeline:
+    ``FHEClient(pipeline='megakernel')`` lowers each client op to ONE
+    pallas_call (SpecialFFT + Delta/RNS + NTT + pointwise in one kernel
+    body) where the staged cores launch the FFT kernel and the folded
+    NTT/pointwise kernel separately inside one jit.
+
+    On CPU interpret both pipelines execute the same op sequence, so the
+    ratio mostly tracks XLA scheduling; the row exists to pin the launch
+    structure (1 vs 2 kernels) and give the TPU run a baseline slot.
+    """
+    times = _time_client_pair({
+        "staged": FHEClient(profile=profile),
+        "megakernel": FHEClient(profile=profile, pipeline="megakernel"),
+    }, big_b, reps)
+    return _pair_rows(times, "megakernel", "staged", "megakernel", big_b, {
+        "name": profile + "_{op}_b{b}_megakernel",
+        "derived": "staged_us={base_us:.1f};vs_staged={ratio:.2f}x;"
+                   "pallas_calls_per_op=1_vs_2",
+    })
 
 
 def run():
@@ -282,4 +313,6 @@ def run():
     rows += _fused_batched_rows()
     # device-resident Fourier engine vs the host complex128 round-trip
     rows += _device_fourier_rows()
+    # single-launch streaming megakernel vs the staged device pipeline
+    rows += _megakernel_rows()
     return rows

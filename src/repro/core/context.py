@@ -117,5 +117,16 @@ class CKKSContext:
 
 
 @functools.lru_cache(maxsize=None)
-def get_context(profile: str = "paper") -> CKKSContext:
-    return CKKSContext(PROFILES[profile])
+def context_for(params: CKKSParams) -> CKKSContext:
+    """Context cache keyed by the (frozen, hashable) parameter set — named
+    profiles and ad-hoc parameter grids (the property-test sweeps) share
+    one memo, so repeated use of the same params never redoes the prime
+    search / plan construction."""
+    return CKKSContext(params)
+
+
+def get_context(profile: str | CKKSParams = "paper") -> CKKSContext:
+    """Context for a named profile, or directly for a CKKSParams value."""
+    if isinstance(profile, CKKSParams):
+        return context_for(profile)
+    return context_for(PROFILES[profile])

@@ -97,13 +97,20 @@ def slots_to_coeffs_device(re, im, ctx: CKKSContext, block_rows: int = 1,
     return jnp.concatenate([w_re, w_im], axis=-1)
 
 
+def delta_scale_round(coeffs, delta) -> dfl.DF:
+    """(..., N) float64 coefficients -> integer-valued df64 pair of
+    round(coeffs * Delta). Exact (two_prod + df_round); pure jnp, safe both
+    in the jitted cores and inside the streaming megakernel body."""
+    hi, lo = dfl.two_prod(jnp.asarray(coeffs), jnp.float64(delta))
+    return dfl.df_round(dfl.DF(hi, lo))
+
+
 def coeffs_to_plaintext_data(coeffs, ctx: CKKSContext, n_limbs: int):
     """(..., N) float64 coefficients -> (L, ..., N) NTT-domain residues.
     Pure jnp (jit-safe): Delta-scale + exact rounding + broadcasted RNS
     reduction + stacked-limb NTT (one vectorized stage loop, all limbs)."""
     p = ctx.params
-    hi, lo = dfl.two_prod(jnp.asarray(coeffs), jnp.float64(p.delta))
-    scaled = dfl.df_round(dfl.DF(hi, lo))
+    scaled = delta_scale_round(coeffs, p.delta)
     residues = rns.to_rns_df(scaled, ctx.q_list[:n_limbs])   # (L, ..., N)
     return nttmod.ntt_stacked(residues, ctx.stacked_plans(n_limbs))
 

@@ -38,6 +38,17 @@ def to_rns_df(x: dfl.DF, q_list: tuple[int, ...]) -> jnp.ndarray:
     return r.astype(jnp.uint32)
 
 
+def to_rns_limb_t(x: dfl.DF, qf) -> jnp.ndarray:
+    """One limb of ``to_rns_df`` with a TRACED modulus: qf is a float64
+    scalar (e.g. read from the streaming megakernel's SMEM constant table
+    and cast). Same fmod/where sequence as the broadcasted pass — fmod is
+    elementwise, so the residues are bit-identical per limb."""
+    r = jnp.fmod(x.hi, qf) + jnp.fmod(x.lo, qf)               # in (-2q, 2q)
+    r = jnp.fmod(r, qf)
+    r = jnp.where(r < 0, r + qf, r)
+    return r.astype(jnp.uint32)
+
+
 def crt2_to_df(c0, c1, q0: int, q1: int) -> dfl.DF:
     """Two-limb CRT -> centered integer value as an exact df64 pair.
 

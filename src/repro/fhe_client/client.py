@@ -35,6 +35,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import dfloat as dfl
 from repro.core import encoder, encryptor, rns
 from repro.core.context import CKKSContext, get_context
 from repro.core.encryptor import CiphertextBatch
@@ -59,15 +60,38 @@ class FHEClient:
       * ``'host'`` — complex128 numpy oracle FFTs outside the jit
         (bit-equivalent to the pre-device-Fourier pipeline; the reference
         path equivalence tests compare against).
+
+    ``pipeline`` selects how the device-resident chain is launched:
+
+      * ``'staged'`` (default) — the PR 2 cores: one jitted program per
+        direction, with the df32 FFT kernel and the limb-folded NTT/
+        pointwise kernel as separate pallas_calls inside it;
+      * ``'megakernel'`` — the streaming megakernel
+        (``kernels.client_stream``): the ENTIRE encode+encrypt and
+        decrypt+decode chains are each ONE pallas_call, the Fourier engine
+        mode-switching FFT->NTT inside the kernel body (the ASIC's MDC
+        streaming pipeline). Ciphertexts are bit-identical to 'staged'
+        for fixed seeds. Requires ``fourier='device'`` (the megakernel IS
+        the device Fourier path).
     """
 
-    def __init__(self, profile: str = "test", seed: int | None = None,
-                 fourier: str = "device"):
+    def __init__(self, profile="test", seed: int | None = None,
+                 fourier: str = "device", pipeline: str = "staged"):
+        # `profile` is a named profile string or a CKKSParams value (the
+        # property-test parameter grids construct clients off-profile).
         if fourier not in ("device", "host"):
             raise ValueError(f"fourier must be 'device' or 'host', "
                              f"got {fourier!r}")
+        if pipeline not in ("staged", "megakernel"):
+            raise ValueError(f"pipeline must be 'staged' or 'megakernel', "
+                             f"got {pipeline!r}")
+        if pipeline == "megakernel" and fourier != "device":
+            raise ValueError("pipeline='megakernel' fuses the df32 Fourier "
+                             "kernels into the streaming kernel body and "
+                             "therefore requires fourier='device'")
         self.ctx: CKKSContext = get_context(profile)
         self.fourier = fourier
+        self.pipeline = pipeline
         sk, pk = encryptor.keygen(self.ctx, seed=seed)
         self.keys = ClientKeys(sk, pk)
         self._nonce = 0
@@ -77,6 +101,8 @@ class FHEClient:
         self._decrypt_core = jax.jit(self._decrypt_core_impl)
         self._encrypt_core_dev = jax.jit(self._encrypt_core_dev_impl)
         self._decrypt_core_dev = jax.jit(self._decrypt_core_dev_impl)
+        self._encrypt_core_mega = jax.jit(self._encrypt_core_mega_impl)
+        self._decrypt_core_mega = jax.jit(self._decrypt_core_mega_impl)
 
     # --- message packing ----------------------------------------------------
 
@@ -154,12 +180,34 @@ class FHEClient:
                            ctx.q_list[0], ctx.q_list[1])
         return encoder.coeffs_to_slots_device(v.hi, v.lo, ctx, scale)
 
+    # --- streaming megakernel cores (pipeline='megakernel') -----------------
+
+    def _encrypt_core_mega_impl(self, re, im, nonce0):
+        """(B, n_slots) f64 slot parts -> (c0, c1) (B, L, N): the ENTIRE
+        encode+encrypt chain as ONE pallas_call (SpecialIFFT, Delta-scale,
+        RNS, NTT, PRNG, pointwise all inside one kernel body). The only
+        jnp work outside the kernel is the f64 -> df32 plane split."""
+        z = dfl.dfc_from_parts(re, im)
+        return kops.encode_encrypt_stream(
+            dfl.dfc_to_planes(z), self.keys.pk.b_mont, self.keys.pk.a_mont,
+            self.ctx, nonce0=nonce0)
+
+    def _decrypt_core_mega_impl(self, c0, c1, scale):
+        """(B, 2, N) ciphertext stacks -> (B, n_slots) f64 (re, im) slot
+        parts: decrypt pointwise, INTT, CRT, /Delta and SpecialFFT as ONE
+        pallas_call; outside the kernel only the df32 -> f64 collapse."""
+        planes = kops.decrypt_decode_stream(
+            c0, c1, self.keys.sk.s_mont, self.ctx, scale)
+        w = dfl.dfc_from_planes(planes)
+        return dfl.df_to_float(w.re), dfl.df_to_float(w.im)
+
     def encode_encrypt_batch(self, messages: np.ndarray) -> CiphertextBatch:
         """(B, n_slots) complex messages -> CiphertextBatch (B, L, N).
 
         fourier='device': one jitted program does everything (df32 Pallas
         SpecialIFFT included) — the only host work is splitting the message
-        into real/imag operand planes at entry.
+        into real/imag operand planes at entry. With pipeline='megakernel'
+        that jitted program is ONE pallas_call.
         fourier='host': host batched complex128 SpecialIFFT, then the
         jitted device core (the PR 1 pipeline, kept as oracle).
         """
@@ -170,7 +218,9 @@ class FHEClient:
         self._nonce += np.shape(messages)[0]
         if self.fourier == "device":
             msgs = np.asarray(messages, np.complex128)
-            c0, c1 = self._encrypt_core_dev(
+            core = (self._encrypt_core_mega if self.pipeline == "megakernel"
+                    else self._encrypt_core_dev)
+            c0, c1 = core(
                 jnp.asarray(msgs.real), jnp.asarray(msgs.imag),
                 jnp.uint32(nonce0))
         else:
@@ -184,8 +234,10 @@ class FHEClient:
         """CiphertextBatch (server-returned view; first 2 limbs are used)
         -> (B, n_slots) complex messages."""
         if self.fourier == "device":
-            re, im = self._decrypt_core_dev(cts.c0[:, :2], cts.c1[:, :2],
-                                            jnp.float64(cts.scale))
+            core = (self._decrypt_core_mega if self.pipeline == "megakernel"
+                    else self._decrypt_core_dev)
+            re, im = core(cts.c0[:, :2], cts.c1[:, :2],
+                          jnp.float64(cts.scale))
             return np.asarray(re) + 1j * np.asarray(im)
         hi, lo = self._decrypt_core(cts.c0[:, :2], cts.c1[:, :2])
         return encoder.coeffs_to_slots(np.asarray(hi) + np.asarray(lo),
@@ -210,7 +262,9 @@ class FHEClient:
         c1 = jnp.stack([ct.c1[:2] for ct in cts])
         scale = np.array([ct.scale for ct in cts])[:, None]
         if self.fourier == "device":
-            re, im = self._decrypt_core_dev(c0, c1, jnp.asarray(scale))
+            core = (self._decrypt_core_mega if self.pipeline == "megakernel"
+                    else self._decrypt_core_dev)
+            re, im = core(c0, c1, jnp.asarray(scale))
             return np.asarray(re) + 1j * np.asarray(im)
         hi, lo = self._decrypt_core(c0, c1)
         return encoder.coeffs_to_slots(np.asarray(hi) + np.asarray(lo),

@@ -187,33 +187,72 @@ def decrypt_limb(c0_l, c1_l, s_mont_l, ctx: CKKSContext, limb: int,
 # for ciphertext b*bb + r — bit-identical outputs.
 
 
+def sample_vee_k(seed: int, nonce, n: int, rows: int):
+    """In-kernel (v, e0, e1) encryption randomness for `rows` batch rows.
+
+    nonce: traced (rows, 1) uint32 column (base + per-row offset). Returns
+    SIGNED int32 draws — limb-independent, exactly the streams the host
+    reference samples — so one sampling pass feeds every limb's
+    ``encrypt_limb_stage`` (the residue cast is per-limb).
+    """
+    sv = np.uint32(STREAM_ENC_V) + np.uint32(16) * nonce     # (rows, 1)
+    s0 = np.uint32(STREAM_ENC_E0) + np.uint32(16) * nonce
+    s1 = np.uint32(STREAM_ENC_E1) + np.uint32(16) * nonce
+    return (_zo_k(seed, sv, n, rows), _cbd_k(seed, s0, n, rows),
+            _cbd_k(seed, s1, n, rows))
+
+
+def encrypt_limb_stage(vee, pt_l, b_l, a_l, c_ref,
+                       kc: common.StackedKernelConsts, limb: int = 0):
+    """One limb of the streaming encrypt datapath: signed (v, e0, e1) ->
+    residues -> NTT -> pointwise with the public key rows.
+
+    vee: signed int32 (rows, N) draws from ``sample_vee_k``; pt_l/b_l/a_l:
+    this limb's NTT-domain plaintext block and Montgomery-form pk rows;
+    c_ref: the stacked-constants ref, indexed at row `limb` (0 for the
+    limb-folded kernels whose block is one row; l for the megakernel which
+    holds the whole table). Returns (c0_l, c1_l) uint32 (rows, N).
+    """
+    q = c_ref[limb, common.OFF_Q]
+    qinv = c_ref[limb, common.OFF_QINV]
+    v, e0, e1 = (_to_residue_k(x, q) for x in vee)
+
+    # one stacked stage loop for all three polynomials: the NTT is
+    # row-independent, so this is bit-identical to three separate
+    # transforms while tracing a third of the butterfly ops
+    h = common.ntt_stages_t(jnp.concatenate([v, e0, e1], axis=0),
+                            c_ref, kc, q, qinv, row=limb)
+    v_h, e0_h, e1_h = jnp.split(h, 3, axis=0)
+
+    vb = modmul.mulmod_montgomery_limb_t(v_h, b_l, q, qinv)
+    va = modmul.mulmod_montgomery_limb_t(v_h, a_l, q, qinv)
+    c0_l = modmul.addmod(modmul.addmod(vb, e0_h, q), pt_l, q)
+    c1_l = modmul.addmod(va, e1_h, q)
+    return c0_l, c1_l
+
+
+def decrypt_limb_stage(c0_l, c1_l, s_l, c_ref,
+                       kc: common.StackedKernelConsts, limb: int = 0):
+    """One limb of the streaming decrypt datapath: pointwise + INTT ->
+    coefficient-domain residues (rows, N)."""
+    q = c_ref[limb, common.OFF_Q]
+    qinv = c_ref[limb, common.OFF_QINV]
+    c1s = modmul.mulmod_montgomery_limb_t(c1_l, s_l, q, qinv)
+    m_ntt = modmul.addmod(c0_l, c1s, q)
+    return common.intt_stages_t(m_ntt, c_ref, kc, q, qinv, row=limb)
+
+
 def _encrypt_kernel_folded(c_ref, nz_ref, pt_ref, b_ref, a_ref,
                            c0_ref, c1_ref, *,
                            kc: common.StackedKernelConsts, seed: int):
     n = kc.n
     rows = pt_ref.shape[0]
-    q = c_ref[0, common.OFF_Q]
-    qinv = c_ref[0, common.OFF_QINV]
     nonce = (nz_ref[0, 0]
              + pl.program_id(1).astype(jnp.uint32) * np.uint32(rows)
              + jax.lax.broadcasted_iota(jnp.uint32, (rows, 1), 0))
-    sv = np.uint32(STREAM_ENC_V) + np.uint32(16) * nonce     # (rows, 1)
-    s0 = np.uint32(STREAM_ENC_E0) + np.uint32(16) * nonce
-    s1 = np.uint32(STREAM_ENC_E1) + np.uint32(16) * nonce
-
-    v = _to_residue_k(_zo_k(seed, sv, n, rows), q)
-    e0 = _to_residue_k(_cbd_k(seed, s0, n, rows), q)
-    e1 = _to_residue_k(_cbd_k(seed, s1, n, rows), q)
-
-    v_h = common.ntt_stages_t(v, c_ref, kc, q, qinv)
-    e0_h = common.ntt_stages_t(e0, c_ref, kc, q, qinv)
-    e1_h = common.ntt_stages_t(e1, c_ref, kc, q, qinv)
-
-    vb = modmul.mulmod_montgomery_limb_t(v_h, b_ref[...], q, qinv)
-    va = modmul.mulmod_montgomery_limb_t(v_h, a_ref[...], q, qinv)
-    c0_ref[:, 0, :] = modmul.addmod(
-        modmul.addmod(vb, e0_h, q), pt_ref[:, 0, :], q)
-    c1_ref[:, 0, :] = modmul.addmod(va, e1_h, q)
+    vee = sample_vee_k(seed, nonce, n, rows)
+    c0_ref[:, 0, :], c1_ref[:, 0, :] = encrypt_limb_stage(
+        vee, pt_ref[:, 0, :], b_ref[...], a_ref[...], c_ref, kc)
 
 
 def _batch_block(batch: int, batch_block: int | None) -> int:
@@ -262,12 +301,8 @@ def encrypt_limbs(pt, b_mont, a_mont, ctx: CKKSContext, seed: int,
 
 def _decrypt_kernel_folded(c_ref, c0_ref, c1_ref, s_ref, m_ref, *,
                            kc: common.StackedKernelConsts):
-    q = c_ref[0, common.OFF_Q]
-    qinv = c_ref[0, common.OFF_QINV]
-    c1s = modmul.mulmod_montgomery_limb_t(c1_ref[:, 0, :], s_ref[...],
-                                          q, qinv)
-    m_ntt = modmul.addmod(c0_ref[:, 0, :], c1s, q)
-    m_ref[:, 0, :] = common.intt_stages_t(m_ntt, c_ref, kc, q, qinv)
+    m_ref[:, 0, :] = decrypt_limb_stage(
+        c0_ref[:, 0, :], c1_ref[:, 0, :], s_ref[...], c_ref, kc)
 
 
 def decrypt_limbs(c0, c1, s_mont, ctx: CKKSContext,

@@ -1,0 +1,244 @@
+"""Streaming client megakernel: ONE pallas_call per batched client op.
+
+This is the end of the ROADMAP's "fold the df32 FFT rows grid together with
+the Delta-scale/RNS stage" item — the TPU analogue of ABC-FHE's full MDC
+streaming pipeline, where encode/encrypt flow through the Reconfigurable
+Streaming Core as one dataflow and the Fourier engine mode-switches between
+FFT and NTT *inside* the pipeline (paper Fig. 3a). The staged PR 2 cores
+launch the df32 SpecialFFT kernel and the limb-folded NTT/pointwise kernel
+as separate pallas_calls inside one jit; here the whole chain is one kernel
+body:
+
+  encode+encrypt (one launch):
+      df32 SpecialIFFT stages -> bit-reversal -> df32 -> f64 collapse
+      -> Delta-scale + exact round (df64) -> per-limb RNS reduction
+      -> per-limb NTT -> Philox PRNG -> fused encrypt pointwise
+  decrypt+decode (one launch):
+      per-limb decrypt pointwise -> INTT -> two-limb CRT (df64) -> /Delta
+      -> df32 split -> bit-reversal -> df32 SpecialFFT stages
+
+The stage bodies are the SAME functions the staged kernels run
+(``fft_df.fft_stage_pipeline``, ``client_pointwise.encrypt_limb_stage`` /
+``decrypt_limb_stage``, ``common.ntt_stages_t`` family), so megakernel
+ciphertexts are bit-identical to the staged path for fixed seeds — asserted
+by tests/test_client_stream.py.
+
+Launch geometry: ONE grid axis streams batch-row blocks (``common.row_grid``
+semantics); the limb loop is unrolled INSIDE the kernel body over the whole
+(L, K) SMEM constant table (the staged kernels instead put limbs on a grid
+axis and see one table row per step). That is exactly the ASIC's Fourier
+reconfiguration: the FFT runs once per ciphertext, then the same datapath
+replays the NTT stage schedule per limb. The df32 FFT twiddles stay a packed
+VMEM table — DESIGN.md §2 records why the rot-group orbit has no doubling
+seeds, so unlike the NTT scalars they cannot ride in the SMEM seed table;
+the megakernel's "seed SRAM" is the (L, K) SMEM table + the (4, n_slots)
+VMEM twiddle planes + the (1, n_slots) bit-reversal permutation, together.
+
+Datapath note: the Delta-scale / RNS / CRT interior runs in f64 (and uint64
+for the CRT residue products) inside the kernel body — exact, and what the
+staged jitted cores do between their launches. In interpret mode (the CI
+path, and this container) that executes natively; a compiled TPU lowering
+of the megakernel would substitute the df64 stages with df32^2 chains, which
+is recorded as an open item in ROADMAP.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import dfloat as dfl
+from repro.core import encoder, rns
+from repro.core.context import CKKSContext
+from repro.core.ntt import bitrev_indices
+from repro.kernels import client_pointwise, common, fft_df
+
+
+def stream_consts(ctx: CKKSContext, n_limbs: int, inverse: bool):
+    """The megakernel's constant bundle for one direction.
+
+    Returns (kc, tw, offsets, rev): the (L, K) stacked NTT seed table
+    (SMEM), the (4, n_slots) packed df32 FFT twiddle planes (VMEM), their
+    static per-stage offsets, and the (1, n_slots) bit-reversal permutation
+    — the in-kernel mode switch reads NTT state from the first and FFT
+    state from the second.
+    """
+    p = ctx.params
+    kc = common.stacked_kernel_consts(ctx.plans[:n_limbs])
+    tw, offsets = fft_df.packed_twiddles(p.n_slots, p.m, inverse=inverse)
+    rev = bitrev_indices(p.n_slots).astype(np.int32).reshape(1, -1)
+    return kc, tw, offsets, rev
+
+
+def _bitrev_planes(z: dfl.DFComplex, rev) -> dfl.DFComplex:
+    """Apply the traced bit-reversal permutation to all four df planes
+    (the in-kernel analogue of the ASIC's streaming commutators)."""
+    return dfl.dfc_from_planes(tuple(
+        jnp.take(p, rev, axis=-1) for p in dfl.dfc_to_planes(z)))
+
+
+# ---------------------------------------------------------------------------
+# encode+encrypt megakernel
+# ---------------------------------------------------------------------------
+
+
+def _encode_encrypt_kernel(c_ref, nz_ref, rh_ref, rl_ref, ih_ref, il_ref,
+                           tw_ref, rev_ref, b_ref, a_ref, c0_ref, c1_ref, *,
+                           kc: common.StackedKernelConsts, seed: int,
+                           offsets, delta: float, n_slots: int):
+    n = kc.n
+    rows = rh_ref.shape[0]
+
+    # --- Fourier engine, FFT mode: df32 SpecialIFFT stage pipeline --------
+    z = dfl.dfc_from_planes(
+        (rh_ref[...], rl_ref[...], ih_ref[...], il_ref[...]))
+    z = fft_df.fft_stage_pipeline(z, tw_ref[...], offsets, n=n_slots,
+                                  inverse=True)
+    w = _bitrev_planes(z, rev_ref[0])
+
+    # --- df32 -> f64 coefficients, Delta-scale + exact round --------------
+    coeffs = jnp.concatenate(
+        [dfl.df_to_float(w.re), dfl.df_to_float(w.im)], axis=-1)  # (rows, N)
+    scaled = encoder.delta_scale_round(coeffs, delta)
+
+    # --- PRNG once per ciphertext (limb-independent streams) --------------
+    nonce = (nz_ref[0, 0]
+             + pl.program_id(0).astype(jnp.uint32) * np.uint32(rows)
+             + jax.lax.broadcasted_iota(jnp.uint32, (rows, 1), 0))
+    vee = client_pointwise.sample_vee_k(seed, nonce, n, rows)
+
+    # --- Fourier engine, NTT mode: per-limb RNS -> NTT -> pointwise -------
+    for l in range(kc.n_limbs):
+        qf = c_ref[l, common.OFF_Q].astype(jnp.float64)
+        pt_l = rns.to_rns_limb_t(scaled, qf)
+        pt_l = common.ntt_stages_t(pt_l, c_ref, kc,
+                                   c_ref[l, common.OFF_Q],
+                                   c_ref[l, common.OFF_QINV], row=l)
+        c0_l, c1_l = client_pointwise.encrypt_limb_stage(
+            vee, pt_l, b_ref[l], a_ref[l], c_ref, kc, limb=l)
+        c0_ref[:, l, :] = c0_l
+        c1_ref[:, l, :] = c1_l
+
+
+def encode_encrypt_stream(planes, pk_b_mont, pk_a_mont, ctx: CKKSContext,
+                          seed: int, nonce0=0,
+                          batch_block: int | None = None,
+                          interpret: bool = True):
+    """The whole encode+encrypt chain in ONE pallas_call.
+
+    planes: four (B, n_slots) f32 df planes of the slot values (the same
+    ``dfloat.dfc_to_planes`` layout the staged device core feeds its FFT
+    kernel); pk rows (L, N) Montgomery form; nonce0 a Python int or traced
+    uint32 scalar. Returns (c0, c1), each (B, L, N) uint32, bit-identical
+    to the staged pipeline for the nonce layout nonce0 + batch_idx.
+    """
+    p = ctx.params
+    batch = planes[0].shape[0]
+    n_limbs, n, n_slots = p.n_limbs, p.n, p.n_slots
+    bb = client_pointwise._batch_block(batch, batch_block)
+    kc, tw, offsets, rev = stream_consts(ctx, n_limbs, inverse=True)
+    nz = jnp.asarray(nonce0, jnp.uint32).reshape(1, 1)
+
+    cspec = pl.BlockSpec((n_limbs, kc.n_scalars), lambda b: (0, 0),
+                         memory_space=pltpu.SMEM)
+    nzspec = pl.BlockSpec((1, 1), lambda b: (0, 0), memory_space=pltpu.SMEM)
+    sspec = common.row_block_spec(bb, n_slots)           # slot-plane blocks
+    twspec = common.table_block_spec(4, n_slots)
+    revspec = pl.BlockSpec((1, n_slots), lambda b: (0, 0),
+                           memory_space=pltpu.VMEM)
+    pkspec = pl.BlockSpec((n_limbs, n), lambda b: (0, 0),
+                          memory_space=pltpu.VMEM)
+    ctspec = pl.BlockSpec((bb, n_limbs, n), lambda b: (b, 0, 0),
+                          memory_space=pltpu.VMEM)
+    shape = jax.ShapeDtypeStruct((batch, n_limbs, n), jnp.uint32)
+    call = pl.pallas_call(
+        functools.partial(_encode_encrypt_kernel, kc=kc, seed=seed,
+                          offsets=offsets, delta=p.delta, n_slots=n_slots),
+        grid=(batch // bb,),
+        in_specs=[cspec, nzspec] + [sspec] * 4 + [twspec, revspec,
+                                                  pkspec, pkspec],
+        out_specs=(ctspec, ctspec),
+        out_shape=(shape, shape),
+        interpret=interpret,
+    )
+    return call(jnp.asarray(kc.table), nz, *planes, jnp.asarray(tw),
+                jnp.asarray(rev), pk_b_mont[:n_limbs], pk_a_mont[:n_limbs])
+
+
+# ---------------------------------------------------------------------------
+# decrypt+decode megakernel
+# ---------------------------------------------------------------------------
+
+
+def _decrypt_decode_kernel(c_ref, c0_ref, c1_ref, s_ref, sc_ref, tw_ref,
+                           rev_ref, orh, orl, oih, oil, *,
+                           kc: common.StackedKernelConsts, offsets,
+                           q0: int, q1: int, n_slots: int):
+    # --- per-limb decrypt pointwise + INTT (Fourier engine, NTT mode) -----
+    m = [client_pointwise.decrypt_limb_stage(
+            c0_ref[:, l, :], c1_ref[:, l, :], s_ref[l], c_ref, kc, limb=l)
+         for l in range(2)]
+
+    # --- two-limb CRT -> centered df64 -> /Delta --------------------------
+    v = rns.crt2_to_df(m[0].astype(jnp.uint64), m[1].astype(jnp.uint64),
+                       q0, q1)
+    scale = sc_ref[...]                                  # (rows, 1) f64
+    coeffs = v.hi / scale + v.lo / scale
+    re = coeffs[:, :n_slots]
+    im = coeffs[:, n_slots:]
+
+    # --- Fourier engine, FFT mode: df32 SpecialFFT stage pipeline ---------
+    z = _bitrev_planes(dfl.dfc_from_parts(re, im), rev_ref[0])
+    z = fft_df.fft_stage_pipeline(z, tw_ref[...], offsets, n=n_slots,
+                                  inverse=False)
+    orh[...], orl[...], oih[...], oil[...] = dfl.dfc_to_planes(z)
+
+
+def decrypt_decode_stream(c0, c1, s_mont, ctx: CKKSContext, scale,
+                          batch_block: int | None = None,
+                          interpret: bool = True):
+    """The whole decrypt+decode chain in ONE pallas_call.
+
+    c0/c1: (B, 2, N) uint32 server-returned limb stacks; s_mont (L, N);
+    scale a traced f64 scalar or (B, 1) array (per-ciphertext scales).
+    Returns four (B, n_slots) f32 df planes of the decoded slots (collapse
+    with ``dfloat.df_to_float`` outside), matching the staged device decode
+    bit-for-bit (same stage functions, same op order).
+    """
+    p = ctx.params
+    batch, _, n = c0.shape
+    n_slots = p.n_slots
+    bb = client_pointwise._batch_block(batch, batch_block)
+    kc, tw, offsets, rev = stream_consts(ctx, 2, inverse=False)
+    sc = jnp.broadcast_to(jnp.asarray(scale, jnp.float64).reshape(-1, 1),
+                          (batch, 1))
+
+    cspec = pl.BlockSpec((2, kc.n_scalars), lambda b: (0, 0),
+                         memory_space=pltpu.SMEM)
+    ctspec = pl.BlockSpec((bb, 2, n), lambda b: (b, 0, 0),
+                          memory_space=pltpu.VMEM)
+    skspec = pl.BlockSpec((2, n), lambda b: (0, 0), memory_space=pltpu.VMEM)
+    scspec = pl.BlockSpec((bb, 1), lambda b: (b, 0),
+                          memory_space=pltpu.VMEM)
+    twspec = common.table_block_spec(4, n_slots)
+    revspec = pl.BlockSpec((1, n_slots), lambda b: (0, 0),
+                           memory_space=pltpu.VMEM)
+    ospec = common.row_block_spec(bb, n_slots)
+    oshape = jax.ShapeDtypeStruct((batch, n_slots), jnp.float32)
+    call = pl.pallas_call(
+        functools.partial(_decrypt_decode_kernel, kc=kc, offsets=offsets,
+                          q0=ctx.q_list[0], q1=ctx.q_list[1],
+                          n_slots=n_slots),
+        grid=(batch // bb,),
+        in_specs=[cspec, ctspec, ctspec, skspec, scspec, twspec, revspec],
+        out_specs=(ospec,) * 4,
+        out_shape=(oshape,) * 4,
+        interpret=interpret,
+    )
+    return call(jnp.asarray(kc.table), c0[:, :2], c1[:, :2], s_mont[:2], sc,
+                jnp.asarray(tw), jnp.asarray(rev))

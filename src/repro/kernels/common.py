@@ -347,20 +347,24 @@ def _s(m: int) -> int:
 # shift-add kernels word-for-word.
 
 
-def gen_twiddles_t(c_ref, off: int, nfac: int, q, qinv_neg) -> jnp.ndarray:
+def gen_twiddles_t(c_ref, off: int, nfac: int, q, qinv_neg,
+                   row: int = 0) -> jnp.ndarray:
     """Traced OTF twiddle doubling: base/factors read from c_ref columns
-    [off, off+nfac], q/qinv_neg traced scalars. Returns (2^nfac,) uint32."""
+    [off, off+nfac] of limb row `row`, q/qinv_neg traced scalars. Returns
+    (2^nfac,) uint32. The limb-folded kernels see a one-row block (row=0);
+    the streaming megakernel holds the whole (L, K) table and indexes the
+    limb it is processing."""
     zero = jax.lax.broadcasted_iota(jnp.uint32, (1,), 0)
-    a = zero + c_ref[0, off]
+    a = zero + c_ref[row, off]
     for j in range(nfac):
         prod = modmul.mulmod_montgomery_limb_t(
-            a, c_ref[0, off + 1 + j], q, qinv_neg)
+            a, c_ref[row, off + 1 + j], q, qinv_neg)
         a = jnp.concatenate([a, prod])
     return a
 
 
 def ntt_stages_t(x: jnp.ndarray, c_ref, kc: StackedKernelConsts,
-                 q, qinv_neg) -> jnp.ndarray:
+                 q, qinv_neg, row: int = 0) -> jnp.ndarray:
     """Forward negacyclic NTT on (rows, N) uint32 with traced per-limb
     constants. Same butterfly schedule as ``ntt_stages``."""
     n = kc.n
@@ -369,7 +373,8 @@ def ntt_stages_t(x: jnp.ndarray, c_ref, kc: StackedKernelConsts,
     while m < n:
         t //= 2
         s = _s(m)
-        tw = gen_twiddles_t(c_ref, kc.fwd_off[s], kc.fwd_nfac(s), q, qinv_neg)
+        tw = gen_twiddles_t(c_ref, kc.fwd_off[s], kc.fwd_nfac(s), q, qinv_neg,
+                            row)
         x = x.reshape(rows, m, 2, t)
         u = x[:, :, 0, :]
         v = modmul.mulmod_montgomery_limb_t(
@@ -382,7 +387,7 @@ def ntt_stages_t(x: jnp.ndarray, c_ref, kc: StackedKernelConsts,
 
 
 def intt_stages_t(x: jnp.ndarray, c_ref, kc: StackedKernelConsts,
-                  q, qinv_neg) -> jnp.ndarray:
+                  q, qinv_neg, row: int = 0) -> jnp.ndarray:
     """Inverse negacyclic NTT on (rows, N) with traced per-limb constants,
     N^-1 (read from the consts row) folded in at the end."""
     n = kc.n
@@ -391,7 +396,7 @@ def intt_stages_t(x: jnp.ndarray, c_ref, kc: StackedKernelConsts,
     st = 0
     while h >= 1:
         tw = gen_twiddles_t(c_ref, kc.inv_off[st], kc.inv_nfac(st),
-                            q, qinv_neg)
+                            q, qinv_neg, row)
         x = x.reshape(rows, h, 2, t)
         u, v = x[:, :, 0, :], x[:, :, 1, :]
         even = modmul.addmod(u, v, q)
@@ -402,7 +407,8 @@ def intt_stages_t(x: jnp.ndarray, c_ref, kc: StackedKernelConsts,
         h //= 2
         st += 1
     x = x.reshape(rows, n)
-    return modmul.mulmod_montgomery_limb_t(x, c_ref[0, OFF_NINV], q, qinv_neg)
+    return modmul.mulmod_montgomery_limb_t(x, c_ref[row, OFF_NINV], q,
+                                           qinv_neg)
 
 
 # ---------------------------------------------------------------------------

@@ -103,12 +103,18 @@ def _stack2(a, b, axis):
 # ---------------------------------------------------------------------------
 
 
-def _kernel(rh_ref, rl_ref, ih_ref, il_ref, tw_ref,
-            orh, orl, oih, oil, *, n, offsets, inverse):
-    x = dfl.dfc_from_planes(
-        (rh_ref[...], rl_ref[...], ih_ref[...], il_ref[...]))
+def fft_stage_pipeline(x: dfl.DFComplex, tw, offsets, *, n: int,
+                       inverse: bool) -> dfl.DFComplex:
+    """The pure stage pipeline on a (rows, n) DFComplex — the kernel body's
+    compute, factored out so the standalone FFT kernel and the client
+    streaming megakernel (``client_stream``) run the SAME df32 math.
+
+    tw: the (4, n) packed twiddle planes (already read from the ref);
+    offsets: static per-stage start columns from ``packed_twiddles``. The
+    inverse direction folds in the 1/n scale. Bit-reversal stays OUTSIDE
+    (callers permute before the forward / after the inverse pipeline).
+    """
     rows = x.re.hi.shape[0]
-    tw = tw_ref[...]                                    # (4, n)
 
     def stage_tw(off, lenh):
         return dfl.dfc_from_planes(
@@ -146,6 +152,14 @@ def _kernel(rh_ref, rl_ref, ih_ref, il_ref, tw_ref,
         lo = np.float32(inv_n - float(hi))
         scale = dfl.DF(hi, lo)
         x = dfl.DFComplex(dfl.df_mul(x.re, scale), dfl.df_mul(x.im, scale))
+    return x
+
+
+def _kernel(rh_ref, rl_ref, ih_ref, il_ref, tw_ref,
+            orh, orl, oih, oil, *, n, offsets, inverse):
+    x = dfl.dfc_from_planes(
+        (rh_ref[...], rl_ref[...], ih_ref[...], il_ref[...]))
+    x = fft_stage_pipeline(x, tw_ref[...], offsets, n=n, inverse=inverse)
     orh[...], orl[...], oih[...], oil[...] = dfl.dfc_to_planes(x)
 
 

@@ -19,6 +19,10 @@ streamed from a stacked (L, K) table. ``encrypt_fused``, ``decrypt_fused``,
 pallas_call per invocation regardless of limb count or batch size (the
 four-step ``path='matmul'`` NTT keeps its per-limb launches: its precomputed
 F matrices are per-prime MXU operands, not scalar seeds).
+
+``encode_encrypt_stream`` / ``decrypt_decode_stream`` go one step further:
+the WHOLE client op — Fourier transform included — is one pallas_call (the
+streaming megakernel, ``kernels.client_stream`` / DESIGN.md §4).
 """
 
 from __future__ import annotations
@@ -29,8 +33,8 @@ import jax.numpy as jnp
 
 from repro.core import fft as fftmod
 from repro.core.context import CKKSContext
-from repro.kernels import client_pointwise, common, fft_df, ntt_butterfly, \
-    ntt_matmul
+from repro.kernels import client_pointwise, client_stream, common, fft_df, \
+    ntt_butterfly, ntt_matmul
 
 
 def default_interpret() -> bool:
@@ -168,6 +172,38 @@ def decrypt_fused(c0, c1, s_mont, ctx: CKKSContext, n_limbs: int = 2,
         c0b[:, :n_limbs], c1b[:, :n_limbs], s_mont, ctx,
         interpret=interpret)
     return out[0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# Streaming megakernels: the WHOLE client op in one pallas_call
+# ---------------------------------------------------------------------------
+
+
+def encode_encrypt_stream(planes, pk_b_mont, pk_a_mont, ctx: CKKSContext,
+                          seed: int | None = None, nonce0=0,
+                          batch_block: int | None = None,
+                          interpret: bool | None = None):
+    """df32 slot planes -> (c0, c1) ciphertext stacks, ONE pallas_call:
+    SpecialIFFT + Delta-scale + RNS + NTT + fused encrypt fused into a
+    single kernel body (``kernels.client_stream``). Bit-identical to the
+    staged ``fourier='device'`` pipeline for fixed seeds."""
+    interpret = default_interpret() if interpret is None else interpret
+    seed = ctx.params.seed if seed is None else seed
+    return client_stream.encode_encrypt_stream(
+        planes, pk_b_mont, pk_a_mont, ctx, seed=seed, nonce0=nonce0,
+        batch_block=batch_block, interpret=interpret)
+
+
+def decrypt_decode_stream(c0, c1, s_mont, ctx: CKKSContext, scale,
+                          batch_block: int | None = None,
+                          interpret: bool | None = None):
+    """(B, 2, N) ciphertext stacks -> four (B, n_slots) f32 df slot planes,
+    ONE pallas_call: decrypt pointwise + INTT + CRT + /Delta + SpecialFFT
+    in a single kernel body."""
+    interpret = default_interpret() if interpret is None else interpret
+    return client_stream.decrypt_decode_stream(
+        c0, c1, s_mont, ctx, scale, batch_block=batch_block,
+        interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

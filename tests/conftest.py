@@ -1,0 +1,109 @@
+"""Shared test fixtures: launch counting and session-scoped CKKS state.
+
+Two regression counters every pipeline test can use:
+
+  * ``pallas_call_counter`` — counts every ``pl.pallas_call`` LOWERING and
+    records its grid, via the module attribute all kernel wrappers read.
+    This is the launch-count regression guard: the limb-folded staged
+    kernels must lower exactly ONE pallas_call per fused op, and the
+    streaming megakernel cores exactly ONE per whole client op. jit-cached
+    entry points do not re-lower, so count around a fresh trace (fresh
+    client, or an eager kernel call).
+  * ``fft_counter`` — counts host complex128 SpecialFFT/IFFT oracle calls
+    (the device-resident pipeline must never make one).
+
+Session-scoped clients/keys: keygen + the jit trace of the interpret-mode
+kernels dominate the suite's wall clock, so the widely reused client
+configurations are built once per session. Tests that mutate client state
+only advance ``_nonce`` (each test captures its base), and tests that need
+a fresh trace under a counter build their own client.
+
+The ``slow`` marker set here is the tier split: CI's fast lane runs
+``-m "not slow"`` (< 10 min budget), the nightly lane runs everything.
+"""
+
+import pytest
+
+from jax.experimental import pallas as pl
+
+from repro.core import fft as fftmod
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running sweep excluded from the tier-1 fast lane "
+        "(nightly CI runs the full suite)")
+
+
+# ---------------------------------------------------------------------------
+# launch / oracle-call counters
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def pallas_call_counter(monkeypatch):
+    """List of grids, one entry per pallas_call lowering, in call order."""
+    calls = []
+    real = pl.pallas_call
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("grid"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pl, "pallas_call", counting)
+    return calls
+
+
+@pytest.fixture()
+def fft_counter(monkeypatch):
+    """Counts every host complex128 SpecialFFT/IFFT invocation."""
+    calls = {"ifft": 0, "fft": 0}
+    real_ifft, real_fft = fftmod.special_ifft, fftmod.special_fft
+
+    def counting_ifft(*a, **k):
+        calls["ifft"] += 1
+        return real_ifft(*a, **k)
+
+    def counting_fft(*a, **k):
+        calls["fft"] += 1
+        return real_fft(*a, **k)
+
+    monkeypatch.setattr(fftmod, "special_ifft", counting_ifft)
+    monkeypatch.setattr(fftmod, "special_fft", counting_fft)
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# session-scoped CKKS state (the expensive fixtures)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="session")
+def test_ctx():
+    from repro.core import get_context
+    return get_context("test")          # N=2^10, 6 limbs, Delta=2^50
+
+
+@pytest.fixture(scope="session")
+def test_keys(test_ctx):
+    from repro.core import keygen
+    return keygen(test_ctx)
+
+
+@pytest.fixture(scope="session")
+def tiny_host_client():
+    from repro.fhe_client.client import FHEClient
+    return FHEClient(profile="tiny", fourier="host")
+
+
+@pytest.fixture(scope="session")
+def tiny_device_client():
+    from repro.fhe_client.client import FHEClient
+    return FHEClient(profile="tiny")
+
+
+@pytest.fixture(scope="session")
+def tiny_mega_client():
+    from repro.fhe_client.client import FHEClient
+    return FHEClient(profile="tiny", pipeline="megakernel")

@@ -11,20 +11,23 @@ from repro.core import (
     encode,
     encrypt,
     encrypt_symmetric_seeded,
-    get_context,
     keygen,
 )
 from repro.core.encoder import Plaintext
 
 
-@pytest.fixture(scope="module")
-def ctx():
-    return get_context("test")     # N=1024, 6 limbs, Delta=2^50
+# session-scoped 'test'-profile context/keys come from conftest.py (keygen
+# at N=2^10 is the expensive part; every module shares one)
 
 
-@pytest.fixture(scope="module")
-def keys(ctx):
-    return keygen(ctx)
+@pytest.fixture()
+def ctx(test_ctx):
+    return test_ctx                # N=1024, 6 limbs, Delta=2^50
+
+
+@pytest.fixture()
+def keys(test_keys):
+    return test_keys
 
 
 def _msg(ctx, seed=0):

@@ -18,7 +18,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import dfloat as dfl
-from repro.core import encoder, fft as fftmod
+from repro.core import encoder
 from repro.core import boot_precision_bits, get_context
 from repro.core.context import CKKSContext, CKKSParams
 from repro.fhe_client.client import FHEClient, simulate_private_inference
@@ -35,45 +35,36 @@ def _messages(ctx, batch, seed=0):
             + 1j * rng.standard_normal((batch, ctx.params.n_slots))) * 0.5
 
 
-@pytest.fixture()
-def fft_counter(monkeypatch):
-    """Counts every host complex128 SpecialFFT/IFFT invocation."""
-    calls = {"ifft": 0, "fft": 0}
-    real_ifft, real_fft = fftmod.special_ifft, fftmod.special_fft
-
-    def counting_ifft(*a, **k):
-        calls["ifft"] += 1
-        return real_ifft(*a, **k)
-
-    def counting_fft(*a, **k):
-        calls["fft"] += 1
-        return real_fft(*a, **k)
-
-    monkeypatch.setattr(fftmod, "special_ifft", counting_ifft)
-    monkeypatch.setattr(fftmod, "special_fft", counting_fft)
-    return calls
-
+# fft_counter (host-oracle invocation counting) is the shared conftest
+# fixture.
 
 # ---------------------------------------------------------------------------
 # zero host FFT calls on the device path (the off-chip-round-trip guard)
 # ---------------------------------------------------------------------------
 
 
-def test_device_path_zero_host_fft_calls(fft_counter):
-    """The whole encode+encrypt / decrypt+decode pipeline — including the
-    jit trace — never touches the host complex128 transforms."""
-    client = FHEClient(profile="tiny")          # fresh client: traces here
+def test_device_path_zero_host_fft_calls(fft_counter, tiny_device_client):
+    """The whole encode+encrypt / decrypt+decode pipeline — including a
+    full re-trace of both jitted cores (jax.make_jaxpr bypasses the jit
+    cache) — never touches the host complex128 transforms."""
+    import jax
+    client = tiny_device_client
     msgs = _messages(client.ctx, 3)
+    re, im = jnp.asarray(msgs.real), jnp.asarray(msgs.imag)
+    jax.make_jaxpr(client._encrypt_core_dev_impl)(re, im, jnp.uint32(0))
+    c0 = jnp.zeros((3, 2, client.ctx.params.n), jnp.uint32)
+    jax.make_jaxpr(client._decrypt_core_dev_impl)(
+        c0, c0, jnp.float64(client.ctx.params.delta))
     batch = client.encode_encrypt_batch(msgs)
     got = client.decrypt_decode_batch(batch.truncated(2))
     assert fft_counter == {"ifft": 0, "fft": 0}
     np.testing.assert_allclose(got, msgs, atol=1e-4)
 
 
-def test_host_path_still_uses_oracle(fft_counter):
+def test_host_path_still_uses_oracle(fft_counter, tiny_host_client):
     """fourier='host' keeps routing through the complex128 oracle — the
     counter proves the monkeypatch observes the dispatch point."""
-    client = FHEClient(profile="tiny", fourier="host")
+    client = tiny_host_client
     msgs = _messages(client.ctx, 2)
     batch = client.encode_encrypt_batch(msgs)
     client.decrypt_decode_batch(batch.truncated(2))
@@ -90,14 +81,22 @@ def test_fourier_arg_validated():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("profile", ["tiny", "test"])
-def test_device_roundtrip_within_boot_budget(profile):
+@pytest.mark.parametrize("profile", [
+    "tiny",
+    pytest.param("test", marks=pytest.mark.slow),   # N=2^10 core compiles
+])
+def test_device_roundtrip_within_boot_budget(profile, request):
     """Full encode_encrypt_batch -> decrypt_decode_batch on the device
     engine recovers the message within the paper's bootstrapping precision
     budget, and tracks the host-oracle client closely."""
-    dev = FHEClient(profile=profile)
-    host = FHEClient(profile=profile, fourier="host")
-    msgs = _messages(dev.ctx, 4, seed=1)
+    if profile == "tiny":
+        dev = request.getfixturevalue("tiny_device_client")
+        host = request.getfixturevalue("tiny_host_client")
+    else:
+        dev = FHEClient(profile=profile)
+        host = FHEClient(profile=profile, fourier="host")
+    # B=3: the session clients' standard warm batch shape
+    msgs = _messages(dev.ctx, 3, seed=1)
     got_dev = dev.decrypt_decode_batch(
         dev.encode_encrypt_batch(msgs).truncated(2))
     got_host = host.decrypt_decode_batch(
@@ -108,7 +107,10 @@ def test_device_roundtrip_within_boot_budget(profile):
     np.testing.assert_allclose(got_dev, got_host, atol=1e-6)
 
 
-@pytest.mark.parametrize("logn,delta_bits", [(6, 30), (6, 40), (8, 45)])
+@pytest.mark.parametrize("logn,delta_bits", [
+    (6, 30), (6, 40),
+    pytest.param(8, 45, marks=pytest.mark.slow),    # N=256 eager sweep
+])
 def test_encode_decode_precision_edges(logn, delta_bits):
     """N and Delta edge cases (smallest ring; small/large scale): the
     encode->decode plaintext round trip on the device engine stays inside
@@ -133,11 +135,11 @@ def test_encode_decode_precision_edges(logn, delta_bits):
     np.testing.assert_allclose(back, back_host, atol=1e-8)
 
 
-def test_legacy_list_decrypt_per_row_scales_device():
+def test_legacy_list_decrypt_per_row_scales_device(tiny_device_client):
     """decrypt_batch on a list with per-ciphertext scales drives the
     device core with a (B, 1) traced scale array."""
     from repro.core import encryptor
-    client = FHEClient(profile="tiny")
+    client = tiny_device_client
     msgs = _messages(client.ctx, 2, seed=5)
     cts = client.encrypt_batch(msgs)
     two = [encryptor.Ciphertext(c0=ct.c0[:2], c1=ct.c1[:2], n_limbs=2,
@@ -146,9 +148,9 @@ def test_legacy_list_decrypt_per_row_scales_device():
     np.testing.assert_allclose(got, msgs, atol=1e-4)
 
 
-def test_private_inference_loop_device():
+def test_private_inference_loop_device(tiny_device_client):
     """End-to-end private-inference loop on the device engine."""
-    client = FHEClient(profile="tiny")
+    client = tiny_device_client
     rng = np.random.default_rng(7)
     x = rng.standard_normal((2, 16)) * 0.2
 

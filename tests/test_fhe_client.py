@@ -1,37 +1,52 @@
 """FHE client pipeline: packing, batch encrypt/decrypt, seeded compression,
-noise budget, and the private-inference loop."""
+noise budget, and the private-inference loop.
+
+Runs on the session-scoped tiny device client (the API surface under test
+is profile-independent; the larger 'test' profile is exercised by the
+nightly lane in test_batched_client / test_property_roundtrip)."""
 
 import numpy as np
 import pytest
 
 from repro.core import encryptor
-from repro.fhe_client.client import FHEClient, simulate_private_inference
+from repro.fhe_client.client import simulate_private_inference
 
 
-@pytest.fixture(scope="module")
-def client():
-    return FHEClient(profile="test")
+@pytest.fixture()
+def client(tiny_device_client):
+    return tiny_device_client
 
 
 def test_pack_unpack_roundtrip(client):
     rng = np.random.default_rng(0)
-    f = 100
+    cap = client.slot_capacity()
+    f = cap + cap // 2                  # forces multi-ciphertext packing
     x = rng.standard_normal((3, f))
     z = client.pack(x)
-    assert z.shape == (3, client.ctx.params.n_slots)
+    assert z.shape == (3 * 2, client.ctx.params.n_slots)
+    np.testing.assert_allclose(client.unpack(z, f), x)
+
+
+def test_pack_single_ct_rows(client):
+    rng = np.random.default_rng(3)
+    f = client.slot_capacity() // 2
+    x = rng.standard_normal((2, f))
+    z = client.pack(x)
+    assert z.shape == (2, client.ctx.params.n_slots)
     np.testing.assert_allclose(client.unpack(z, f), x)
 
 
 def test_encrypt_decrypt_batch(client):
     rng = np.random.default_rng(1)
-    x = rng.standard_normal((2, 64)) * 0.3
+    f = client.slot_capacity()
+    x = rng.standard_normal((2, f)) * 0.3
     msgs = client.pack(x)
     cts = client.encrypt_batch(msgs)
     assert len(cts) == 2
     two_limb = [encryptor.Ciphertext(c0=ct.c0[:2], c1=ct.c1[:2], n_limbs=2,
                                      scale=ct.scale) for ct in cts]
     z = client.decrypt_batch(two_limb)
-    got = client.unpack(z, 64)
+    got = client.unpack(z, f)
     np.testing.assert_allclose(got, x, atol=1e-5)
 
 

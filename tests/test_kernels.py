@@ -23,8 +23,11 @@ PRIMES = find_ntt_friendly_primes(p_bw=30, n_plus_1=17, count=6)
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("n", [256, 1024, 4096])
-@pytest.mark.parametrize("pi", [0, 3])
+# big-N / alternate-prime sweeps ride the nightly lane; the fast lane keeps
+# N in {256, 1024} on prime 0 (each eager interpret call pays a compile)
+@pytest.mark.parametrize("n", [256, 1024,
+                               pytest.param(4096, marks=pytest.mark.slow)])
+@pytest.mark.parametrize("pi", [0, pytest.param(3, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("rows,block_rows", [(1, 1), (4, 2), (3, 1)])
 def test_butterfly_fwd_inv(n, pi, rows, block_rows):
     plan = nttmod.make_plan(PRIMES[pi], n)
@@ -56,8 +59,9 @@ def test_butterfly_edge_values():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("n", [256, 1024, 2048])
-@pytest.mark.parametrize("pi", [0, 2])
+@pytest.mark.parametrize("n", [256, 1024,
+                               pytest.param(2048, marks=pytest.mark.slow)])
+@pytest.mark.parametrize("pi", [0, pytest.param(2, marks=pytest.mark.slow)])
 def test_fourstep_vs_ref_permutation(n, pi):
     """Natural-order four-step output == bit-reversed ref output re-permuted."""
     plan = nttmod.make_plan(PRIMES[pi], n)
@@ -69,7 +73,8 @@ def test_fourstep_vs_ref_permutation(n, pi):
     np.testing.assert_array_equal(got, want)
 
 
-@pytest.mark.parametrize("n", [256, 1024])
+@pytest.mark.parametrize("n", [256,
+                               pytest.param(1024, marks=pytest.mark.slow)])
 def test_fourstep_polymul_schoolbook(n):
     """fwd -> pointwise -> inv == negacyclic schoolbook (domain-independent)."""
     plan = nttmod.make_plan(PRIMES[1], n)
@@ -144,9 +149,13 @@ def test_fft_ifft_kernel_roundtrip():
 # ---------------------------------------------------------------------------
 
 
-@pytest.fixture(scope="module")
-def ctx():
-    return get_context("test")
+# fast lane checks the fused kernels on the tiny ring; the nightly lane
+# repeats the identical assertions at the 'test' profile (N=2^10, 6 limbs)
+@pytest.fixture(scope="module",
+                params=["tiny",
+                        pytest.param("test", marks=pytest.mark.slow)])
+def ctx(request):
+    return get_context(request.param)
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,136 @@
+"""Property-based round-trip guarantees for the client pipeline.
+
+Tier split:
+
+  * tier-1 (fast lane): a deterministic encoder-level round-trip grid over
+    (N, Delta, L) × {host, device} Fourier modes, plus hypothesis
+    properties on the tiny profile that REUSE the session-scoped clients
+    (one jit compile per shape for the whole session — hypothesis only
+    varies message content and nonce bases, never shapes);
+  * nightly (``-m slow``): the full encrypt round-trip grid across
+    (N, Delta, L, B) × {staged, megakernel} pipelines.
+
+Hypothesis is optional at runtime (the repo pattern): the CI lanes install
+requirements-dev and run the properties; in a bare container only the
+deterministic grids run (the hypothesis tests are conditionally defined).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import boot_precision_bits, encoder
+from repro.core.context import CKKSParams, get_context
+from repro.fhe_client.client import FHEClient
+
+BOOT_PREC_BITS = 19.29
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _msgs(ctx, batch, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((batch, ctx.params.n_slots))
+            + 1j * rng.standard_normal((batch, ctx.params.n_slots))) * 0.5
+
+
+# ---------------------------------------------------------------------------
+# deterministic (N, Delta, L) x fourier grid — encoder-level round trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("logn,delta_bits,n_limbs", [
+    (5, 30, 2), (5, 45, 3), (6, 30, 3), (6, 45, 2),
+])
+@pytest.mark.parametrize("fourier", ["host", "device"])
+def test_encode_decode_grid_within_budget(logn, delta_bits, n_limbs,
+                                          fourier):
+    """encode -> decode stays inside the paper's precision budget across
+    ring size, scale and limb-count edges, on both Fourier engines."""
+    ctx = get_context(CKKSParams(logn=logn, n_limbs=n_limbs,
+                                 delta_bits=delta_bits))
+    z = _msgs(ctx, 1, seed=logn * 1000 + delta_bits)[0]
+    pt = encoder.encode(z, ctx, fourier=fourier)
+    back = encoder.decode(np.asarray(pt.data), ctx, fourier=fourier)
+    assert boot_precision_bits(z, back) >= BOOT_PREC_BITS
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (tiny profile, session clients, fixed shapes)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _SETTINGS = dict(
+        deadline=None, max_examples=8, derandomize=True,
+        suppress_health_check=[HealthCheck.function_scoped_fixture],
+    )
+
+    @settings(**_SETTINGS)
+    @given(seed=st.integers(0, 2**32 - 1), scale=st.floats(0.01, 10.0))
+    def test_roundtrip_recovers_random_messages(tiny_mega_client, seed,
+                                                scale):
+        """Any random message batch round-trips through the megakernel
+        within the noise/precision budget (B=1: the session-compiled
+        shape)."""
+        client = tiny_mega_client
+        msgs = _msgs(client.ctx, 1, seed) * scale
+        batch = client.encode_encrypt_batch(msgs)
+        got = client.decrypt_decode_batch(batch.truncated(2))
+        # absolute error budget scales with the message magnitude headroom
+        err = np.max(np.abs(got - msgs))
+        assert err < max(1.0, scale) * 2.0 ** -BOOT_PREC_BITS
+
+    @settings(**_SETTINGS)
+    @given(seed=st.integers(0, 2**32 - 1), nonce0=st.integers(0, 1 << 16))
+    def test_staged_megakernel_bit_identity_property(tiny_device_client,
+                                                     tiny_mega_client,
+                                                     seed, nonce0):
+        """For ANY message and nonce base, staged and megakernel pipelines
+        produce bit-identical integer ciphertexts."""
+        staged, mega = tiny_device_client, tiny_mega_client
+        msgs = _msgs(staged.ctx, 1, seed)
+        staged._nonce = mega._nonce = nonce0
+        bs = staged.encode_encrypt_batch(msgs)
+        bm = mega.encode_encrypt_batch(msgs)
+        np.testing.assert_array_equal(np.asarray(bs.c0), np.asarray(bm.c0))
+        np.testing.assert_array_equal(np.asarray(bs.c1), np.asarray(bm.c1))
+
+
+# ---------------------------------------------------------------------------
+# nightly: full encrypt round-trip grid (fresh clients, big shapes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("pipeline", ["staged", "megakernel"])
+@pytest.mark.parametrize("logn,delta_bits,n_limbs,batch", [
+    (5, 30, 2, 1), (6, 40, 3, 4), (8, 45, 3, 2),
+])
+def test_encrypt_roundtrip_grid(pipeline, logn, delta_bits, n_limbs, batch):
+    """Full encode->encrypt->decrypt->decode across the parameter grid and
+    both pipelines (nightly: every point compiles its own cores)."""
+    params = CKKSParams(logn=logn, n_limbs=n_limbs, delta_bits=delta_bits)
+    client = FHEClient(profile=params, pipeline=pipeline)
+    msgs = _msgs(client.ctx, batch, seed=logn + delta_bits)
+    ct = client.encode_encrypt_batch(msgs)
+    got = client.decrypt_decode_batch(ct.truncated(2))
+    assert boot_precision_bits(msgs, got) >= BOOT_PREC_BITS
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("logn,delta_bits", [(5, 30), (6, 40)])
+def test_staged_megakernel_bit_identity_grid(logn, delta_bits):
+    """Bit-identity staged vs megakernel off the tiny profile too
+    (nightly counterpart of the tier-1 hypothesis property)."""
+    params = CKKSParams(logn=logn, n_limbs=3, delta_bits=delta_bits)
+    staged = FHEClient(profile=params)
+    mega = FHEClient(profile=params, pipeline="megakernel")
+    msgs = _msgs(staged.ctx, 2, seed=13)
+    bs = staged.encode_encrypt_batch(msgs)
+    bm = mega.encode_encrypt_batch(msgs)
+    np.testing.assert_array_equal(np.asarray(bs.c0), np.asarray(bm.c0))
+    np.testing.assert_array_equal(np.asarray(bs.c1), np.asarray(bm.c1))
