@@ -1,0 +1,171 @@
+"""Client-service throughput harness: requests/s and p50/p99 latency
+under the paper's ~10:1 encrypt-heavy mix (Fig. 2b), service vs direct.
+
+The direct baseline calls ``encode_encrypt_batch``/``decrypt_decode_batch``
+once with perfectly pre-formed batches — the best case the service can
+approach while it additionally pays for queueing, coalescing/padding into
+buckets, per-job dispatch and per-request demux. Rows report the service's
+absolute requests/s, its submit->materialize latency percentiles, and the
+ratio to the direct baseline; the dispatch summary (streams, rounds, mode
+sequence) is embedded in the derived column so TPU-mesh runs can be
+compared against the single-device fallback.
+
+Standalone entry point (also the CI artifact producer):
+
+    PYTHONPATH=src python -m benchmarks.bench_client_service --profile tiny
+
+merges its rows into benchmarks/results/benchmarks.json (replacing prior
+``client_service`` rows) instead of rewriting the whole file the way the
+full ``benchmarks.run`` driver does.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _mix_requests(n_enc: int, n_dec: int):
+    """Interleaved ~10:1 request kinds, deterministic order."""
+    kinds = []
+    ratio = max(1, n_enc // max(1, n_dec))
+    e = d = 0
+    while e < n_enc or d < n_dec:
+        for _ in range(ratio):
+            if e < n_enc:
+                kinds.append("enc")
+                e += 1
+        if d < n_dec:
+            kinds.append("dec")
+            d += 1
+    return kinds
+
+
+def run(profile: str = "test", n_enc: int = 40, n_dec: int = 4,
+        buckets=(1, 4, 16), reps: int = 2):
+    import jax
+
+    from repro.fhe_client.client import FHEClient
+    from repro.fhe_client.service import ClientService
+
+    client = FHEClient(profile=profile)
+    ctx = client.ctx
+    n_req = n_enc + n_dec
+
+    def msgs(b, seed):
+        r = np.random.default_rng(seed)
+        return (r.standard_normal((b, ctx.params.n_slots))
+                + 1j * r.standard_normal((b, ctx.params.n_slots))) * 0.5
+
+    enc_msgs = msgs(n_enc, 1)
+    dec_src = client.encode_encrypt_batch(msgs(n_dec, 2)).truncated(2)
+    dec_rows = list(dec_src)
+
+    # --- direct baseline: pre-formed batches, one call per direction -------
+    def direct_once():
+        ct = client.encode_encrypt_batch(enc_msgs)
+        jax.block_until_ready((ct.c0, ct.c1))
+        client.decrypt_decode_batch(dec_src)     # returns numpy: synchronous
+
+    direct_once()                                # warm (B=n_enc/n_dec traces)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        direct_once()
+    t_direct = (time.perf_counter() - t0) / reps
+
+    # --- service: per-message requests through queue+batcher+streams -------
+    service = ClientService(client=client, buckets=buckets)
+    kinds = _mix_requests(n_enc, n_dec)
+
+    def service_once():
+        e = d = 0
+        rids = []
+        for kind in kinds:
+            if kind == "enc":
+                rids.append(service.submit_encrypt(enc_msgs[e]))
+                e += 1
+            else:
+                rids.append(service.submit_decrypt(dec_rows[d]))
+                d += 1
+        service.flush()
+        lats = [service.latency(r) for r in rids]
+        for r in rids:
+            service.result(r)
+        return lats
+
+    service_once()                               # warm (bucket traces)
+    log_start = len(service.dispatch_log)        # exclude warm-up rounds
+    t0 = time.perf_counter()
+    lats = []
+    for _ in range(reps):
+        lats += service_once()
+    t_service = (time.perf_counter() - t0) / reps
+
+    stats = service.stats()
+    p50, p99 = np.percentile(np.asarray(lats) * 1e6, [50, 99])
+    timed_modes = [m.value for m, _k in
+                   service.scheduler.modes_executed(start=log_start)]
+    per_run = len(timed_modes) // reps           # one rep's round schedule
+    modes = ",".join(timed_modes[:per_run][:8])
+    return [{
+        "bench": "client_service",
+        "name": f"{profile}_mix{n_enc}to{n_dec}_direct",
+        "us_per_call": round(t_direct / n_req * 1e6, 1),
+        "derived": f"req_per_s={n_req / t_direct:.1f};"
+                   f"preformed_batch_baseline",
+    }, {
+        "bench": "client_service",
+        "name": f"{profile}_mix{n_enc}to{n_dec}_service",
+        "us_per_call": round(t_service / n_req * 1e6, 1),
+        "derived": f"req_per_s={n_req / t_service:.1f};"
+                   f"p50_us={p50:.1f};p99_us={p99:.1f};"
+                   f"vs_direct={t_direct / t_service:.2f}x;"
+                   f"streams={stats['n_streams']};"
+                   f"shards_per_stream={stats['shards_per_stream']};"
+                   f"buckets={'/'.join(map(str, stats['buckets']))};"
+                   f"modes={modes}",
+    }]
+
+
+def merge_rows(rows, path=None):
+    """Merge rows into results/benchmarks.json, replacing same-bench rows
+    (so the standalone entry point composes with the full driver)."""
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "results",
+                            "benchmarks.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    old = []
+    if os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+    benches = {r["bench"] for r in rows}
+    merged = [r for r in old if r.get("bench") not in benches] + rows
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", default="test")
+    ap.add_argument("--n-enc", type=int, default=40)
+    ap.add_argument("--n-dec", type=int, default=4)
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--buckets", default="1,4,16",
+                    help="comma-separated bucket sizes")
+    args = ap.parse_args()
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    rows = run(profile=args.profile, n_enc=args.n_enc, n_dec=args.n_dec,
+               buckets=buckets, reps=args.reps)
+    print("bench,name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['bench']},{r['name']},{r['us_per_call']},"
+              f"\"{r['derived']}\"", flush=True)
+    path = merge_rows(rows)
+    print(f"# merged {len(rows)} rows into {os.path.relpath(path)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,15 +1,22 @@
 """Private inference: FHE client wrapping an LM server (paper Fig. 1).
 
-    PYTHONPATH=src python examples/secure_inference.py
+    PYTHONPATH=src python examples/secure_inference.py [--direct]
 
-The client encodes + encrypts prompt embeddings with the streaming kernels,
-ships ciphertexts to the 'server', receives encrypted results and decrypts.
-Server-side homomorphic evaluation is OUT of this paper's scope (ABC-FHE is
-the client accelerator; servers are SHARP/ARK/Trinity territory), so the
-server boundary is simulated — the point here is the client data path,
-traffic accounting, and the end-to-end precision budget.
+The client boundary runs through the client SERVICE by default: prompt
+embeddings are submitted as per-message requests, the coalescing batcher
+forms bucketed jobs, the dual-stream scheduler executes them on the
+device streams, and ciphertexts/results cross the trust boundary as
+deterministic wire payloads. ``--direct`` keeps the original path that
+calls ``FHEClient`` batched entry points directly (the pre-service
+protocol, retained as the reference).
+
+Server-side homomorphic evaluation is OUT of this paper's scope (ABC-FHE
+is the client accelerator; servers are SHARP/ARK/Trinity territory), so
+the server boundary is simulated — the point here is the client data
+path, traffic accounting, and the end-to-end precision budget.
 """
 
+import argparse
 import sys
 
 import numpy as np
@@ -20,11 +27,45 @@ import jax
 import jax.numpy as jnp
 
 from repro.fhe_client.client import FHEClient, simulate_private_inference
+from repro.fhe_client.service import ClientService, wire
 from repro.models import model as M
 from repro.models.archs import get_arch, reduced_config
 
 
+def simulate_private_inference_service(service: ClientService, serve_fn,
+                                       x: np.ndarray, out_features: int):
+    """The ``simulate_private_inference`` loop routed through the service:
+    per-message submit -> coalesced/bucketed jobs -> wire payloads across
+    the trust boundary -> decrypt requests for the returned results."""
+    client = service.client
+    msgs = client.pack(x)
+    cts = service.encrypt_many(msgs)
+    payload = wire.serialize_ciphertext_batch(cts)     # client -> server
+
+    # --- server boundary (simulated; see module docstring) -----------------
+    server_cts = wire.deserialize_ciphertext_batch(payload).truncated(2)
+    served_inputs = service.decrypt_many(server_cts)
+    x_rec = client.unpack(served_inputs, x.shape[1])
+    y = serve_fn(x_rec.astype(np.float32))
+    y_cts = service.encrypt_many(client.pack(y.astype(np.float64)))
+    returned = wire.serialize_ciphertext_batch(y_cts.truncated(2))
+    # ------------------------------------------------------------------------
+
+    y_dec = service.decrypt_many(wire.deserialize_ciphertext_batch(returned))
+    return client.unpack(y_dec, out_features), {
+        "roundtrip_err": float(np.max(np.abs(x_rec - x))),
+        "upload_bytes": len(payload),
+        "download_bytes": len(returned),
+    }
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--direct", action="store_true",
+                    help="call the FHEClient batched path directly instead "
+                         "of going through the client service")
+    args = ap.parse_args()
+
     cfg = reduced_config(get_arch("qwen2-vl-2b"))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     client = FHEClient(profile="test")
@@ -47,8 +88,24 @@ def main():
 
     x = np.random.default_rng(1).standard_normal(
         (batch, seq * cfg.d_model)) * 0.1
-    y, stats = simulate_private_inference(client, serve_fn, x,
-                                          out_features=cfg.d_model)
+    if args.direct:
+        print("client boundary: direct FHEClient batched path")
+        y, stats = simulate_private_inference(client, serve_fn, x,
+                                              out_features=cfg.d_model)
+    else:
+        service = ClientService(client=client, buckets=(1, 2, 4, 8))
+        st = service.stats()
+        print(f"client boundary: service ({st['n_streams']} stream(s), "
+              f"{st['shards_per_stream']} shard(s)/stream, "
+              f"buckets {st['buckets']})")
+        y, stats = simulate_private_inference_service(
+            service, serve_fn, x, out_features=cfg.d_model)
+        st = service.stats()
+        print(f"service dispatched {st['jobs_dispatched']} jobs over "
+              f"{st['rounds']} rounds; modes: {','.join(st['modes'][:8])}"
+              f"{'...' if len(st['modes']) > 8 else ''}")
+        print(f"wire payloads: {stats['upload_bytes'] / 1e3:.1f} KB up, "
+              f"{stats['download_bytes'] / 1e3:.1f} KB down")
     rep = client.upload_report(batch)
     print(f"client->server ciphertext: {rep['ct_bytes'] / 1e3:.1f} KB "
           f"({rep['ct_bytes_seeded'] / 1e3:.1f} KB seeded, "

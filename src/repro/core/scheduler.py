@@ -219,3 +219,69 @@ def mode_at(log, t: float) -> Mode:
     if active.count("dec") >= 2:
         return Mode.DEC2
     return Mode.MIX
+
+
+# ---------------------------------------------------------------------------
+# Round-based dispatch policy (shared with the executing service)
+# ---------------------------------------------------------------------------
+#
+# The analytic ``schedule`` above prices jobs in seconds; the serving layer
+# (``repro.fhe_client.service``) dispatches whole *batch jobs* to device
+# streams in rounds. Both must agree on the paper's mode policy, so the
+# round policy lives here as pure functions of queue occupancy:
+# ``assign_streams`` picks what each stream runs next, ``plan_rounds``
+# unrolls a queue snapshot into the full (mode, kinds) schedule. The
+# service's dispatch log must replay ``plan_rounds`` exactly — tests assert
+# policy/execution agreement through this seam.
+
+
+def assign_streams(n_enc: int, n_dec: int, n_streams: int = 2) -> tuple:
+    """Job kinds the streams run next, given pending-queue occupancy.
+
+    Mirrors the three RSC operating modes: when both queues are pending
+    the round covers both kinds first (ENC+DEC), decode ahead of encode —
+    decode jobs are latency-critical server returns (and ~10x cheaper,
+    Fig. 2b) and must not starve behind the encrypt backlog, which also
+    keeps a single-stream deployment alternating instead of draining the
+    encrypt queue first. Extra streams then feed the longer queue; a
+    single pending kind fills every stream (2xENC / 2xDEC).
+    """
+    kinds: list = []
+    e, d = n_enc, n_dec
+    for _ in range(n_streams):
+        if not e and not d:
+            break
+        if d and (not e or "dec" not in kinds):
+            k = "dec"
+        elif e and (not d or "enc" not in kinds):
+            k = "enc"
+        else:
+            k = "enc" if e >= d else "dec"
+        e, d = (e - 1, d) if k == "enc" else (e, d - 1)
+        kinds.append(k)
+    return tuple(kinds)
+
+
+def round_mode(kinds) -> Mode:
+    """Operating mode implied by one round's stream assignment (same
+    convention as ``mode_at``: anything short of two same-kind streams is
+    the mixed mode)."""
+    ks = tuple(kinds)
+    if len(ks) >= 2 and all(k == "enc" for k in ks):
+        return Mode.ENC2
+    if len(ks) >= 2 and all(k == "dec" for k in ks):
+        return Mode.DEC2
+    return Mode.MIX
+
+
+def plan_rounds(n_enc: int, n_dec: int, n_streams: int = 2) -> list:
+    """Unrolled [(mode, kinds)] dispatch plan for a queue snapshot of
+    ``n_enc`` encrypt-batch and ``n_dec`` decrypt-batch jobs."""
+    out = []
+    e, d = n_enc, n_dec
+    while e or d:
+        kinds = assign_streams(e, d, n_streams)
+        out.append((round_mode(kinds), kinds))
+        e -= kinds.count("enc")
+        d -= kinds.count("dec")
+    return out

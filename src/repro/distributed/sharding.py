@@ -166,3 +166,40 @@ def cache_shardings(cache_tree, mesh: Mesh, cfg: ArchConfig,
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# FHE client service: device streams over the ciphertext batch axis
+# ---------------------------------------------------------------------------
+#
+# The client service maps the paper's dual-RSC layout onto the device
+# fleet: the flattened device list splits into equal 'stream' groups (each
+# group = one RSC-equivalent execution stream), and within a group the
+# batch axis of the (B, L, N) residue stacks shard_maps across the group's
+# 1-D 'batch' mesh. Single device -> one stream of one device, which the
+# executors run without shard_map at all.
+
+
+def stream_groups(devices=None, n_streams: int | None = None) -> list:
+    """Split devices into ``n_streams`` equal-size groups (default: two
+    streams — the paper's two RSCs — or one when only one device exists).
+    Remainder devices are left idle so every group shards the same
+    bucketed batch shapes."""
+    devices = tuple(jax.devices()) if devices is None else tuple(devices)
+    if n_streams is None:
+        n_streams = min(2, len(devices))
+    if not 1 <= n_streams <= len(devices):
+        raise ValueError(f"n_streams={n_streams} needs 1..{len(devices)} "
+                         f"for {len(devices)} devices")
+    per = len(devices) // n_streams
+    return [list(devices[i * per:(i + 1) * per]) for i in range(n_streams)]
+
+
+def stream_mesh(devices) -> Mesh:
+    """1-D ('batch',) mesh over one stream group's devices."""
+    return Mesh(np.asarray(devices), ("batch",))
+
+
+def batch_stack_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    """Sharding for a (B, ...) client stack: batch axis over 'batch'."""
+    return NamedSharding(mesh, P("batch", *([None] * (ndim - 1))))

@@ -201,6 +201,99 @@ class FHEClient:
         w = dfl.dfc_from_planes(planes)
         return dfl.df_to_float(w.re), dfl.df_to_float(w.im)
 
+    # --- core selection seams (shared with the client service) --------------
+    #
+    # The serving layer (``repro.fhe_client.service``) executes the SAME
+    # pipelines on its device streams: it preps operands with
+    # ``encrypt_operands``/``decrypt_operands``, then either calls the
+    # jitted ``encrypt_core``/``decrypt_core`` (single-device streams) or
+    # shard_maps the untraced ``encrypt_impl``/``decrypt_impl`` over a
+    # device-group mesh. Every impl is row-independent along the leading
+    # batch axis, which is what makes batch-axis sharding (and tail
+    # padding in the batcher) bit-transparent per row.
+
+    def encrypt_operands(self, messages) -> tuple:
+        """Host-side prep for one encrypt batch: (B, n_slots) complex ->
+        the operand arrays ``encrypt_impl``/``encrypt_core`` consume
+        ((re, im) planes for the device Fourier engine, (coeffs,) for the
+        host oracle path)."""
+        msgs = np.asarray(messages, np.complex128)
+        if self.fourier == "device":
+            return (jnp.asarray(msgs.real), jnp.asarray(msgs.imag))
+        return (jnp.asarray(encoder.slots_to_coeffs(msgs, self.ctx)),)
+
+    @property
+    def encrypt_impl(self):
+        """Untraced encrypt core ``f(*operands, nonce0) -> (c0, c1)`` for
+        the configured fourier/pipeline (row-independent over batch)."""
+        if self.fourier != "device":
+            return self._encrypt_core_impl
+        return (self._encrypt_core_mega_impl if self.pipeline == "megakernel"
+                else self._encrypt_core_dev_impl)
+
+    @property
+    def encrypt_core(self):
+        """Jit-compiled counterpart of ``encrypt_impl``."""
+        if self.fourier != "device":
+            return self._encrypt_core
+        return (self._encrypt_core_mega if self.pipeline == "megakernel"
+                else self._encrypt_core_dev)
+
+    def decrypt_operands(self, cts: CiphertextBatch) -> tuple:
+        """(c0, c1, scale) operands for ``decrypt_impl``/``decrypt_core``.
+        ``scale`` may be a scalar or a (B, 1) per-row array."""
+        return (cts.c0[:, :2], cts.c1[:, :2], jnp.float64(cts.scale))
+
+    @property
+    def decrypt_impl(self):
+        """Untraced decrypt core ``f(c0, c1, scale) -> parts`` (the host
+        oracle applies its scale on the host, so its core ignores the
+        traced operand)."""
+        if self.fourier != "device":
+            return lambda c0, c1, scale: self._decrypt_core_impl(c0, c1)
+        return (self._decrypt_core_mega_impl if self.pipeline == "megakernel"
+                else self._decrypt_core_dev_impl)
+
+    @property
+    def decrypt_core(self):
+        if self.fourier != "device":
+            return lambda c0, c1, scale: self._decrypt_core(c0, c1)
+        return (self._decrypt_core_mega if self.pipeline == "megakernel"
+                else self._decrypt_core_dev)
+
+    def decrypt_results(self, parts, scale) -> np.ndarray:
+        """Core output parts -> (B, n_slots) complex messages (the host
+        path finishes its decode — FFT + /scale — here)."""
+        if self.fourier == "device":
+            re, im = parts
+            return np.asarray(re) + 1j * np.asarray(im)
+        hi, lo = parts
+        return encoder.coeffs_to_slots(np.asarray(hi) + np.asarray(lo),
+                                       self.ctx, scale)
+
+    # --- nonce discipline ----------------------------------------------------
+
+    @property
+    def nonce(self) -> int:
+        """Next unused PRNG nonce. Settable so replay/equivalence tests can
+        pin the base; never rewind in production — (seed, nonce) reuse
+        breaks RLWE security."""
+        return self._nonce
+
+    @nonce.setter
+    def nonce(self, value: int):
+        self._nonce = int(value)
+
+    def take_nonces(self, count: int) -> int:
+        """Reserve ``count`` consecutive nonces, returning the base. The
+        service batcher draws from the client counter through this, so
+        direct calls and service batches never collide on a PRNG stream
+        (padding rows consume nonces too — row r of any batch always uses
+        ``base + r``, which is what keeps bucketing bit-transparent)."""
+        base = self._nonce
+        self._nonce += int(count)
+        return base
+
     def encode_encrypt_batch(self, messages: np.ndarray) -> CiphertextBatch:
         """(B, n_slots) complex messages -> CiphertextBatch (B, L, N).
 
@@ -214,34 +307,17 @@ class FHEClient:
         p = self.ctx.params
         if np.shape(messages)[0] == 0:
             raise ValueError("encode_encrypt_batch needs a non-empty batch")
-        nonce0 = self._nonce
-        self._nonce += np.shape(messages)[0]
-        if self.fourier == "device":
-            msgs = np.asarray(messages, np.complex128)
-            core = (self._encrypt_core_mega if self.pipeline == "megakernel"
-                    else self._encrypt_core_dev)
-            c0, c1 = core(
-                jnp.asarray(msgs.real), jnp.asarray(msgs.imag),
-                jnp.uint32(nonce0))
-        else:
-            coeffs = encoder.slots_to_coeffs(messages, self.ctx)  # (B, N) f64
-            c0, c1 = self._encrypt_core(
-                jnp.asarray(coeffs), jnp.uint32(nonce0))
+        nonce0 = self.take_nonces(np.shape(messages)[0])
+        c0, c1 = self.encrypt_core(*self.encrypt_operands(messages),
+                                   jnp.uint32(nonce0))
         return CiphertextBatch(c0=c0, c1=c1, n_limbs=p.n_limbs,
                                scale=p.delta)
 
     def decrypt_decode_batch(self, cts: CiphertextBatch) -> np.ndarray:
         """CiphertextBatch (server-returned view; first 2 limbs are used)
         -> (B, n_slots) complex messages."""
-        if self.fourier == "device":
-            core = (self._decrypt_core_mega if self.pipeline == "megakernel"
-                    else self._decrypt_core_dev)
-            re, im = core(cts.c0[:, :2], cts.c1[:, :2],
-                          jnp.float64(cts.scale))
-            return np.asarray(re) + 1j * np.asarray(im)
-        hi, lo = self._decrypt_core(cts.c0[:, :2], cts.c1[:, :2])
-        return encoder.coeffs_to_slots(np.asarray(hi) + np.asarray(lo),
-                                       self.ctx, cts.scale)
+        parts = self.decrypt_core(*self.decrypt_operands(cts))
+        return self.decrypt_results(parts, cts.scale)
 
     # --- list[Ciphertext] interop (legacy per-ciphertext protocol) ----------
 
@@ -261,14 +337,8 @@ class FHEClient:
         c0 = jnp.stack([ct.c0[:2] for ct in cts])
         c1 = jnp.stack([ct.c1[:2] for ct in cts])
         scale = np.array([ct.scale for ct in cts])[:, None]
-        if self.fourier == "device":
-            core = (self._decrypt_core_mega if self.pipeline == "megakernel"
-                    else self._decrypt_core_dev)
-            re, im = core(c0, c1, jnp.asarray(scale))
-            return np.asarray(re) + 1j * np.asarray(im)
-        hi, lo = self._decrypt_core(c0, c1)
-        return encoder.coeffs_to_slots(np.asarray(hi) + np.asarray(lo),
-                                       self.ctx, scale)
+        parts = self.decrypt_core(c0, c1, jnp.asarray(scale))
+        return self.decrypt_results(parts, scale)
 
     # --- traffic accounting (paper Table/figs analogues) ---------------------
 

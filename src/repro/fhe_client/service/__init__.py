@@ -1,0 +1,24 @@
+"""FHE client service: request-coalescing batcher + dual-stream scheduler.
+
+The servable engine over the batched client pipeline — per-message
+requests coalesce into bucketed batch jobs, which the dual-stream
+scheduler executes on device groups with ``core.scheduler``'s RSC mode
+policy (2xENC / 2xDEC / ENC+DEC), sharding each job's batch axis across
+its stream's devices. See ``service.service`` for the flow and DESIGN.md
+§5 for the mapping onto the paper's dual-RSC scheduling.
+"""
+
+from repro.fhe_client.service import wire
+from repro.fhe_client.service.batcher import (CoalescingBatcher,
+                                              DEFAULT_BUCKETS, DecJob,
+                                              EncJob, Request)
+from repro.fhe_client.service.scheduler import (DispatchRecord,
+                                                DualStreamScheduler,
+                                                StreamExecutor)
+from repro.fhe_client.service.service import ClientService
+
+__all__ = [
+    "ClientService", "CoalescingBatcher", "DEFAULT_BUCKETS",
+    "DecJob", "DispatchRecord", "DualStreamScheduler", "EncJob",
+    "Request", "StreamExecutor", "wire",
+]

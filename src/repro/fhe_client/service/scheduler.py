@@ -1,0 +1,177 @@
+"""Dual-stream scheduler: the RSC mode policy executed on device groups.
+
+``core.scheduler`` reproduces the paper's dual-RSC task scheduling
+analytically; this module *executes* that policy. Each stream is one
+device group (``distributed.sharding.stream_groups``) standing in for one
+Reconfigurable Streaming Core; jobs from the coalescing batcher are
+assigned to streams round by round with the SAME pure policy functions
+(``assign_streams``/``round_mode``) the analytic model exposes, so the
+dispatch log the service records is — by construction, and by test — the
+schedule ``core.scheduler.plan_rounds`` predicts.
+
+Execution:
+
+  * single-device stream — the client's existing jitted cores, operands
+    committed to the stream's device (two 1-device streams = the 2xENC /
+    2xDEC / ENC+DEC modes running concurrently via async dispatch, one
+    jit trace shared by both streams);
+  * multi-device stream — the client's untraced core impls shard_map'ed
+    over the group's 1-D 'batch' mesh (the batch axis of the limb-folded
+    grid splits across devices; per-shard nonce offsets keep row r of a
+    batch on ``nonce0 + r``, bit-identical to the unsharded launch).
+
+All launches in a round go out before anything blocks — jax's async
+dispatch keeps every stream's device queue busy, which is the whole point
+of the dual-stream layout under the paper's 10:1 encrypt-heavy mix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import scheduler as policy
+from repro.distributed import sharding as shd
+from repro.fhe_client.service.batcher import DecJob, EncJob
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchRecord:
+    """One job launch: which stream ran what, under which top-level mode."""
+    round: int
+    stream: int
+    kind: str                       # 'enc' | 'dec'
+    mode: policy.Mode
+    bucket: int
+    rids: tuple
+
+
+class StreamExecutor:
+    """One execution stream (device group) running the client cores."""
+
+    def __init__(self, client, devices, index: int):
+        self.client = client
+        self.devices = tuple(devices)
+        self.index = index
+        self.n_shards = len(self.devices)
+        if self.n_shards > 1:
+            self.mesh = shd.stream_mesh(self.devices)
+            self._enc = self._sharded_enc_core()
+            self._dec = self._sharded_dec_core()
+        else:
+            self.mesh = None
+            self._enc = self.client.encrypt_core
+            self._dec = self.client.decrypt_core
+
+    # --- shard_map'ed cores (multi-device groups) ---------------------------
+
+    def _sharded_enc_core(self):
+        impl = self.client.encrypt_impl
+        n_ops = 2 if self.client.fourier == "device" else 1
+
+        def local(*args):
+            *ops, n0 = args
+            return impl(*ops, kops.shard_nonce_base(n0, ops[0].shape[0]))
+
+        return jax.jit(shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P("batch"),) * n_ops + (P(),),
+            out_specs=P("batch"), check_rep=False))
+
+    def _sharded_dec_core(self):
+        impl = self.client.decrypt_impl
+
+        def local(c0, c1, scale):
+            return impl(c0, c1, scale)
+
+        return jax.jit(shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P("batch"), P("batch"), P("batch")),
+            out_specs=P("batch"), check_rep=False))
+
+    # --- placement ----------------------------------------------------------
+
+    def _place(self, x):
+        if self.mesh is not None:
+            return jax.device_put(
+                x, shd.batch_stack_sharding(self.mesh, jnp.ndim(x)))
+        return jax.device_put(x, self.devices[0])
+
+    # --- launches (async: no blocking here) ---------------------------------
+
+    def launch(self, job):
+        if isinstance(job, EncJob):
+            ops = self.client.encrypt_operands(job.messages)
+            return self._enc(*[self._place(o) for o in ops],
+                             jnp.uint32(job.nonce0))
+        assert isinstance(job, DecJob)
+        return self._dec(self._place(job.cts.c0),
+                         self._place(job.cts.c1),
+                         self._place(jnp.asarray(job.scales)))
+
+
+class DualStreamScheduler:
+    """Maps batch jobs onto the stream executors, round by round, with the
+    analytic scheduler's mode policy, and records the dispatch log."""
+
+    def __init__(self, client, devices=None, n_streams: int | None = None):
+        groups = shd.stream_groups(devices, n_streams)
+        self.streams = [StreamExecutor(client, g, i)
+                        for i, g in enumerate(groups)]
+        self.log: list[DispatchRecord] = []
+        self._round = 0
+
+    @property
+    def n_streams(self) -> int:
+        return len(self.streams)
+
+    @property
+    def pad_multiple(self) -> int:
+        """Devices per stream group — the batcher pads buckets to this so
+        every batch axis divides every stream's mesh."""
+        return self.streams[0].n_shards
+
+    def dispatch(self, enc_jobs, dec_jobs):
+        """Launch every pending job; returns [(job, unmaterialized out)]
+        in launch order. Each round assigns ``core.scheduler``'s policy
+        pick to the streams and launches before the round is blocked on —
+        the dispatch log is exactly ``plan_rounds(n_enc, n_dec)``."""
+        enc_q, dec_q = deque(enc_jobs), deque(dec_jobs)
+        launched = []
+        while enc_q or dec_q:
+            kinds = policy.assign_streams(len(enc_q), len(dec_q),
+                                          self.n_streams)
+            mode = policy.round_mode(kinds)
+            for stream, kind in enumerate(kinds):
+                job = (enc_q if kind == "enc" else dec_q).popleft()
+                out = self.streams[stream].launch(job)
+                self.log.append(DispatchRecord(
+                    round=self._round, stream=stream, kind=kind, mode=mode,
+                    bucket=job.bucket, rids=job.rids))
+                launched.append((job, out))
+            self._round += 1
+        return launched
+
+    def clear_log(self):
+        """Reset the dispatch log and round counter (telemetry window
+        boundary; the log otherwise grows one record per job forever)."""
+        self.log.clear()
+        self._round = 0
+
+    def modes_executed(self, start: int = 0):
+        """[(mode, kinds)] per round from the dispatch log (from log entry
+        ``start`` on) — directly comparable to ``plan_rounds`` output."""
+        rounds: dict[int, list] = {}
+        for rec in self.log[start:]:
+            rounds.setdefault(rec.round, []).append(rec)
+        out = []
+        for r in sorted(rounds):
+            recs = sorted(rounds[r], key=lambda x: x.stream)
+            out.append((recs[0].mode, tuple(x.kind for x in recs)))
+        return out

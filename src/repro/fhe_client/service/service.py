@@ -1,0 +1,209 @@
+"""ClientService: the servable engine over the batched client pipeline.
+
+Request flow (the missing layer the ROADMAP's north star assumes — BTS/
+FAB-class server accelerators presume the client side can keep up with a
+request stream):
+
+    submit_encrypt/submit_decrypt      per-message requests, FIFO queues
+        -> CoalescingBatcher           bucketed, tail-padded batch jobs
+        -> DualStreamScheduler         RSC mode policy on device groups
+        -> jitted / shard_map'ed cores one launch per job per stream
+        -> demux                       per-request results, padding dropped
+
+Everything is synchronous-at-flush: ``submit_*`` only enqueues; ``flush``
+coalesces, dispatches every pending job (all launches go out before any
+result is blocked on — jax async dispatch overlaps the streams), then
+materializes and demultiplexes results. ``result(rid)`` auto-flushes.
+
+Determinism contract: the service draws nonces from the CLIENT's counter
+(padded rows included), so the ciphertext for any submitted message is
+bit-identical to ``client.encode_encrypt_batch`` from the same nonce
+base, regardless of bucket shape, padding, stream assignment or device
+count. Tests pin exactly this.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+import jax
+
+from repro.core.encryptor import Ciphertext, CiphertextBatch
+from repro.fhe_client.client import FHEClient
+from repro.fhe_client.service.batcher import (CoalescingBatcher,
+                                              DEFAULT_BUCKETS, EncJob,
+                                              Request, now)
+from repro.fhe_client.service.scheduler import DualStreamScheduler
+
+
+class ClientService:
+    """Request-coalescing, dual-stream FHE client service."""
+
+    def __init__(self, client: FHEClient | None = None, profile="test",
+                 buckets=DEFAULT_BUCKETS, devices=None,
+                 n_streams: int | None = None):
+        self.client = client if client is not None else FHEClient(profile)
+        self.scheduler = DualStreamScheduler(self.client, devices=devices,
+                                             n_streams=n_streams)
+        self.batcher = CoalescingBatcher(
+            buckets, pad_multiple=self.scheduler.pad_multiple)
+        self._queues = {"enc": deque(), "dec": deque()}
+        self._results: dict[int, object] = {}
+        self._latencies: dict[int, float] = {}
+        self._next_rid = 0
+
+    # --- submission ---------------------------------------------------------
+
+    def _enqueue(self, kind: str, payload) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queues[kind].append(
+            Request(rid=rid, kind=kind, payload=payload, t_submit=now()))
+        return rid
+
+    def submit_encrypt(self, message) -> int:
+        """Queue one (n_slots,) complex message for encode+encrypt.
+        Returns the request id; the result is a ``Ciphertext`` row."""
+        msg = np.asarray(message, np.complex128).reshape(-1)
+        n_slots = self.client.ctx.params.n_slots
+        if msg.shape != (n_slots,):
+            raise ValueError(f"message must hold {n_slots} slots, "
+                             f"got shape {np.shape(message)}")
+        return self._enqueue("enc", msg)
+
+    def submit_decrypt(self, ct) -> int:
+        """Queue one server-returned ciphertext (``Ciphertext`` or a
+        (c0, c1, scale) triple of (>=2, N) stacks) for decrypt+decode.
+        Returns the request id; the result is an (n_slots,) complex row."""
+        if isinstance(ct, Ciphertext):
+            if ct.c1 is None:
+                raise ValueError("expand seeded ciphertexts "
+                                 "(encryptor.expand_seeded) before "
+                                 "submitting for decryption")
+            payload = (ct.c0, ct.c1, float(ct.scale))
+        else:
+            c0, c1, scale = ct
+            payload = (c0, c1, float(scale))
+        # validate at the submit boundary: a malformed payload failing
+        # later inside flush() would take the whole coalesced batch (and
+        # its reserved nonces) down with it
+        n = self.client.ctx.params.n
+        for name, poly in (("c0", payload[0]), ("c1", payload[1])):
+            shape = np.shape(poly)
+            if len(shape) != 2 or shape[0] < 2 or shape[1] != n:
+                raise ValueError(
+                    f"decrypt {name} must be a (>=2, {n}) limb stack, "
+                    f"got shape {shape}")
+        return self._enqueue("dec", payload)
+
+    # --- execution ----------------------------------------------------------
+
+    def pending(self) -> dict:
+        return {k: len(q) for k, q in self._queues.items()}
+
+    def flush(self):
+        """Coalesce + dispatch every queued request and demux results.
+        Returns the number of requests completed in this flush."""
+        n_slots = self.client.ctx.params.n_slots
+        enc_jobs, n_nonces = self.batcher.coalesce_enc(
+            self._queues["enc"], nonce0=0, n_slots=n_slots)
+        if n_nonces:
+            base = self.client.take_nonces(n_nonces)
+            enc_jobs = [
+                EncJob(messages=j.messages, nonce0=base + j.nonce0,
+                       rids=j.rids, t_submits=j.t_submits)
+                for j in enc_jobs
+            ]
+        dec_jobs = self.batcher.coalesce_dec(self._queues["dec"])
+
+        launched = self.scheduler.dispatch(enc_jobs, dec_jobs)
+        done = 0
+        for job, out in launched:
+            jax.block_until_ready(out)
+            t_done = now()
+            if isinstance(job, EncJob):
+                c0, c1 = out
+                p = self.client.ctx.params
+                rows = (Ciphertext(c0=c0[i], c1=c1[i], n_limbs=p.n_limbs,
+                                   scale=p.delta)
+                        for i in range(job.n_real))
+            else:
+                msgs = self.client.decrypt_results(out, job.scales)
+                rows = (msgs[i] for i in range(job.n_real))
+            for rid, t_sub, row in zip(job.rids, job.t_submits, rows):
+                self._results[rid] = row
+                self._latencies[rid] = t_done - t_sub
+                done += 1
+        return done
+
+    def result(self, rid: int):
+        """Result for a request id, consumed on retrieval (flushes only if
+        the request is actually still queued)."""
+        if rid not in self._results:
+            if rid >= self._next_rid:
+                raise KeyError(f"unknown request id {rid}")
+            if any(req.rid == rid for q in self._queues.values()
+                   for req in q):
+                self.flush()
+        if rid not in self._results:
+            raise KeyError(f"request {rid} has no stored result "
+                           f"(already retrieved?)")
+        return self._results.pop(rid)
+
+    def latency(self, rid: int) -> float:
+        """Submit-to-materialize latency (s) of a completed request.
+        Latency entries and the dispatch log accumulate until
+        ``reset_telemetry`` — long-running servers should reset between
+        reporting windows."""
+        return self._latencies[rid]
+
+    def reset_telemetry(self):
+        """Drop accumulated latencies and the dispatch log (results still
+        pending retrieval are kept). Bounds memory on long-running
+        services; per-window stats start fresh afterwards."""
+        self._latencies.clear()
+        self.scheduler.clear_log()
+
+    # --- batch conveniences (the example / bench entry points) -------------
+
+    def encrypt_many(self, messages) -> CiphertextBatch:
+        """Submit a (B, n_slots) message batch through the queue and gather
+        the rows back into one CiphertextBatch (submission order)."""
+        rids = [self.submit_encrypt(m) for m in np.asarray(messages)]
+        self.flush()
+        rows = [self.result(r) for r in rids]
+        import jax.numpy as jnp
+        # rows may be committed to different stream devices; gather on host
+        return CiphertextBatch(
+            c0=jnp.asarray(np.stack([np.asarray(r.c0) for r in rows])),
+            c1=jnp.asarray(np.stack([np.asarray(r.c1) for r in rows])),
+            n_limbs=rows[0].n_limbs, scale=rows[0].scale)
+
+    def decrypt_many(self, cts) -> np.ndarray:
+        """Submit each row of a CiphertextBatch (or iterable of
+        Ciphertexts) through the queue; returns (B, n_slots) complex."""
+        rids = [self.submit_decrypt(ct) for ct in cts]
+        self.flush()
+        return np.stack([self.result(r) for r in rids])
+
+    # --- introspection ------------------------------------------------------
+
+    @property
+    def dispatch_log(self):
+        return self.scheduler.log
+
+    def stats(self) -> dict:
+        log = self.scheduler.log
+        by_stream = {}
+        for rec in log:
+            by_stream[rec.stream] = by_stream.get(rec.stream, 0) + 1
+        return {
+            "n_streams": self.scheduler.n_streams,
+            "shards_per_stream": self.scheduler.pad_multiple,
+            "buckets": self.batcher.buckets,
+            "jobs_dispatched": len(log),
+            "rounds": len({rec.round for rec in log}),
+            "jobs_by_stream": by_stream,
+            "modes": [m.value for m, _k in self.scheduler.modes_executed()],
+        }

@@ -1,0 +1,141 @@
+"""Wire layer: deterministic serialization for ciphertexts and results.
+
+The client<->server boundary (paper Fig. 1) ships three payload kinds:
+
+  * full ciphertext batches — (B, L, N) uint32 residue stacks (c0, c1);
+  * seeded (compressed) ciphertexts — c0 plus the 128-bit-seed-derived
+    PRNG stream id that regenerates ``a`` on the receiver, the paper's
+    on-chip `a`-regeneration trick that halves upload traffic;
+  * decoded results — (B, n_slots) complex message batches.
+
+Encoding is fully deterministic (fixed magic/version header, little-endian
+scalars, C-order little-endian array planes): serializing the same value
+twice yields identical bytes, so payloads are content-addressable and
+replay-diffable across hosts. No pickle anywhere — the format is a fixed
+struct layout, safe to parse from an untrusted peer.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.encryptor import Ciphertext, CiphertextBatch
+
+MAGIC = b"ABCW"
+VERSION = 1
+
+KIND_CT_BATCH = 1
+KIND_CT_SEEDED = 2
+KIND_RESULT = 3
+
+_HDR = struct.Struct("<4sBBxx")          # magic, version, kind, pad
+_CT_BATCH = struct.Struct("<IIId")       # B, L, N, scale
+_CT_SEEDED = struct.Struct("<IIdQ")      # L, N, scale, a_stream
+_RESULT = struct.Struct("<II")           # B, n_slots
+
+
+def _u32_bytes(x) -> bytes:
+    return np.ascontiguousarray(np.asarray(x), dtype="<u4").tobytes()
+
+
+def _f64_bytes(x) -> bytes:
+    return np.ascontiguousarray(np.asarray(x), dtype="<f8").tobytes()
+
+
+def _header(kind: int) -> bytes:
+    return _HDR.pack(MAGIC, VERSION, kind)
+
+
+def _parse_header(buf: bytes, expect_kind: int | None = None) -> int:
+    magic, version, kind = _HDR.unpack_from(buf, 0)
+    if magic != MAGIC:
+        raise ValueError(f"bad wire magic {magic!r}")
+    if version != VERSION:
+        raise ValueError(f"unsupported wire version {version}")
+    if expect_kind is not None and kind != expect_kind:
+        raise ValueError(f"expected wire kind {expect_kind}, got {kind}")
+    return kind
+
+
+def serialize_ciphertext_batch(cts: CiphertextBatch) -> bytes:
+    """(B, L, N) ciphertext batch -> bytes (c0 plane then c1 plane)."""
+    b, l, n = np.shape(cts.c0)
+    return b"".join([
+        _header(KIND_CT_BATCH),
+        _CT_BATCH.pack(b, l, n, float(cts.scale)),
+        _u32_bytes(cts.c0),
+        _u32_bytes(cts.c1),
+    ])
+
+
+def deserialize_ciphertext_batch(buf: bytes) -> CiphertextBatch:
+    _parse_header(buf, KIND_CT_BATCH)
+    off = _HDR.size
+    b, l, n, scale = _CT_BATCH.unpack_from(buf, off)
+    off += _CT_BATCH.size
+    plane = b * l * n * 4
+    c0 = np.frombuffer(buf, dtype="<u4", count=b * l * n,
+                       offset=off).reshape(b, l, n)
+    c1 = np.frombuffer(buf, dtype="<u4", count=b * l * n,
+                       offset=off + plane).reshape(b, l, n)
+    return CiphertextBatch(c0=jnp.asarray(c0), c1=jnp.asarray(c1),
+                           n_limbs=l, scale=scale)
+
+
+def serialize_ciphertext_seeded(ct: Ciphertext) -> bytes:
+    """Seeded (compressed) ciphertext: c0 + the a-regeneration stream id.
+    Halves the upload vs a full (c0, c1) pair."""
+    if ct.c1 is not None or ct.a_stream is None:
+        raise ValueError("not a seeded ciphertext (c1 must be None with an "
+                         "a_stream id); use serialize_ciphertext_batch for "
+                         "full ciphertexts")
+    l, n = np.shape(ct.c0)
+    return b"".join([
+        _header(KIND_CT_SEEDED),
+        _CT_SEEDED.pack(l, n, float(ct.scale), int(ct.a_stream)),
+        _u32_bytes(ct.c0),
+    ])
+
+
+def deserialize_ciphertext_seeded(buf: bytes) -> Ciphertext:
+    _parse_header(buf, KIND_CT_SEEDED)
+    off = _HDR.size
+    l, n, scale, a_stream = _CT_SEEDED.unpack_from(buf, off)
+    off += _CT_SEEDED.size
+    c0 = np.frombuffer(buf, dtype="<u4", count=l * n, offset=off)
+    return Ciphertext(c0=jnp.asarray(c0.reshape(l, n)), c1=None,
+                      n_limbs=l, scale=scale, a_stream=a_stream)
+
+
+def serialize_result(z) -> bytes:
+    """(B, n_slots) complex message batch -> bytes (re plane, im plane)."""
+    z = np.asarray(z, np.complex128)
+    if z.ndim == 1:
+        z = z[None]
+    b, n = z.shape
+    return b"".join([
+        _header(KIND_RESULT),
+        _RESULT.pack(b, n),
+        _f64_bytes(z.real),
+        _f64_bytes(z.imag),
+    ])
+
+
+def deserialize_result(buf: bytes) -> np.ndarray:
+    _parse_header(buf, KIND_RESULT)
+    off = _HDR.size
+    b, n = _RESULT.unpack_from(buf, off)
+    off += _RESULT.size
+    plane = b * n * 8
+    re = np.frombuffer(buf, dtype="<f8", count=b * n, offset=off)
+    im = np.frombuffer(buf, dtype="<f8", count=b * n, offset=off + plane)
+    return (re + 1j * im).reshape(b, n)
+
+
+def payload_kind(buf: bytes) -> int:
+    """Peek a payload's kind tag (KIND_CT_BATCH / KIND_CT_SEEDED /
+    KIND_RESULT) without decoding the body."""
+    return _parse_header(buf)

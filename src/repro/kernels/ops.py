@@ -30,6 +30,8 @@ from __future__ import annotations
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import fft as fftmod
 from repro.core.context import CKKSContext
@@ -175,6 +177,78 @@ def decrypt_fused(c0, c1, s_mont, ctx: CKKSContext, n_limbs: int = 2,
 
 
 # ---------------------------------------------------------------------------
+# Mesh-sharded entry points: batch axis of the limb-folded grid over devices
+# ---------------------------------------------------------------------------
+#
+# Each shard runs the SAME limb-folded kernel on its slice of the batch
+# axis (one pallas_call per device — each device is an RSC-equivalent
+# stream), so a b-device mesh issues b concurrent launches for one batch.
+# ``check_rep=False``: shard_map has no replication rule for pallas_call;
+# every output is batch-sharded anyway. Nonce bases are offset per shard so
+# row r of the batch always encrypts under ``nonce0 + r`` — bit-identical
+# to the single-device launch.
+
+
+def _shard_b(batch: int, mesh) -> int:
+    n_shards = mesh.shape["batch"]
+    if batch % n_shards:
+        raise ValueError(
+            f"batch axis {batch} does not divide the {n_shards}-device "
+            f"'batch' mesh axis; pad to a multiple (the service batcher's "
+            f"buckets are forced to multiples of the shard count)")
+    return batch // n_shards
+
+
+def shard_nonce_base(nonce0, shard_rows: int):
+    """Per-shard nonce base inside a shard_map'ed encrypt body: global row
+    r of the batch must keep ``nonce0 + r``, so shard s (holding rows
+    [s*shard_rows, (s+1)*shard_rows)) starts at ``nonce0 + s*shard_rows``.
+    The ONE place the sharded row<->nonce convention lives — both the raw
+    sharded kernel entries below and the service stream executors use it
+    (nonce reuse across shards would break RLWE security)."""
+    return nonce0 + jax.lax.axis_index("batch").astype(jnp.uint32) \
+        * jnp.uint32(shard_rows)
+
+
+def encrypt_fused_sharded(pt_data, pk_b_mont, pk_a_mont, ctx: CKKSContext,
+                          mesh, seed: int | None = None, nonce0=0,
+                          interpret: bool | None = None):
+    """``encrypt_fused`` with the (B, L, N) batch axis shard_map'ed over
+    the mesh's 'batch' axis. Keys replicate; per-shard nonce bases keep the
+    row<->nonce mapping of the unsharded launch."""
+    shard_b = _shard_b(pt_data.shape[0], mesh)
+
+    def local(pt, b, a, n0):
+        return encrypt_fused(pt, b, a, ctx, seed=seed,
+                             nonce0=shard_nonce_base(n0, shard_b),
+                             interpret=interpret)
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P("batch", None, None), P(None, None), P(None, None), P()),
+        out_specs=P("batch", None, None), check_rep=False,
+    )(pt_data, pk_b_mont, pk_a_mont, jnp.uint32(nonce0))
+
+
+def decrypt_fused_sharded(c0, c1, s_mont, ctx: CKKSContext, mesh,
+                          n_limbs: int = 2, interpret: bool | None = None):
+    """``decrypt_fused`` with the (B, L, N) batch axis shard_map'ed over
+    the mesh's 'batch' axis (secret key replicated)."""
+    _shard_b(c0.shape[0], mesh)
+
+    def local(c0_l, c1_l, s):
+        return decrypt_fused(c0_l, c1_l, s, ctx, n_limbs=n_limbs,
+                             interpret=interpret)
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P("batch", None, None), P("batch", None, None),
+                  P(None, None)),
+        out_specs=P("batch", None, None), check_rep=False,
+    )(c0, c1, s_mont)
+
+
+# ---------------------------------------------------------------------------
 # Streaming megakernels: the WHOLE client op in one pallas_call
 # ---------------------------------------------------------------------------
 
@@ -211,21 +285,40 @@ def decrypt_decode_stream(c0, c1, s_mont, ctx: CKKSContext, scale,
 # ---------------------------------------------------------------------------
 
 
+def _row_padded(f, planes, m, block_rows, interpret):
+    """Run a plane-tuple FFT with the row axis padded to >= 2.
+
+    XLA specializes the (1, N) shape differently (reassociation in the
+    df32 TwoSum/TwoProd tails), so a rows=1 launch drifts in the lo planes
+    relative to the same row inside any rows>=2 batch. The client service
+    requires batch-shape-transparent bits (any bucket/padding/shard must
+    reproduce the direct batched call), so a lone row is duplicated to two
+    and sliced back — making every batch shape, including B=1 and
+    single-row shards, bit-identical per row.
+    """
+    rows = planes[0].shape[0]
+    if rows != 1:
+        return f(planes, m, block_rows=block_rows, interpret=interpret)
+    padded = tuple(jnp.concatenate([p, p]) for p in planes)
+    out = f(padded, m, block_rows=block_rows, interpret=interpret)
+    return tuple(o[:1] for o in out)
+
+
 def special_fft_planes(planes, m: int, block_rows: int = 1,
                        interpret: bool | None = None):
     """Jit-traceable df32 SpecialFFT on a four-plane (rows, n) f32 tuple.
     Nests inside the client's jitted decode core (no host round-trip)."""
     interpret = default_interpret() if interpret is None else interpret
-    return fft_df.special_fft_planes(planes, m, block_rows=block_rows,
-                                     interpret=interpret)
+    return _row_padded(fft_df.special_fft_planes, planes, m, block_rows,
+                       interpret)
 
 
 def special_ifft_planes(planes, m: int, block_rows: int = 1,
                         interpret: bool | None = None):
     """Jit-traceable df32 SpecialIFFT on df planes (encode direction)."""
     interpret = default_interpret() if interpret is None else interpret
-    return fft_df.special_ifft_planes(planes, m, block_rows=block_rows,
-                                      interpret=interpret)
+    return _row_padded(fft_df.special_ifft_planes, planes, m, block_rows,
+                       interpret)
 
 
 def special_fft(z, m: int, block_rows: int = 1, interpret: bool | None = None):
