@@ -236,7 +236,8 @@ def _device_fourier_rows(profile: str = "test", big_b: int = 16,
     """
     times = _time_client_pair({
         "host": FHEClient(profile=profile, fourier="host"),
-        "device": FHEClient(profile=profile),
+        "device": FHEClient(profile=profile, pipeline="staged",
+                            datapath="f64"),
     }, big_b, reps)
     return _pair_rows(times, "device_fourier", "host", "device", big_b, {
         "name": profile + "_{op}_b{b}_device",
@@ -257,7 +258,8 @@ def _megakernel_rows(profile: str = "test", big_b: int = 16, reps: int = 3):
     structure (1 vs 2 kernels) and give the TPU run a baseline slot.
     """
     times = _time_client_pair({
-        "staged": FHEClient(profile=profile),
+        "staged": FHEClient(profile=profile, pipeline="staged",
+                            datapath="f64"),
         "megakernel": FHEClient(profile=profile, pipeline="megakernel"),
     }, big_b, reps)
     return _pair_rows(times, "megakernel", "staged", "megakernel", big_b, {

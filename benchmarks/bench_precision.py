@@ -5,6 +5,14 @@ The paper iteratively reduced the FP mantissa and measured 'Boot. prec.';
 We run the same sweep with per-op mantissa rounding (fft.special_fft_
 quantized) on an encode->decode round trip, and validate that the TPU df32
 datapath (49 effective bits) clears the bar.
+
+The ``df32_datapath`` rows measure the FULL client pipeline (not just the
+FFT) on both dtype paths of the Delta/RNS/CRT interior: encode -> encrypt
+-> decrypt -> decode error in bits, swept over Delta, for
+``datapath='f64'`` (the exact interpret-mode oracle) vs ``datapath='df32'``
+(the compile-ready f32/u32 interior, the device default). Equal bits row
+for row is the measured face of the bit-identity contract
+(tests/test_datapath_oracle.py).
 """
 
 import numpy as np
@@ -49,4 +57,40 @@ def run():
                    f"{dfl.effective_mantissa_bits(np.float32)};"
                    f"paper_fp55_at_43b=23.39",
     })
+    rows += _datapath_rows()
+    return rows
+
+
+def _datapath_rows(logn: int = 6, n_limbs: int = 3):
+    """Full-pipeline encode->decrypt error (bits) vs Delta, f64 vs df32
+    datapath — the df32^2 interior must not cost a single bit."""
+    from repro.core.context import CKKSParams
+    from repro.fhe_client.client import FHEClient
+    rows = []
+    threshold = 19.29
+    rng = np.random.default_rng(5)
+    for delta_bits in (30, 40, 50):
+        params = CKKSParams(logn=logn, n_limbs=n_limbs,
+                            delta_bits=delta_bits)
+        precs = {}
+        n = 1 << (logn - 1)
+        z = (rng.standard_normal((1, n))
+             + 1j * rng.standard_normal((1, n))) * 0.5
+        for datapath in ("f64", "df32"):
+            client = FHEClient(profile=params, pipeline="megakernel",
+                               datapath=datapath)
+            got = client.decrypt_decode_batch(
+                client.encode_encrypt_batch(z).truncated(2))
+            precs[datapath] = boot_precision_bits(z, got)
+        for datapath, prec in precs.items():
+            rows.append({
+                "bench": "df32_datapath",
+                "name": f"roundtrip_delta{delta_bits}_{datapath}",
+                "us_per_call": 0.0,
+                "derived": f"boot_prec={prec:.2f};"
+                           f"meets_19.29={prec >= threshold};"
+                           f"delta_bits={delta_bits};"
+                           f"matches_f64_bits="
+                           f"{abs(prec - precs['f64']) < 1e-9}",
+            })
     return rows

@@ -3,10 +3,20 @@
 The core CKKS reference paths use exact 64-bit integer arithmetic, so x64 is
 enabled at package import. All model / kernel code is dtype-explicit (bf16,
 f32, u32) and unaffected by the default-dtype change.
+
+Setting ``JAX_ENABLE_X64=0`` in the environment is honoured: the package then
+leaves x64 OFF, and the client pipeline runs on the df32/uint32 datapath only
+(``FHEClient(datapath='df32')``, the device default) — the CI smoke lane uses
+this to prove the compiled path has no hidden float64/uint64 dependence. The
+u64 reference paths dispatch to bit-identical uint32 limb arithmetic in that
+mode (``core.ntt``/``core.encryptor``).
 """
+
+import os
 
 import jax
 
-jax.config.update("jax_enable_x64", True)
+if os.environ.get("JAX_ENABLE_X64", "1").lower() not in ("0", "false"):
+    jax.config.update("jax_enable_x64", True)
 
 __version__ = "1.0.0"

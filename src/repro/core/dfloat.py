@@ -170,3 +170,115 @@ def effective_mantissa_bits(dtype) -> int:
     """Worst-case effective mantissa of a df pair (2p+1 bits)."""
     p = 24 if jnp.dtype(dtype) == jnp.float32 else 53
     return 2 * p + 1
+
+
+# ---------------------------------------------------------------------------
+# df32^2 (split-limb / expansion) arithmetic — the compiled-mode datapath
+# ---------------------------------------------------------------------------
+# The megakernel's Delta-scale / RNS / CRT interior was f64 (exact on the CPU
+# interpret path, unlowerable on TPU VPUs). The df32^2 substitutes below keep
+# every integer-valued intermediate as a short *expansion* of f32 components
+# (an unevaluated sum, each component integer-valued) built purely from
+# error-free transforms, so the same exact integers flow through the kernel
+# without ever materialising a float64:
+#
+#   * ``df_round_rne`` — exact round-to-nearest-even of a df pair, ties and
+#     parity included, returning a 3-component integer expansion. Matches
+#     ``jnp.round`` of the exact pair value bit-for-bit (the f64 oracle path
+#     rounds the exact value too, so the rounded integers are identical).
+#   * ``expansion3_digits`` — exact balanced base-2^22 digit split of that
+#     expansion (|value| < 2^63); the digits feed pure-uint32 per-limb
+#     modular reduction (``rns.digits_to_residue``).
+#   * ``terms4_to_df`` — collapse four non-overlapping f32 terms (the
+#     16-bit-field split of a u32-pair CRT value) to a df32 pair for the
+#     FFT stages.
+#
+# DESIGN.md §4 carries the per-stage error budget (every stage here is
+# *exact*; only the final pair collapse rounds, budgeted at 2^-48
+# relative — the df32 pair window).
+
+_HALF = np.float32(0.5)
+_TWO = np.float32(2.0)
+
+
+def _is_odd_int(x):
+    """Parity of an integer-valued float array, exact for any magnitude
+    (values with ulp >= 2 are even by construction)."""
+    half = x * x.dtype.type(0.5)
+    return (x - _TWO.astype(x.dtype) * jnp.floor(half)) == x.dtype.type(1)
+
+
+def df_round_rne(x: DF):
+    """Exact round-to-nearest-even of the df pair value hi + lo.
+
+    Returns a 3-component expansion (s, c, b) of integer-valued arrays with
+    s + c + b == RNE(hi + lo) exactly — including ties (value = k + 1/2
+    rounds to the even neighbour, matching what the df64 oracle's
+    ``jnp.round`` does to the exact product). Pure two_sum/compare/select
+    chains: no wider float is ever formed.
+    """
+    one = x.hi.dtype.type(1)
+    half = _HALF.astype(x.hi.dtype)
+    s, err = two_sum(x.hi, x.lo)            # exact: value = s + err
+    rs = jnp.round(s)
+    t = s - rs                              # exact (Sterbenz), |t| <= 1/2
+    f, e = two_sum(t, err)                  # exact: frac = f + e
+    fr = jnp.round(f)
+    d = f - fr                              # exact, |d| <= 1/2
+    g, h = two_sum(d, e)                    # exact: resid = g + h
+    # resid in [-1/2 - ulp, 1/2 + ulp]; the only rounding boundaries are
+    # +-1/2, and resid == +-1/2 exactly iff (g == +-1/2 and h == 0) (the
+    # representable-gap argument: |h| <= ulp(g)/2 cannot bridge the gap).
+    up = (g > half) | ((g == half) & (h > 0))
+    up_tie = (g == half) & (h == 0)
+    dn = (g < -half) | ((g == -half) & (h < 0))
+    dn_tie = (g == -half) & (h == 0)
+    odd = _is_odd_int(rs) != _is_odd_int(fr)
+    zero = x.hi.dtype.type(0)
+    adj = (jnp.where(up | (up_tie & odd), one, zero)
+           - jnp.where(dn | (dn_tie & odd), one, zero))
+    a, b = two_sum(fr, adj)                 # exact (|fr| can exceed 2^24)
+    s1, c = two_sum(rs, a)
+    return s1, c, b
+
+
+def expansion3_digits(s, c, b):
+    """Exact balanced digits (d0, d1, d2) of the integer s + c + b with
+    value == d0 + d1*2^22 + d2*2^44 and |d_i| < 2^23, for |value| < 2^63.
+
+    Digit choice is round-nearest on the *leading* component only — any
+    split with bounded digits is valid (the reconstruction is an identity),
+    so the slack from the unrenormalized tail just widens the digit range.
+    """
+    dt = s.dtype
+    r44 = dt.type(2.0 ** 44)
+    r44i = dt.type(2.0 ** -44)
+    r22 = dt.type(2.0 ** 22)
+    r22i = dt.type(2.0 ** -22)
+    d2 = jnp.round(s * r44i)
+    s0 = s - d2 * r44                       # exact (Sterbenz / small cases)
+    # renormalize the <= 2^45 remainder so the next digit sees a true
+    # leading component (c may exceed 2^22 when s was large)
+    u, e2 = two_sum(c, b)
+    t1, e1 = two_sum(s0, u)
+    t2, t3 = two_sum(e1, e2)
+    d1 = jnp.round(t1 * r22i)
+    d0 = ((t1 - d1 * r22) + t2) + t3        # exact: integers < 2^24
+    return d0, d1, d2
+
+
+def df_mul_pow2(x: DF, scale) -> DF:
+    """Exact multiply of a df pair by a power-of-two scalar."""
+    s = x.hi.dtype.type(scale)
+    return DF(x.hi * s, x.lo * s)
+
+
+def terms4_to_df(w3, w2, w1, w0) -> DF:
+    """Collapse four non-overlapping f32 terms (descending scale) into a
+    df pair. The terms are exact (disjoint 16-bit fields of a u32-pair
+    integer, scaled); only bits below the pair's ~49-bit window round."""
+    s, e1 = two_sum(w1, w0)
+    s, e2 = two_sum(w2, s)
+    hi, e3 = two_sum(w3, s)
+    lo = (e3 + e2) + e1
+    return DF(*quick_two_sum(hi, lo))

@@ -105,6 +105,40 @@ def delta_scale_round(coeffs, delta) -> dfl.DF:
     return dfl.df_round(dfl.DF(hi, lo))
 
 
+def _check_pow2_delta(delta) -> None:
+    d = int(delta)
+    if float(d) != float(delta) or d <= 0 or d & (d - 1):
+        raise ValueError(
+            f"datapath='df32' needs a power-of-two Delta (every CKKSParams "
+            f"Delta is 2**delta_bits); got {delta!r}")
+
+
+def delta_scale_digits(coeff: dfl.DF, delta):
+    """df32 coefficient pair -> exact balanced base-2^22 digits of
+    round(coeff * Delta), as three int32 (..., N) arrays.
+
+    The compiled-mode (datapath='df32') substitute for
+    ``delta_scale_round`` + RNS fmod: Delta is a power of two, so the
+    scaling is exact per f32 component and ``dfloat.df_round_rne`` rounds
+    the exact product to nearest-even — the SAME integer the df64 oracle
+    produces — before ``dfloat.expansion3_digits`` splits it exactly for
+    the uint32 per-limb reduction (``rns.digits_to_residue``).
+    """
+    _check_pow2_delta(delta)
+    scaled = dfl.df_mul_pow2(coeff, np.float32(float(delta)))
+    s, c, b = dfl.df_round_rne(scaled)
+    d0, d1, d2 = dfl.expansion3_digits(s, c, b)
+    return (d0.astype(jnp.int32), d1.astype(jnp.int32), d2.astype(jnp.int32))
+
+
+def planes_to_coeff_df(w: dfl.DFComplex) -> dfl.DF:
+    """SpecialIFFT output planes -> (..., N) df32 coefficient pair
+    (re ++ im) — the df32 analogue of the f64 concat collapse; the pair
+    holds exactly the values ``df_to_float`` + concat would."""
+    return dfl.DF(jnp.concatenate([w.re.hi, w.im.hi], axis=-1),
+                  jnp.concatenate([w.re.lo, w.im.lo], axis=-1))
+
+
 def coeffs_to_plaintext_data(coeffs, ctx: CKKSContext, n_limbs: int):
     """(..., N) float64 coefficients -> (L, ..., N) NTT-domain residues.
     Pure jnp (jit-safe): Delta-scale + exact rounding + broadcasted RNS

@@ -124,14 +124,14 @@ def _small_poly_to_ntt(coeffs_i32, ctx: CKKSContext, n_limbs: int):
 def _to_mont(x, ctx: CKKSContext, n_limbs: int):
     sp = ctx.stacked_plans(n_limbs)
     r2 = jnp.asarray(sp.bcast(sp.r2, x.ndim))
-    return modmul.mulmod_montgomery_u64_stacked(
+    return modmul.mulmod_montgomery_stacked(
         x, r2, jnp.asarray(sp.bcast(sp.q, x.ndim)),
         jnp.asarray(sp.bcast(sp.qinv_neg, x.ndim)))
 
 
 def _mont_mul(a, b_mont, ctx: CKKSContext, n_limbs: int):
     sp = ctx.stacked_plans(n_limbs)
-    return modmul.mulmod_montgomery_u64_stacked(
+    return modmul.mulmod_montgomery_stacked(
         a, b_mont, jnp.asarray(sp.bcast(sp.q, a.ndim)),
         jnp.asarray(sp.bcast(sp.qinv_neg, a.ndim)))
 

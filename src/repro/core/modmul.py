@@ -111,6 +111,23 @@ def mulmod_montgomery_u64_stacked(a, b_mont, q, qinv_neg):
     return jnp.where(u >= qq, u - qq, u).astype(a.dtype)
 
 
+def mulmod_montgomery_stacked(a, b_mont, q, qinv_neg):
+    """Stacked-limb REDC that works with or without jax x64.
+
+    With x64 enabled this is the historical u64 reference path; with
+    ``JAX_ENABLE_X64=0`` it falls back to the pure-uint32 16-bit-limb REDC
+    (``mulmod_montgomery_limb_t``), which is bit-identical per limb — the
+    reference transforms and keygen then run without a single 64-bit op.
+    """
+    import jax
+    if jax.config.jax_enable_x64:
+        return mulmod_montgomery_u64_stacked(a, b_mont, q, qinv_neg)
+    return mulmod_montgomery_limb_t(
+        a.astype(U32), jnp.asarray(b_mont).astype(U32),
+        jnp.asarray(q).astype(U32), jnp.asarray(qinv_neg).astype(U32)
+    ).astype(a.dtype)
+
+
 def to_mont_u64(a, c: MontgomeryConstants):
     return mulmod_montgomery_u64(a, jnp.uint64(c.r2), c)
 
@@ -192,6 +209,21 @@ def _neg64(hi, lo):
     lo_n = ~lo + np.uint32(1)
     hi_n = ~hi + (lo_n == 0).astype(U32)
     return hi_n, lo_n
+
+
+def _sub64(hi_a, lo_a, hi_b, lo_b):
+    """(hi, lo) of a - b for 64-bit values in u32 word pairs (a >= b)."""
+    borrow = (lo_a < lo_b).astype(U32)
+    return hi_a - hi_b - borrow, lo_a - lo_b
+
+
+def _ge64(hi_a, lo_a, hi_b, lo_b):
+    """a >= b on u32 word pairs."""
+    return (hi_a > hi_b) | ((hi_a == hi_b) & (lo_a >= lo_b))
+
+
+def _gt64(hi_a, lo_a, hi_b, lo_b):
+    return (hi_a > hi_b) | ((hi_a == hi_b) & (lo_a > lo_b))
 
 
 def _mul_by_k64(v, k_terms):

@@ -277,7 +277,7 @@ def ntt_stacked(a, sp: StackedPlans):
         x = x.reshape((L,) + batch + (m, 2, t))
         s = psi[:, m:2 * m].reshape((L,) + (1,) * len(batch) + (m, 1))
         u = x[..., 0, :]
-        v = modmul.mulmod_montgomery_u64_stacked(x[..., 1, :], s, q, qinv)
+        v = modmul.mulmod_montgomery_stacked(x[..., 1, :], s, q, qinv)
         x = jnp.stack([modmul.addmod(u, v, q), modmul.submod(u, v, q)],
                       axis=-2)
         x = x.reshape((L,) + batch + (2 * m, t))
@@ -301,7 +301,7 @@ def intt_stacked(a, sp: StackedPlans):
         s = psi_inv[:, h:2 * h].reshape((L,) + (1,) * len(batch) + (h, 1))
         u, v = x[..., 0, :], x[..., 1, :]
         even = modmul.addmod(u, v, q)
-        odd = modmul.mulmod_montgomery_u64_stacked(
+        odd = modmul.mulmod_montgomery_stacked(
             modmul.submod(u, v, q), s, q, qinv)
         x = jnp.concatenate([even, odd], axis=-1)
         x = x.reshape((L,) + batch + (h, 2 * t))
@@ -311,7 +311,7 @@ def intt_stacked(a, sp: StackedPlans):
     qf = jnp.asarray(sp.q).reshape((L,) + (1,) * len(batch) + (1,))
     qinvf = jnp.asarray(sp.qinv_neg).reshape(qf.shape)
     ninv = jnp.asarray(sp.n_inv_mont).reshape(qf.shape)
-    return modmul.mulmod_montgomery_u64_stacked(x, ninv, qf, qinvf)
+    return modmul.mulmod_montgomery_stacked(x, ninv, qf, qinvf)
 
 
 def negacyclic_polymul(a, b, plan: NTTPlan):

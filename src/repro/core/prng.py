@@ -151,5 +151,11 @@ def cbd(seed128: int, stream: int, n: int, eta: int = 21):
 def signed_to_residue(x, q):
     """int32 in (-q, q) -> uint32 residue in [0, q). `q` may be a scalar or
     a broadcastable array of stacked per-limb moduli."""
-    qq = jnp.asarray(q, jnp.int64)
-    return ((x.astype(jnp.int64) % qq + qq) % qq).astype(U32)
+    import jax
+    if jax.config.jax_enable_x64:
+        qq = jnp.asarray(q, jnp.int64)
+        return ((x.astype(jnp.int64) % qq + qq) % qq).astype(U32)
+    # x64-free: jnp.mod is a floor-mod (result carries the divisor's sign),
+    # so one pass already lands in [0, q) — no +q, which could overflow i32
+    qq = jnp.asarray(np.asarray(q, np.int64).astype(np.int32))
+    return jnp.mod(x.astype(jnp.int32), qq).astype(U32)

@@ -16,6 +16,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import dfloat as dfl
+from repro.core import modmul
 
 
 def to_rns_df(x: dfl.DF, q_list: tuple[int, ...]) -> jnp.ndarray:
@@ -82,6 +83,155 @@ def _cond_sub(v: dfl.DF, q: float) -> dfl.DF:
     over = v.hi >= q
     vq = dfl.df_sub(v, dfl.df_const(q, jnp.float64))
     return dfl.DF(jnp.where(over, vq.hi, v.hi), jnp.where(over, vq.lo, v.lo))
+
+
+# ---------------------------------------------------------------------------
+# df32/uint32 datapath (dtype_path='df32'): compiled-mode substitutes
+# ---------------------------------------------------------------------------
+# The f64 paths above are exact but unlowerable on TPU VPUs (no float64, no
+# uint64). The substitutes below carry the SAME integers through pure
+# f32/int32/uint32 arithmetic: Delta-scaled coefficients arrive as exact
+# balanced base-2^22 digits (``dfloat.df_round_rne`` + ``expansion3_digits``)
+# and reduce per limb with u32 Montgomery multiplies; the decode CRT runs
+# entirely on u32 word pairs (16-bit limb products) and only becomes float
+# at the final /Delta pair collapse. Every stage is exact, so residues and
+# centered values are bit-identical to the f64 oracle per limb/element.
+
+DIGIT_BITS = 22
+
+_DIGIT_CONSTS_MEMO: dict[int, tuple[int, int]] = {}
+_CRT2_CONSTS_MEMO: dict[tuple[int, int], dict] = {}
+
+
+def digit_consts(q: int) -> tuple[int, int]:
+    """Montgomery-form radix constants (2^22 mod q, 2^44 mod q) so a digit
+    multiply is one REDC: REDC(d * c22_mont) = d * 2^22 mod q."""
+    cached = _DIGIT_CONSTS_MEMO.get(q)
+    if cached is None:
+        r = 1 << 32
+        cached = (((1 << DIGIT_BITS) * r) % q, ((1 << 2 * DIGIT_BITS) * r) % q)
+        _DIGIT_CONSTS_MEMO[q] = cached
+    return cached
+
+
+def _digit_residue(d, q):
+    """Signed int32 digit in (-2^23, 2^23) -> uint32 residue (|d| < q)."""
+    if isinstance(q, (int, np.integer)):
+        qi = np.int32(q)
+    else:
+        qi = jnp.asarray(q).astype(jnp.int32)
+    return jnp.where(d < 0, d + qi, d).astype(jnp.uint32)
+
+
+def digits_to_residue(d0, d1, d2, q, qinv_neg, c22_mont, c44_mont):
+    """(d0 + d1*2^22 + d2*2^44) mod q on the uint32 limb datapath.
+
+    Digits are int32 with |d| < 2^23; q/qinv_neg/c*_mont may be Python ints
+    (static kernel closures), traced scalars (SMEM table reads) or stacked
+    (L, 1, ..) arrays (the broadcasted staged path). Exact, hence
+    bit-identical to ``to_rns_limb_t`` of the same integer.
+    """
+    r0 = _digit_residue(d0, q)
+    m1 = modmul.mulmod_montgomery_limb_t(_digit_residue(d1, q), c22_mont,
+                                         q, qinv_neg)
+    m2 = modmul.mulmod_montgomery_limb_t(_digit_residue(d2, q), c44_mont,
+                                         q, qinv_neg)
+    return modmul.addmod(modmul.addmod(r0, m1, q), m2, q)
+
+
+def digits_to_residues_stacked(d0, d1, d2, q_list) -> jnp.ndarray:
+    """All limbs at once: digits (..., N) -> (L, ..., N) uint32 residues
+    (the df32 analogue of the broadcasted ``to_rns_df`` pass)."""
+    L = len(q_list)
+    shape = (L,) + (1,) * d0.ndim
+    r = 1 << 32
+    q = np.asarray(q_list, np.uint32).reshape(shape)
+    qinv = np.asarray([(-pow(int(qi), -1, r)) % r for qi in q_list],
+                      np.uint32).reshape(shape)
+    c22 = np.asarray([digit_consts(int(qi))[0] for qi in q_list],
+                     np.uint32).reshape(shape)
+    c44 = np.asarray([digit_consts(int(qi))[1] for qi in q_list],
+                     np.uint32).reshape(shape)
+    return digits_to_residue(d0[None], d1[None], d2[None], q, qinv, c22, c44)
+
+
+def crt2_consts(q0: int, q1: int) -> dict:
+    """Static constants of the uint32 two-limb CRT. ``q_w``/``half_w`` are
+    the u32 word pairs of fl64(q0*q1) — the df64 oracle reduces modulo the
+    ROUNDED product (``crt2_to_df`` subtracts ``float(qq)``), and the df32
+    path follows the same convention so both center identically."""
+    key = (q0, q1)
+    cached = _CRT2_CONSTS_MEMO.get(key)
+    if cached is None:
+        r = 1 << 32
+        qq = int(float(q0 * q1))              # fl64(Q), the oracle modulus
+        half = qq // 2                        # v > Q/2 <=> v > floor(Q/2)
+        cached = {
+            "g0_mont": (pow(q1 % q0, -1, q0) * r) % q0,
+            "g1_mont": (pow(q0 % q1, -1, q1) * r) % q1,
+            "qinv0": (-pow(q0, -1, r)) % r,
+            "qinv1": (-pow(q1, -1, r)) % r,
+            "q_w": (qq >> 32, qq & 0xFFFFFFFF),
+            "half_w": (half >> 32, half & 0xFFFFFFFF),
+        }
+        _CRT2_CONSTS_MEMO[key] = cached
+    return cached
+
+
+def crt2_centered_u32(c0, c1, q0: int, q1: int):
+    """Two-limb CRT -> centered value as (sign, hi, lo): pure uint32.
+
+    value = sign * (hi*2^32 + lo), the same centered representative the
+    df64 oracle computes (fl64(Q) reduction convention included): residue
+    recombination via u32 Montgomery multiplies, the 62-bit products and
+    sums on u32 word pairs (16-bit limb arithmetic) — no uint64 anywhere.
+    """
+    k = crt2_consts(q0, q1)
+    t0 = modmul.mulmod_montgomery_limb_t(
+        c0, np.uint32(k["g0_mont"]), np.uint32(q0), np.uint32(k["qinv0"]))
+    t1 = modmul.mulmod_montgomery_limb_t(
+        c1, np.uint32(k["g1_mont"]), np.uint32(q1), np.uint32(k["qinv1"]))
+    h0, l0 = modmul.mul32x32(t0, np.uint32(q1))
+    h1, l1 = modmul.mul32x32(t1, np.uint32(q0))
+    hi, lo = modmul._add64(h0, l0, h1, l1)               # < 2Q < 2^63
+    qh, ql = np.uint32(k["q_w"][0]), np.uint32(k["q_w"][1])
+    over = modmul._ge64(hi, lo, qh, ql)
+    sh, sl = modmul._sub64(hi, lo, qh, ql)
+    hi = jnp.where(over, sh, hi)
+    lo = jnp.where(over, sl, lo)
+    # center: v > Q/2 -> v - Q (sign/magnitude; the freak v >= Q leftover
+    # of the single conditional subtraction keeps its positive difference,
+    # exactly as the oracle's signed df64 subtraction does)
+    hh, hl = np.uint32(k["half_w"][0]), np.uint32(k["half_w"][1])
+    gt = modmul._gt64(hi, lo, hh, hl)
+    geq = modmul._ge64(hi, lo, qh, ql)
+    dh, dl = modmul._sub64(hi, lo, qh, ql)               # v - Q  (v >= Q)
+    nh, nl = modmul._sub64(qh, ql, hi, lo)               # Q - v  (v <  Q)
+    neg = gt & ~geq
+    out_h = jnp.where(neg, nh, jnp.where(gt & geq, dh, hi))
+    out_l = jnp.where(neg, nl, jnp.where(gt & geq, dl, lo))
+    sign = jnp.where(neg, np.float32(-1.0), np.float32(1.0))
+    return sign, out_h, out_l
+
+
+def centered_to_df(sign, hi, lo, inv_scale) -> dfl.DF:
+    """(sign, u32 word pair) * inv_scale -> df32 pair for the FFT stages.
+
+    The word pair splits into four exact non-overlapping f32 terms (16-bit
+    fields); the power-of-two 1/scale multiplies each term exactly; only
+    the final pair collapse rounds (budget 2^-48 relative — the df32 pair
+    window; DESIGN.md §4)."""
+    f32 = jnp.float32
+    s16 = np.float32(2.0 ** 16)
+    s32 = np.float32(2.0 ** 32)
+    s48 = np.float32(2.0 ** 48)
+    mask = np.uint32(0xFFFF)
+    s = sign * inv_scale                                 # +-2^-k, exact
+    w0 = (lo & mask).astype(f32) * s
+    w1 = (lo >> 16).astype(f32) * s16 * s
+    w2 = (hi & mask).astype(f32) * s32 * s
+    w3 = (hi >> 16).astype(f32) * s48 * s
+    return dfl.terms4_to_df(w3, w2, w1, w0)
 
 
 # --- exact oracles (tests only) --------------------------------------------

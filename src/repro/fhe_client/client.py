@@ -63,25 +63,42 @@ class FHEClient:
 
     ``pipeline`` selects how the device-resident chain is launched:
 
-      * ``'staged'`` (default) — the PR 2 cores: one jitted program per
-        direction, with the df32 FFT kernel and the limb-folded NTT/
-        pointwise kernel as separate pallas_calls inside it;
-      * ``'megakernel'`` — the streaming megakernel
-        (``kernels.client_stream``): the ENTIRE encode+encrypt and
-        decrypt+decode chains are each ONE pallas_call, the Fourier engine
-        mode-switching FFT->NTT inside the kernel body (the ASIC's MDC
-        streaming pipeline). Ciphertexts are bit-identical to 'staged'
+      * ``'staged'`` — one jitted program per direction, with the df32 FFT
+        kernel and the limb-folded NTT/pointwise kernel as separate
+        pallas_calls inside it;
+      * ``'megakernel'`` (default for ``fourier='device'``) — the streaming
+        megakernel (``kernels.client_stream``): the ENTIRE encode+encrypt
+        and decrypt+decode chains are each ONE pallas_call, the Fourier
+        engine mode-switching FFT->NTT inside the kernel body (the ASIC's
+        MDC streaming pipeline). Ciphertexts are bit-identical to 'staged'
         for fixed seeds. Requires ``fourier='device'`` (the megakernel IS
         the device Fourier path).
+
+    ``datapath`` selects the dtype path of the Delta-scale/RNS/CRT
+    interior (DESIGN.md §4):
+
+      * ``'df32'`` (default for ``fourier='device'``) — df32^2 split-limb
+        chains + uint32 modular arithmetic: the same exact integers with
+        zero float64/uint64 ops in the jitted cores, so the client traces
+        with ``JAX_ENABLE_X64=0`` and lowers on TPU VPUs. Bit-identical
+        ciphertexts AND decode planes to the f64 oracle
+        (tests/test_datapath_oracle.py). Requires the standard
+        power-of-two Delta.
+      * ``'f64'`` — the exact df64/fmod/uint64 interior: the interpret-mode
+        oracle the df32 path is differenced against (and the only path for
+        ``fourier='host'``).
     """
 
     def __init__(self, profile="test", seed: int | None = None,
-                 fourier: str = "device", pipeline: str = "staged"):
+                 fourier: str = "device", pipeline: str | None = None,
+                 datapath: str | None = None):
         # `profile` is a named profile string or a CKKSParams value (the
         # property-test parameter grids construct clients off-profile).
         if fourier not in ("device", "host"):
             raise ValueError(f"fourier must be 'device' or 'host', "
                              f"got {fourier!r}")
+        if pipeline is None:
+            pipeline = "megakernel" if fourier == "device" else "staged"
         if pipeline not in ("staged", "megakernel"):
             raise ValueError(f"pipeline must be 'staged' or 'megakernel', "
                              f"got {pipeline!r}")
@@ -89,9 +106,21 @@ class FHEClient:
             raise ValueError("pipeline='megakernel' fuses the df32 Fourier "
                              "kernels into the streaming kernel body and "
                              "therefore requires fourier='device'")
+        if datapath is None:
+            datapath = "df32" if fourier == "device" else "f64"
+        if datapath not in ("f64", "df32"):
+            raise ValueError(f"datapath must be 'f64' or 'df32', "
+                             f"got {datapath!r}")
+        if datapath == "df32" and fourier != "device":
+            raise ValueError("datapath='df32' is the device-kernel dtype "
+                             "path and requires fourier='device' (the host "
+                             "oracle pipeline is f64 by construction)")
         self.ctx: CKKSContext = get_context(profile)
         self.fourier = fourier
         self.pipeline = pipeline
+        self.datapath = datapath
+        if datapath == "df32":
+            encoder._check_pow2_delta(self.ctx.params.delta)
         sk, pk = encryptor.keygen(self.ctx, seed=seed)
         self.keys = ClientKeys(sk, pk)
         self._nonce = 0
@@ -103,6 +132,10 @@ class FHEClient:
         self._decrypt_core_dev = jax.jit(self._decrypt_core_dev_impl)
         self._encrypt_core_mega = jax.jit(self._encrypt_core_mega_impl)
         self._decrypt_core_mega = jax.jit(self._decrypt_core_mega_impl)
+        self._encrypt_core_dev32 = jax.jit(self._encrypt_core_dev32_impl)
+        self._decrypt_core_dev32 = jax.jit(self._decrypt_core_dev32_impl)
+        self._encrypt_core_mega32 = jax.jit(self._encrypt_core_mega32_impl)
+        self._decrypt_core_mega32 = jax.jit(self._decrypt_core_mega32_impl)
 
     # --- message packing ----------------------------------------------------
 
@@ -180,6 +213,59 @@ class FHEClient:
                            ctx.q_list[0], ctx.q_list[1])
         return encoder.coeffs_to_slots_device(v.hi, v.lo, ctx, scale)
 
+    # --- compile-ready df32-datapath cores (datapath='df32') ----------------
+    # The f64/u64 glue between kernels is replaced by the exact df32^2 /
+    # uint32 chains (encoder.delta_scale_digits, rns.digits_to_residues_
+    # stacked / crt2_centered_u32), and the stacked-limb NTT by the u32
+    # kernel path, so the whole traced region holds no float64/uint64 op —
+    # pinned by the jaxpr scan in tests/test_datapath_oracle.py.
+
+    def _encrypt_core_dev32_impl(self, rh, rl, ih, il, nonce0):
+        """Four (B, n_slots) f32 slot planes -> (c0, c1) (B, L, N): staged
+        df32 pipeline — SpecialIFFT kernel, df32^2 Delta-scale digits, u32
+        RNS reduction, limb-folded u32 NTT kernel, fused encrypt kernel."""
+        ctx = self.ctx
+        L = ctx.params.n_limbs
+        w = dfl.dfc_from_planes(
+            kops.special_ifft_planes((rh, rl, ih, il), ctx.params.m))
+        digits = encoder.delta_scale_digits(
+            encoder.planes_to_coeff_df(w), ctx.params.delta)
+        residues = rns.digits_to_residues_stacked(*digits,
+                                                 ctx.q_list[:L])  # (L, B, N)
+        pt = jnp.swapaxes(kops.ntt_limbs(residues, ctx), 0, 1)    # (B, L, N)
+        return kops.encrypt_fused(pt, self.keys.pk.b_mont,
+                                  self.keys.pk.a_mont, ctx, nonce0=nonce0)
+
+    def _decrypt_core_dev32_impl(self, c0, c1, scale):
+        """(B, 2, N) ciphertext stacks -> four (B, n_slots) f32 decoded
+        slot planes: fused decrypt kernel, uint32 CRT + exact /Delta pair,
+        SpecialFFT kernel. `scale` is a traced f32 scalar or (B, 1) array
+        (power-of-two per-ciphertext scales)."""
+        ctx = self.ctx
+        ns = ctx.params.n_slots
+        m = kops.decrypt_fused(c0, c1, self.keys.sk.s_mont, ctx)
+        sign, vh, vl = rns.crt2_centered_u32(m[:, 0], m[:, 1],
+                                             ctx.q_list[0], ctx.q_list[1])
+        inv = jnp.float32(1.0) / jnp.asarray(scale, jnp.float32)
+        x = rns.centered_to_df(sign, vh, vl, inv)
+        planes = dfl.dfc_to_planes(dfl.DFComplex(
+            dfl.DF(x.hi[..., :ns], x.lo[..., :ns]),
+            dfl.DF(x.hi[..., ns:], x.lo[..., ns:])))
+        return kops.special_fft_planes(planes, ctx.params.m)
+
+    def _encrypt_core_mega32_impl(self, rh, rl, ih, il, nonce0):
+        """Megakernel + df32 datapath (the device default): ONE pallas_call
+        with the f32/u32 interior — nothing but the kernel in the trace."""
+        return kops.encode_encrypt_stream(
+            (rh, rl, ih, il), self.keys.pk.b_mont, self.keys.pk.a_mont,
+            self.ctx, nonce0=nonce0, datapath="df32")
+
+    def _decrypt_core_mega32_impl(self, c0, c1, scale):
+        """Megakernel decrypt+decode, df32 interior: ONE pallas_call in,
+        four f32 slot planes out (host collapses to complex)."""
+        return kops.decrypt_decode_stream(
+            c0, c1, self.keys.sk.s_mont, self.ctx, scale, datapath="df32")
+
     # --- streaming megakernel cores (pipeline='megakernel') -----------------
 
     def _encrypt_core_mega_impl(self, re, im, nonce0):
@@ -212,23 +298,44 @@ class FHEClient:
     # batch axis, which is what makes batch-axis sharding (and tail
     # padding in the batcher) bit-transparent per row.
 
+    @property
+    def n_encrypt_operands(self) -> int:
+        """Arity of ``encrypt_operands`` output (the service shard_maps
+        each operand over the batch axis, so it needs the count)."""
+        if self.fourier != "device":
+            return 1
+        return 4 if self.datapath == "df32" else 2
+
     def encrypt_operands(self, messages) -> tuple:
         """Host-side prep for one encrypt batch: (B, n_slots) complex ->
         the operand arrays ``encrypt_impl``/``encrypt_core`` consume
-        ((re, im) planes for the device Fourier engine, (coeffs,) for the
-        host oracle path)."""
+        (four f32 df planes for datapath='df32', (re, im) f64 parts for
+        the f64 device path, (coeffs,) for the host oracle path)."""
         msgs = np.asarray(messages, np.complex128)
         if self.fourier == "device":
+            if self.datapath == "df32":
+                # host-side df split (numpy): identical values to the f64
+                # path's in-jit dfc_from_parts, but the traced region then
+                # starts f32-pure
+                rh = msgs.real.astype(np.float32)
+                ih = msgs.imag.astype(np.float32)
+                rl = (msgs.real - rh).astype(np.float32)
+                il = (msgs.imag - ih).astype(np.float32)
+                return tuple(jnp.asarray(p) for p in (rh, rl, ih, il))
             return (jnp.asarray(msgs.real), jnp.asarray(msgs.imag))
         return (jnp.asarray(encoder.slots_to_coeffs(msgs, self.ctx)),)
 
     @property
     def encrypt_impl(self):
         """Untraced encrypt core ``f(*operands, nonce0) -> (c0, c1)`` for
-        the configured fourier/pipeline (row-independent over batch)."""
+        the configured fourier/pipeline/datapath (row-independent over
+        batch)."""
         if self.fourier != "device":
             return self._encrypt_core_impl
-        return (self._encrypt_core_mega_impl if self.pipeline == "megakernel"
+        if self.pipeline == "megakernel":
+            return (self._encrypt_core_mega32_impl if self.datapath == "df32"
+                    else self._encrypt_core_mega_impl)
+        return (self._encrypt_core_dev32_impl if self.datapath == "df32"
                 else self._encrypt_core_dev_impl)
 
     @property
@@ -236,13 +343,25 @@ class FHEClient:
         """Jit-compiled counterpart of ``encrypt_impl``."""
         if self.fourier != "device":
             return self._encrypt_core
-        return (self._encrypt_core_mega if self.pipeline == "megakernel"
+        if self.pipeline == "megakernel":
+            return (self._encrypt_core_mega32 if self.datapath == "df32"
+                    else self._encrypt_core_mega)
+        return (self._encrypt_core_dev32 if self.datapath == "df32"
                 else self._encrypt_core_dev)
+
+    def _scale_operand(self, scale):
+        """Traced scale operand: f32 on the df32 datapath (power-of-two
+        scales are exact in f32; checked on the host), f64 otherwise."""
+        if self.fourier == "device" and self.datapath == "df32":
+            for s in np.atleast_1d(np.asarray(scale, np.float64)).ravel():
+                encoder._check_pow2_delta(s)
+            return jnp.asarray(scale, jnp.float32)
+        return jnp.asarray(scale, jnp.float64)
 
     def decrypt_operands(self, cts: CiphertextBatch) -> tuple:
         """(c0, c1, scale) operands for ``decrypt_impl``/``decrypt_core``.
         ``scale`` may be a scalar or a (B, 1) per-row array."""
-        return (cts.c0[:, :2], cts.c1[:, :2], jnp.float64(cts.scale))
+        return (cts.c0[:, :2], cts.c1[:, :2], self._scale_operand(cts.scale))
 
     @property
     def decrypt_impl(self):
@@ -251,20 +370,31 @@ class FHEClient:
         traced operand)."""
         if self.fourier != "device":
             return lambda c0, c1, scale: self._decrypt_core_impl(c0, c1)
-        return (self._decrypt_core_mega_impl if self.pipeline == "megakernel"
+        if self.pipeline == "megakernel":
+            return (self._decrypt_core_mega32_impl if self.datapath == "df32"
+                    else self._decrypt_core_mega_impl)
+        return (self._decrypt_core_dev32_impl if self.datapath == "df32"
                 else self._decrypt_core_dev_impl)
 
     @property
     def decrypt_core(self):
         if self.fourier != "device":
             return lambda c0, c1, scale: self._decrypt_core(c0, c1)
-        return (self._decrypt_core_mega if self.pipeline == "megakernel"
+        if self.pipeline == "megakernel":
+            return (self._decrypt_core_mega32 if self.datapath == "df32"
+                    else self._decrypt_core_mega)
+        return (self._decrypt_core_dev32 if self.datapath == "df32"
                 else self._decrypt_core_dev)
 
     def decrypt_results(self, parts, scale) -> np.ndarray:
         """Core output parts -> (B, n_slots) complex messages (the host
-        path finishes its decode — FFT + /scale — here)."""
+        path finishes its decode — FFT + /scale — here; the df32 path
+        collapses its four f32 planes in f64 numpy, which is exactly the
+        ``df_to_float`` the f64 path traces)."""
         if self.fourier == "device":
+            if self.datapath == "df32":
+                rh, rl, ih, il = (np.asarray(p, np.float64) for p in parts)
+                return (rh + rl) + 1j * (ih + il)
             re, im = parts
             return np.asarray(re) + 1j * np.asarray(im)
         hi, lo = parts
@@ -337,7 +467,7 @@ class FHEClient:
         c0 = jnp.stack([ct.c0[:2] for ct in cts])
         c1 = jnp.stack([ct.c1[:2] for ct in cts])
         scale = np.array([ct.scale for ct in cts])[:, None]
-        parts = self.decrypt_core(c0, c1, jnp.asarray(scale))
+        parts = self.decrypt_core(c0, c1, self._scale_operand(scale))
         return self.decrypt_results(parts, scale)
 
     # --- traffic accounting (paper Table/figs analogues) ---------------------

@@ -73,7 +73,7 @@ class StreamExecutor:
 
     def _sharded_enc_core(self):
         impl = self.client.encrypt_impl
-        n_ops = 2 if self.client.fourier == "device" else 1
+        n_ops = self.client.n_encrypt_operands
 
         def local(*args):
             *ops, n0 = args

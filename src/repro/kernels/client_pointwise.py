@@ -39,7 +39,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import modmul, prng
+from repro.core import modmul, prng, rns
 from repro.core.context import CKKSContext
 from repro.core.encryptor import (
     STREAM_ENC_E0, STREAM_ENC_E1, STREAM_ENC_V,
@@ -200,6 +200,25 @@ def sample_vee_k(seed: int, nonce, n: int, rows: int):
     s1 = np.uint32(STREAM_ENC_E1) + np.uint32(16) * nonce
     return (_zo_k(seed, sv, n, rows), _cbd_k(seed, s0, n, rows),
             _cbd_k(seed, s1, n, rows))
+
+
+def rns_digit_stage(digits, c_ref, kc: common.StackedKernelConsts,
+                    limb: int, c22_mont: int, c44_mont: int):
+    """df32-datapath per-limb RNS stage: exact balanced base-2^22 digits of
+    the Delta-scaled coefficients -> this limb's uint32 residues.
+
+    digits: the three int32 (rows, N) arrays from
+    ``encoder.delta_scale_digits``; (q, -q^-1) are traced reads from the
+    stacked-constants ref at row `limb`; the Montgomery-form radix
+    constants are static Python ints (the streaming megakernel unrolls the
+    limb loop, so per-limb radix scalars stay closure constants like the
+    seed/delta). Exact — bit-identical to the f64 fmod stage
+    (``rns.to_rns_limb_t``) on the same integers.
+    """
+    d0, d1, d2 = digits
+    return rns.digits_to_residue(
+        d0, d1, d2, c_ref[limb, common.OFF_Q], c_ref[limb, common.OFF_QINV],
+        np.uint32(c22_mont), np.uint32(c44_mont))
 
 
 def encrypt_limb_stage(vee, pt_l, b_l, a_l, c_ref,

@@ -34,12 +34,18 @@ seeds, so unlike the NTT scalars they cannot ride in the SMEM seed table;
 the megakernel's "seed SRAM" is the (L, K) SMEM table + the (4, n_slots)
 VMEM twiddle planes + the (1, n_slots) bit-reversal permutation, together.
 
-Datapath note: the Delta-scale / RNS / CRT interior runs in f64 (and uint64
-for the CRT residue products) inside the kernel body — exact, and what the
-staged jitted cores do between their launches. In interpret mode (the CI
-path, and this container) that executes natively; a compiled TPU lowering
-of the megakernel would substitute the df64 stages with df32^2 chains, which
-is recorded as an open item in ROADMAP.md.
+Datapath note: the Delta-scale / RNS / CRT interior comes in two dtype
+paths selected by ``datapath=``:
+
+  * ``'f64'``  — df64/fmod/uint64 arithmetic (exact; the interpret-mode
+    oracle, and what the staged jitted cores do between their launches);
+  * ``'df32'`` — df32^2 split-limb chains + uint32 modular arithmetic
+    (``dfloat.df_round_rne``/``expansion3_digits``,
+    ``rns.digits_to_residue``/``crt2_centered_u32``): the same exact
+    integers with no float64/uint64 op anywhere in the body, so the
+    megakernel lowers on TPU VPUs (and traces with JAX_ENABLE_X64=0).
+    Bit-identical ciphertexts to the f64 oracle by construction; the
+    device default (DESIGN.md §4, tests/test_datapath_oracle.py).
 """
 
 from __future__ import annotations
@@ -90,7 +96,8 @@ def _bitrev_planes(z: dfl.DFComplex, rev) -> dfl.DFComplex:
 def _encode_encrypt_kernel(c_ref, nz_ref, rh_ref, rl_ref, ih_ref, il_ref,
                            tw_ref, rev_ref, b_ref, a_ref, c0_ref, c1_ref, *,
                            kc: common.StackedKernelConsts, seed: int,
-                           offsets, delta: float, n_slots: int):
+                           offsets, delta: float, n_slots: int,
+                           datapath: str = "f64", digit_mont: tuple = ()):
     n = kc.n
     rows = rh_ref.shape[0]
 
@@ -101,10 +108,15 @@ def _encode_encrypt_kernel(c_ref, nz_ref, rh_ref, rl_ref, ih_ref, il_ref,
                                   inverse=True)
     w = _bitrev_planes(z, rev_ref[0])
 
-    # --- df32 -> f64 coefficients, Delta-scale + exact round --------------
-    coeffs = jnp.concatenate(
-        [dfl.df_to_float(w.re), dfl.df_to_float(w.im)], axis=-1)  # (rows, N)
-    scaled = encoder.delta_scale_round(coeffs, delta)
+    # --- Delta-scale + exact round (dtype-path switch) --------------------
+    if datapath == "df32":
+        # stay on the df32 pair: exact RNE + balanced digit split, no f64
+        digits = encoder.delta_scale_digits(
+            encoder.planes_to_coeff_df(w), delta)
+    else:
+        coeffs = jnp.concatenate(
+            [dfl.df_to_float(w.re), dfl.df_to_float(w.im)], axis=-1)
+        scaled = encoder.delta_scale_round(coeffs, delta)
 
     # --- PRNG once per ciphertext (limb-independent streams) --------------
     nonce = (nz_ref[0, 0]
@@ -114,8 +126,12 @@ def _encode_encrypt_kernel(c_ref, nz_ref, rh_ref, rl_ref, ih_ref, il_ref,
 
     # --- Fourier engine, NTT mode: per-limb RNS -> NTT -> pointwise -------
     for l in range(kc.n_limbs):
-        qf = c_ref[l, common.OFF_Q].astype(jnp.float64)
-        pt_l = rns.to_rns_limb_t(scaled, qf)
+        if datapath == "df32":
+            pt_l = client_pointwise.rns_digit_stage(digits, c_ref, kc, l,
+                                                    *digit_mont[l])
+        else:
+            qf = c_ref[l, common.OFF_Q].astype(jnp.float64)
+            pt_l = rns.to_rns_limb_t(scaled, qf)
         pt_l = common.ntt_stages_t(pt_l, c_ref, kc,
                                    c_ref[l, common.OFF_Q],
                                    c_ref[l, common.OFF_QINV], row=l)
@@ -128,20 +144,25 @@ def _encode_encrypt_kernel(c_ref, nz_ref, rh_ref, rl_ref, ih_ref, il_ref,
 def encode_encrypt_stream(planes, pk_b_mont, pk_a_mont, ctx: CKKSContext,
                           seed: int, nonce0=0,
                           batch_block: int | None = None,
-                          interpret: bool = True):
+                          interpret: bool = True, datapath: str = "f64"):
     """The whole encode+encrypt chain in ONE pallas_call.
 
     planes: four (B, n_slots) f32 df planes of the slot values (the same
     ``dfloat.dfc_to_planes`` layout the staged device core feeds its FFT
     kernel); pk rows (L, N) Montgomery form; nonce0 a Python int or traced
     uint32 scalar. Returns (c0, c1), each (B, L, N) uint32, bit-identical
-    to the staged pipeline for the nonce layout nonce0 + batch_idx.
+    to the staged pipeline for the nonce layout nonce0 + batch_idx —
+    under EITHER datapath ('df32' carries the same exact integers through
+    f32/u32 chains; see the module docstring).
     """
+    common.check_datapath(datapath)
     p = ctx.params
     batch = planes[0].shape[0]
     n_limbs, n, n_slots = p.n_limbs, p.n, p.n_slots
     bb = client_pointwise._batch_block(batch, batch_block)
     kc, tw, offsets, rev = stream_consts(ctx, n_limbs, inverse=True)
+    digit_mont = (common.stacked_digit_consts(ctx.q_list[:n_limbs])
+                  if datapath == "df32" else ())
     nz = jnp.asarray(nonce0, jnp.uint32).reshape(1, 1)
 
     cspec = pl.BlockSpec((n_limbs, kc.n_scalars), lambda b: (0, 0),
@@ -158,7 +179,8 @@ def encode_encrypt_stream(planes, pk_b_mont, pk_a_mont, ctx: CKKSContext,
     shape = jax.ShapeDtypeStruct((batch, n_limbs, n), jnp.uint32)
     call = pl.pallas_call(
         functools.partial(_encode_encrypt_kernel, kc=kc, seed=seed,
-                          offsets=offsets, delta=p.delta, n_slots=n_slots),
+                          offsets=offsets, delta=p.delta, n_slots=n_slots,
+                          datapath=datapath, digit_mont=digit_mont),
         grid=(batch // bb,),
         in_specs=[cspec, nzspec] + [sspec] * 4 + [twspec, revspec,
                                                   pkspec, pkspec],
@@ -178,22 +200,32 @@ def encode_encrypt_stream(planes, pk_b_mont, pk_a_mont, ctx: CKKSContext,
 def _decrypt_decode_kernel(c_ref, c0_ref, c1_ref, s_ref, sc_ref, tw_ref,
                            rev_ref, orh, orl, oih, oil, *,
                            kc: common.StackedKernelConsts, offsets,
-                           q0: int, q1: int, n_slots: int):
+                           q0: int, q1: int, n_slots: int,
+                           datapath: str = "f64"):
     # --- per-limb decrypt pointwise + INTT (Fourier engine, NTT mode) -----
     m = [client_pointwise.decrypt_limb_stage(
             c0_ref[:, l, :], c1_ref[:, l, :], s_ref[l], c_ref, kc, limb=l)
          for l in range(2)]
 
-    # --- two-limb CRT -> centered df64 -> /Delta --------------------------
-    v = rns.crt2_to_df(m[0].astype(jnp.uint64), m[1].astype(jnp.uint64),
-                       q0, q1)
-    scale = sc_ref[...]                                  # (rows, 1) f64
-    coeffs = v.hi / scale + v.lo / scale
-    re = coeffs[:, :n_slots]
-    im = coeffs[:, n_slots:]
+    if datapath == "df32":
+        # --- uint32 CRT -> centered word pair -> exact /Delta pair --------
+        sign, vh, vl = rns.crt2_centered_u32(m[0], m[1], q0, q1)
+        inv = np.float32(1.0) / sc_ref[...]              # (rows, 1) f32 pow2
+        x = rns.centered_to_df(sign, vh, vl, inv)
+        z = dfl.DFComplex(dfl.DF(x.hi[:, :n_slots], x.lo[:, :n_slots]),
+                          dfl.DF(x.hi[:, n_slots:], x.lo[:, n_slots:]))
+        z = _bitrev_planes(z, rev_ref[0])
+    else:
+        # --- two-limb CRT -> centered df64 -> /Delta ----------------------
+        v = rns.crt2_to_df(m[0].astype(jnp.uint64), m[1].astype(jnp.uint64),
+                           q0, q1)
+        scale = sc_ref[...]                              # (rows, 1) f64
+        coeffs = v.hi / scale + v.lo / scale
+        re = coeffs[:, :n_slots]
+        im = coeffs[:, n_slots:]
+        z = _bitrev_planes(dfl.dfc_from_parts(re, im), rev_ref[0])
 
     # --- Fourier engine, FFT mode: df32 SpecialFFT stage pipeline ---------
-    z = _bitrev_planes(dfl.dfc_from_parts(re, im), rev_ref[0])
     z = fft_df.fft_stage_pipeline(z, tw_ref[...], offsets, n=n_slots,
                                   inverse=False)
     orh[...], orl[...], oih[...], oil[...] = dfl.dfc_to_planes(z)
@@ -201,21 +233,24 @@ def _decrypt_decode_kernel(c_ref, c0_ref, c1_ref, s_ref, sc_ref, tw_ref,
 
 def decrypt_decode_stream(c0, c1, s_mont, ctx: CKKSContext, scale,
                           batch_block: int | None = None,
-                          interpret: bool = True):
+                          interpret: bool = True, datapath: str = "f64"):
     """The whole decrypt+decode chain in ONE pallas_call.
 
     c0/c1: (B, 2, N) uint32 server-returned limb stacks; s_mont (L, N);
-    scale a traced f64 scalar or (B, 1) array (per-ciphertext scales).
+    scale a traced scalar or (B, 1) array (per-ciphertext scales; carried
+    as f32 on the df32 datapath — exact for the power-of-two Deltas).
     Returns four (B, n_slots) f32 df planes of the decoded slots (collapse
     with ``dfloat.df_to_float`` outside), matching the staged device decode
     bit-for-bit (same stage functions, same op order).
     """
+    common.check_datapath(datapath)
     p = ctx.params
     batch, _, n = c0.shape
     n_slots = p.n_slots
     bb = client_pointwise._batch_block(batch, batch_block)
     kc, tw, offsets, rev = stream_consts(ctx, 2, inverse=False)
-    sc = jnp.broadcast_to(jnp.asarray(scale, jnp.float64).reshape(-1, 1),
+    sc_dtype = jnp.float32 if datapath == "df32" else jnp.float64
+    sc = jnp.broadcast_to(jnp.asarray(scale, sc_dtype).reshape(-1, 1),
                           (batch, 1))
 
     cspec = pl.BlockSpec((2, kc.n_scalars), lambda b: (0, 0),
@@ -233,7 +268,7 @@ def decrypt_decode_stream(c0, c1, s_mont, ctx: CKKSContext, scale,
     call = pl.pallas_call(
         functools.partial(_decrypt_decode_kernel, kc=kc, offsets=offsets,
                           q0=ctx.q_list[0], q1=ctx.q_list[1],
-                          n_slots=n_slots),
+                          n_slots=n_slots, datapath=datapath),
         grid=(batch // bb,),
         in_specs=[cspec, ctspec, ctspec, skspec, scspec, twspec, revspec],
         out_specs=(ospec,) * 4,

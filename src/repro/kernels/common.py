@@ -62,6 +62,31 @@ class FourierConfig:
 
 FOURIER_MODES = ("ntt", "fft", "host")
 
+# The scale/RNS/CRT interior of the client chain comes in two dtype paths:
+#   * 'f64'  — exact df64/fmod/uint64 arithmetic. The interpret-mode oracle
+#     (and the historical PR 1-4 behaviour); unlowerable on TPU VPUs.
+#   * 'df32' — exact df32^2 split-limb chains + uint32 modular arithmetic
+#     (dfloat.df_round_rne / expansion3_digits, rns.digits_to_residue /
+#     crt2_centered_u32). Compiles without float64/uint64; bit-identical
+#     integers by construction (DESIGN.md §4).
+DATAPATHS = ("f64", "df32")
+
+
+def check_datapath(datapath: str) -> str:
+    if datapath not in DATAPATHS:
+        raise ValueError(f"datapath must be one of {DATAPATHS}, "
+                         f"got {datapath!r}")
+    return datapath
+
+
+def stacked_digit_consts(q_list) -> tuple:
+    """Static per-limb Montgomery-form radix constants ((c22, c44), ...)
+    for the df32 RNS digit reduction — the seed-table analogue for the
+    digit stage (the megakernel unrolls limbs, so these stay Python ints;
+    the broadcasted staged pass stacks them into (L, 1, ..) arrays)."""
+    from repro.core import rns
+    return tuple(rns.digit_consts(int(q)) for q in q_list)
+
 
 def row_grid(rows: int, block_rows: int) -> tuple[tuple[int, ...], int]:
     """Grid + clamped block size for a rows-streaming kernel.

@@ -194,7 +194,7 @@ def special_fft_planes(planes, m: int, block_rows: int = 1,
     complex128 array is ever materialised.
     """
     n = planes[0].shape[-1]
-    rev = bitrev_indices(n)
+    rev = bitrev_indices(n).astype(np.int32)   # i32: keeps the jaxpr x64-free
     planes = tuple(p[..., rev] for p in planes)
     tw, offsets = packed_twiddles(n, m, inverse=False)
     rows = planes[0].shape[0]
@@ -210,7 +210,7 @@ def special_ifft_planes(planes, m: int, block_rows: int = 1,
     rows = planes[0].shape[0]
     call = _build(n, rows, block_rows, offsets, True, interpret)
     out = call(*planes, jnp.asarray(tw))
-    rev = bitrev_indices(n)
+    rev = bitrev_indices(n).astype(np.int32)
     return tuple(p[..., rev] for p in out)
 
 

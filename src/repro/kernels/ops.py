@@ -256,28 +256,31 @@ def decrypt_fused_sharded(c0, c1, s_mont, ctx: CKKSContext, mesh,
 def encode_encrypt_stream(planes, pk_b_mont, pk_a_mont, ctx: CKKSContext,
                           seed: int | None = None, nonce0=0,
                           batch_block: int | None = None,
-                          interpret: bool | None = None):
+                          interpret: bool | None = None,
+                          datapath: str = "f64"):
     """df32 slot planes -> (c0, c1) ciphertext stacks, ONE pallas_call:
     SpecialIFFT + Delta-scale + RNS + NTT + fused encrypt fused into a
     single kernel body (``kernels.client_stream``). Bit-identical to the
-    staged ``fourier='device'`` pipeline for fixed seeds."""
+    staged ``fourier='device'`` pipeline for fixed seeds, under either
+    ``datapath`` ('df32' = the compile-ready f32/u32 interior)."""
     interpret = default_interpret() if interpret is None else interpret
     seed = ctx.params.seed if seed is None else seed
     return client_stream.encode_encrypt_stream(
         planes, pk_b_mont, pk_a_mont, ctx, seed=seed, nonce0=nonce0,
-        batch_block=batch_block, interpret=interpret)
+        batch_block=batch_block, interpret=interpret, datapath=datapath)
 
 
 def decrypt_decode_stream(c0, c1, s_mont, ctx: CKKSContext, scale,
                           batch_block: int | None = None,
-                          interpret: bool | None = None):
+                          interpret: bool | None = None,
+                          datapath: str = "f64"):
     """(B, 2, N) ciphertext stacks -> four (B, n_slots) f32 df slot planes,
     ONE pallas_call: decrypt pointwise + INTT + CRT + /Delta + SpecialFFT
     in a single kernel body."""
     interpret = default_interpret() if interpret is None else interpret
     return client_stream.decrypt_decode_stream(
         c0, c1, s_mont, ctx, scale, batch_block=batch_block,
-        interpret=interpret)
+        interpret=interpret, datapath=datapath)
 
 
 # ---------------------------------------------------------------------------

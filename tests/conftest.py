@@ -6,9 +6,14 @@ Two regression counters every pipeline test can use:
     records its grid, via the module attribute all kernel wrappers read.
     This is the launch-count regression guard: the limb-folded staged
     kernels must lower exactly ONE pallas_call per fused op, and the
-    streaming megakernel cores exactly ONE per whole client op. jit-cached
-    entry points do not re-lower, so count around a fresh trace (fresh
-    client, or an eager kernel call).
+    streaming megakernel cores exactly ONE per whole client op. The
+    counter is a list of grids (backwards compatible) that ALSO records
+    the kernel-body name per lowering: ``counter.names`` is the parallel
+    name list and ``counter.by_name()`` the name -> count dict, so tests
+    can pin not just how many kernels lower but WHICH (e.g. the
+    megakernel default lowers exactly one ``_encode_encrypt_kernel``).
+    jit-cached entry points do not re-lower, so count around a fresh trace
+    (fresh client, or an eager kernel call).
   * ``fft_counter`` — counts host complex128 SpecialFFT/IFFT oracle calls
     (the device-resident pipeline must never make one).
 
@@ -18,8 +23,19 @@ configurations are built once per session. Tests that mutate client state
 only advance ``_nonce`` (each test captures its base), and tests that need
 a fresh trace under a counter build their own client.
 
-The ``slow`` marker set here is the tier split: CI's fast lane runs
-``-m "not slow"`` (< 10 min budget), the nightly lane runs everything.
+Client fixture roles after the datapath default flip (ISSUE 5):
+
+  * ``tiny_device_client`` — the STAGED f64 pipeline, pinned explicitly:
+    the interpret-mode oracle every df32 differential test compares
+    against (before ISSUE 5 this was also the constructor default);
+  * ``tiny_mega_client``  — ``pipeline='megakernel'`` with the datapath
+    default, i.e. megakernel + df32: the device default a plain
+    ``FHEClient()`` now gives you.
+
+Markers: ``slow`` is the tier split (CI's fast lane runs ``-m "not slow"``
+under the 12-min budget; nightly runs all). ``x64smoke`` tags the subset
+the JAX_ENABLE_X64=0 CI lane re-runs to prove the df32 datapath has no
+hidden float64/uint64 dependence — those tests must pass in BOTH modes.
 """
 
 import pytest
@@ -34,6 +50,10 @@ def pytest_configure(config):
         "markers",
         "slow: long-running sweep excluded from the tier-1 fast lane "
         "(nightly CI runs the full suite)")
+    config.addinivalue_line(
+        "markers",
+        "x64smoke: re-run by the JAX_ENABLE_X64=0 CI lane (df32 datapath "
+        "round-trip / service bit-identity; must pass in both modes)")
 
 
 # ---------------------------------------------------------------------------
@@ -41,14 +61,44 @@ def pytest_configure(config):
 # ---------------------------------------------------------------------------
 
 
+class LaunchLog(list):
+    """List of grids (one per pallas_call lowering, in call order) plus the
+    per-lowering kernel-body names (``names`` / ``by_name()``)."""
+
+    def __init__(self):
+        super().__init__()
+        self.names: list[str] = []
+
+    @staticmethod
+    def _kernel_name(fn) -> str:
+        while hasattr(fn, "func"):          # unwrap functools.partial
+            fn = fn.func
+        return getattr(fn, "__name__", repr(fn))
+
+    def record(self, fn, grid) -> None:
+        self.append(grid)
+        self.names.append(self._kernel_name(fn))
+
+    def by_name(self) -> dict:
+        out: dict[str, int] = {}
+        for n in self.names:
+            out[n] = out.get(n, 0) + 1
+        return out
+
+    def clear(self) -> None:                # keep grids/names in lockstep
+        super().clear()
+        self.names.clear()
+
+
 @pytest.fixture()
 def pallas_call_counter(monkeypatch):
-    """List of grids, one entry per pallas_call lowering, in call order."""
-    calls = []
+    """LaunchLog of grids (and kernel names), one entry per lowering."""
+    calls = LaunchLog()
     real = pl.pallas_call
 
     def counting(*args, **kwargs):
-        calls.append(kwargs.get("grid"))
+        fn = args[0] if args else kwargs.get("kernel")
+        calls.record(fn, kwargs.get("grid"))
         return real(*args, **kwargs)
 
     monkeypatch.setattr(pl, "pallas_call", counting)
@@ -99,11 +149,15 @@ def tiny_host_client():
 
 @pytest.fixture(scope="session")
 def tiny_device_client():
+    """The staged f64 ORACLE client (pinned explicitly now that the
+    constructor default is megakernel + df32)."""
     from repro.fhe_client.client import FHEClient
-    return FHEClient(profile="tiny")
+    return FHEClient(profile="tiny", pipeline="staged", datapath="f64")
 
 
 @pytest.fixture(scope="session")
 def tiny_mega_client():
+    """Megakernel client on the datapath default — megakernel + df32,
+    i.e. exactly what a plain FHEClient(profile='tiny') builds."""
     from repro.fhe_client.client import FHEClient
     return FHEClient(profile="tiny", pipeline="megakernel")

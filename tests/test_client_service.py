@@ -241,17 +241,26 @@ def test_e2e_mixed_requests_and_policy_agreement(svc_client):
 
 def test_no_retrace_across_same_bucket_jobs(pallas_call_counter):
     """Bucketed coalescing means a warm service never re-lowers: jobs of
-    the same bucket (any real/padded composition) hit the jit cache."""
+    the same bucket (any real/padded composition) hit the jit cache —
+    under the new default (megakernel + datapath='df32'), whose warm
+    lowering set is exactly the two megakernel bodies (per-kernel-name
+    counts from the conftest LaunchLog)."""
     from repro.fhe_client.client import FHEClient
     cl = FHEClient(profile="tiny")        # fresh traces land in the counter
+    assert (cl.pipeline, cl.datapath) == ("megakernel", "df32")
     svc = ClientService(client=cl, buckets=(2,))
     cts = svc.encrypt_many(_msgs(cl, 2, seed=4))      # warms enc bucket 2
     svc.decrypt_many(cts.truncated(2))                # warms dec bucket 2
     warm = len(pallas_call_counter)
-    assert warm > 0
+    warm_names = pallas_call_counter.by_name()
+    # one megakernel body per direction: the whole warm service lowered
+    # exactly one encode+encrypt and one decrypt+decode pallas_call
+    assert warm_names == {"_encode_encrypt_kernel": 1,
+                          "_decrypt_decode_kernel": 1}
     cts2 = svc.encrypt_many(_msgs(cl, 3, seed=5))     # 2 jobs, one padded
     svc.decrypt_many(cts2.truncated(2))               # 2 jobs, one padded
     assert len(pallas_call_counter) == warm           # zero new lowerings
+    assert pallas_call_counter.by_name() == warm_names
 
 
 # ---------------------------------------------------------------------------

@@ -45,8 +45,9 @@ def _messages(ctx, batch, seed=0):
 def test_megakernel_cores_lower_single_pallas_call(pallas_call_counter,
                                                    tiny_mega_client):
     """pipeline='megakernel' traces encode+encrypt and decrypt+decode as
-    exactly ONE pallas_call each — the whole-client-op streaming
-    guarantee of ISSUE 3."""
+    exactly ONE pallas_call each — on BOTH datapaths: the f64 oracle
+    interior and the df32 default (ISSUE 3 + ISSUE 5). Per-kernel-name
+    counts pin WHICH kernel lowers, not just how many."""
     client = tiny_mega_client
     ctx = client.ctx
     msgs = _messages(ctx, 3)
@@ -61,6 +62,20 @@ def test_megakernel_cores_lower_single_pallas_call(pallas_call_counter,
     jax.make_jaxpr(client._decrypt_core_mega_impl)(
         c0, c0, jnp.float64(ctx.params.delta))
     assert pallas_call_counter == [(1,)]
+
+    # df32 datapath (the device default): still one launch per direction,
+    # and it is the megakernel body that lowers
+    ops = client.encrypt_operands(msgs)
+    pallas_call_counter.clear()
+    jax.make_jaxpr(client._encrypt_core_mega32_impl)(*ops, jnp.uint32(0))
+    assert pallas_call_counter == [(1,)]
+    assert pallas_call_counter.by_name() == {"_encode_encrypt_kernel": 1}
+
+    pallas_call_counter.clear()
+    jax.make_jaxpr(client._decrypt_core_mega32_impl)(
+        c0, c0, jnp.float32(ctx.params.delta))
+    assert pallas_call_counter == [(1,)]
+    assert pallas_call_counter.by_name() == {"_decrypt_decode_kernel": 1}
 
 
 def test_staged_device_cores_lower_two_pallas_calls(pallas_call_counter,
@@ -153,7 +168,7 @@ def test_megakernel_bit_identical_ciphertexts(tiny_device_client,
 def test_megakernel_bit_identical_ciphertexts_test_profile():
     """Nightly: same bit-identity + budget contract on the 'test' profile
     (N=2^10, 6 limbs) with fresh end-to-end jitted clients."""
-    staged = FHEClient(profile="test")
+    staged = FHEClient(profile="test", pipeline="staged", datapath="f64")
     mega = FHEClient(profile="test", pipeline="megakernel")
     msgs = _messages(staged.ctx, 3, seed=1)
     bs = staged.encode_encrypt_batch(msgs)

@@ -127,7 +127,7 @@ def test_staged_megakernel_bit_identity_grid(logn, delta_bits):
     """Bit-identity staged vs megakernel off the tiny profile too
     (nightly counterpart of the tier-1 hypothesis property)."""
     params = CKKSParams(logn=logn, n_limbs=3, delta_bits=delta_bits)
-    staged = FHEClient(profile=params)
+    staged = FHEClient(profile=params, pipeline="staged", datapath="f64")
     mega = FHEClient(profile=params, pipeline="megakernel")
     msgs = _msgs(staged.ctx, 2, seed=13)
     bs = staged.encode_encrypt_batch(msgs)
