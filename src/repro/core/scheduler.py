@@ -276,7 +276,13 @@ def round_mode(kinds) -> Mode:
 
 def plan_rounds(n_enc: int, n_dec: int, n_streams: int = 2) -> list:
     """Unrolled [(mode, kinds)] dispatch plan for a queue snapshot of
-    ``n_enc`` encrypt-batch and ``n_dec`` decrypt-batch jobs."""
+    ``n_enc`` encrypt-batch and ``n_dec`` decrypt-batch jobs.
+
+    ``n_streams`` is the number of *alive* streams: a degraded service
+    (stream failures re-queued its jobs onto survivors) plans with the
+    surviving count, so the single-stream fallback and the fault-recovery
+    path replay the same policy as a 1-stream deployment.
+    """
     out = []
     e, d = n_enc, n_dec
     while e or d:
@@ -285,3 +291,50 @@ def plan_rounds(n_enc: int, n_dec: int, n_streams: int = 2) -> list:
         e -= kinds.count("enc")
         d -= kinds.count("dec")
     return out
+
+
+# ---------------------------------------------------------------------------
+# Partial-round firing policy (the always-on dispatch loop)
+# ---------------------------------------------------------------------------
+#
+# An explicit flush() drains everything, so every round is as full as the
+# queues allow. The background dispatch loop instead decides *when* a
+# partially-filled bucket may dispatch at all — the paper's host interface
+# keeps the RSCs busy under a sustained stream, which on our side means
+# trading a little batching efficiency (partial buckets waste padded rows)
+# for bounded per-request latency. Three named modes:
+#
+#   'deadline' (default) — full buckets fire immediately; a partial bucket
+#       fires only once its oldest request has waited ``max_wait``.
+#   'eager'  — anything pending fires every loop tick (minimum latency,
+#       worst padding waste; the closed-loop flush() behaviour).
+#   'full'   — only full buckets ever fire on the loop; partial tails wait
+#       for an explicit flush/stop drain (maximum batching efficiency).
+
+FIRE_MODES = ("deadline", "eager", "full")
+
+
+def ready_to_fire(n_pending: int, oldest_age: float, full_bucket: int,
+                  max_wait: float, mode: str = "deadline") -> bool:
+    """Whether a queue with ``n_pending`` requests (oldest waiting
+    ``oldest_age`` seconds) should dispatch now, given the largest bucket
+    ``full_bucket`` and the per-request ``max_wait`` deadline."""
+    if mode not in FIRE_MODES:
+        raise ValueError(f"fire mode must be one of {FIRE_MODES}, "
+                         f"got {mode!r}")
+    if n_pending <= 0:
+        return False
+    if n_pending >= full_bucket:
+        return True
+    if mode == "eager":
+        return True
+    if mode == "full":
+        return False
+    return oldest_age >= max_wait
+
+
+def partial_round(kinds, n_streams: int) -> bool:
+    """True when a round leaves streams idle (fewer jobs than alive
+    streams) — the deadline-fire telemetry marks these so operators can
+    see how much of the fleet a latency-driven dispatch wasted."""
+    return 0 < len(tuple(kinds)) < n_streams

@@ -54,6 +54,26 @@ class FleetMonitor:
                 dead.append(hid)
         return dead
 
+    def mark_failed(self, host: int) -> bool:
+        """Explicitly declare a host dead (an error was *observed*, not
+        just a missed heartbeat — e.g. a service stream raised mid-round).
+        Returns True if the host was alive. The client-service runtime
+        reuses the monitor this way: streams heartbeat on completed jobs,
+        launch/materialize errors mark-failed immediately, and silent
+        hangs fall to ``check_failures``'s timeout."""
+        h = self.hosts[host]
+        was_alive = h.alive
+        h.alive = False
+        return was_alive
+
+    def revive(self, host: int):
+        """Bring a replaced/recovered host back (fresh heartbeat, clean
+        straggler streak)."""
+        h = self.hosts[host]
+        h.alive = True
+        h.slow_streak = 0
+        h.last_heartbeat = self.clock()
+
     @property
     def alive_hosts(self) -> list[int]:
         return [h for h, s in self.hosts.items() if s.alive]

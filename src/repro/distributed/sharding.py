@@ -180,17 +180,32 @@ def replicated(mesh: Mesh):
 # executors run without shard_map at all.
 
 
-def stream_groups(devices=None, n_streams: int | None = None) -> list:
+def stream_groups(devices=None, n_streams: int | None = None,
+                  oversubscribe: bool = False) -> list:
     """Split devices into ``n_streams`` equal-size groups (default: two
     streams — the paper's two RSCs — or one when only one device exists).
     Remainder devices are left idle so every group shards the same
-    bucketed batch shapes."""
+    bucketed batch shapes.
+
+    ``oversubscribe=True`` allows more streams than devices: streams are
+    assigned devices round-robin (1 device per stream). Oversubscribed
+    streams are *logical* — independent dispatch queues and failure
+    domains sharing hardware — which is how the fault-recovery tests (and
+    single-host deployments that still want the dual-stream failure story)
+    run two streams on one device.
+    """
     devices = tuple(jax.devices()) if devices is None else tuple(devices)
     if n_streams is None:
         n_streams = min(2, len(devices))
+    if oversubscribe and n_streams > len(devices):
+        if n_streams < 1:
+            raise ValueError(f"n_streams={n_streams} must be >= 1")
+        return [[devices[i % len(devices)]] for i in range(n_streams)]
     if not 1 <= n_streams <= len(devices):
         raise ValueError(f"n_streams={n_streams} needs 1..{len(devices)} "
-                         f"for {len(devices)} devices")
+                         f"for {len(devices)} devices (pass "
+                         f"oversubscribe=True for logical streams sharing "
+                         f"devices)")
     per = len(devices) // n_streams
     return [list(devices[i * per:(i + 1) * per]) for i in range(n_streams)]
 

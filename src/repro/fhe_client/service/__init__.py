@@ -4,21 +4,33 @@ The servable engine over the batched client pipeline — per-message
 requests coalesce into bucketed batch jobs, which the dual-stream
 scheduler executes on device groups with ``core.scheduler``'s RSC mode
 policy (2xENC / 2xDEC / ENC+DEC), sharding each job's batch axis across
-its stream's devices. See ``service.service`` for the flow and DESIGN.md
-§5 for the mapping onto the paper's dual-RSC scheduling.
+its stream's devices. ``ClientService.start()`` turns it always-on: a
+background dispatch loop (``service.runtime``) with per-request max-wait
+deadlines, bounded-queue backpressure, and a fault-injected failure
+story (``service.faults``: stream death -> bounded retry on survivors
+under the same nonce lease -> graceful single-stream degradation, all
+recorded in a structured event log). See ``service.service`` for the
+flow and DESIGN.md §5 for the mapping onto the paper's dual-RSC
+scheduling.
 """
 
 from repro.fhe_client.service import wire
 from repro.fhe_client.service.batcher import (CoalescingBatcher,
                                               DEFAULT_BUCKETS, DecJob,
                                               EncJob, Request)
+from repro.fhe_client.service.faults import (AllStreamsFailed, EventLog,
+                                             FaultInjector, FaultSpec,
+                                             RequestFailed, ServiceEvent,
+                                             StreamFault)
 from repro.fhe_client.service.scheduler import (DispatchRecord,
                                                 DualStreamScheduler,
                                                 StreamExecutor)
-from repro.fhe_client.service.service import ClientService
+from repro.fhe_client.service.service import ClientService, QueueFull
 
 __all__ = [
-    "ClientService", "CoalescingBatcher", "DEFAULT_BUCKETS",
-    "DecJob", "DispatchRecord", "DualStreamScheduler", "EncJob",
-    "Request", "StreamExecutor", "wire",
+    "AllStreamsFailed", "ClientService", "CoalescingBatcher",
+    "DEFAULT_BUCKETS", "DecJob", "DispatchRecord", "DualStreamScheduler",
+    "EncJob", "EventLog", "FaultInjector", "FaultSpec", "QueueFull",
+    "Request", "RequestFailed", "ServiceEvent", "StreamFault",
+    "StreamExecutor", "wire",
 ]

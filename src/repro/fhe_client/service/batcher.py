@@ -114,18 +114,24 @@ class CoalescingBatcher:
                 return b
         raise ValueError(f"{k} requests exceed max bucket {self.max_bucket}")
 
-    def _drain(self, queue: deque):
-        """FIFO groups of at most max_bucket requests."""
+    def _drain(self, queue: deque, allow_partial: bool = True):
+        """FIFO groups of at most max_bucket requests. With
+        ``allow_partial=False`` a trailing group smaller than max_bucket
+        is left queued (the dispatch loop's 'full buckets fire
+        immediately, partial tails wait for their deadline' split)."""
         while queue:
+            if len(queue) < self.max_bucket and not allow_partial:
+                break
             take = min(len(queue), self.max_bucket)
             yield [queue.popleft() for _ in range(take)]
 
-    def coalesce_enc(self, queue: deque, nonce0: int, n_slots: int):
+    def coalesce_enc(self, queue: deque, nonce0: int, n_slots: int,
+                     allow_partial: bool = True):
         """Drain an encrypt queue into EncJobs. Returns (jobs, n_nonces):
         the caller reserves ``n_nonces`` consecutive nonces at ``nonce0``
         (padded rows included)."""
         jobs, used = [], 0
-        for reqs in self._drain(queue):
+        for reqs in self._drain(queue, allow_partial):
             b = self.bucket_for(len(reqs))
             msgs = np.zeros((b, n_slots), np.complex128)
             for i, r in enumerate(reqs):
@@ -137,12 +143,12 @@ class CoalescingBatcher:
             used += b
         return jobs, used
 
-    def coalesce_dec(self, queue: deque):
+    def coalesce_dec(self, queue: deque, allow_partial: bool = True):
         """Drain a decrypt queue into DecJobs. Tail padding repeats the
         first real row (any valid ciphertext row works — padded outputs
         are dropped at demux)."""
         jobs = []
-        for reqs in self._drain(queue):
+        for reqs in self._drain(queue, allow_partial):
             b = self.bucket_for(len(reqs))
             rows = [r.payload for r in reqs]
             rows += [rows[0]] * (b - len(rows))
@@ -163,4 +169,15 @@ class CoalescingBatcher:
 
 
 def now() -> float:
-    return time.perf_counter()
+    """Submit/latency timestamp source: ``time.monotonic`` so deadline
+    math (max-wait firing, job timeouts, latency percentiles) survives
+    wall-clock jumps — NTP steps must never fire or starve a bucket."""
+    return time.monotonic()
+
+
+def oldest_age(queue: deque, t_now: float) -> float:
+    """Seconds the queue's oldest (FIFO head) request has been waiting;
+    0.0 for an empty queue. Input to the partial-round firing policy."""
+    if not queue:
+        return 0.0
+    return t_now - queue[0].t_submit

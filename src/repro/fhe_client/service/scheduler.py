@@ -38,18 +38,22 @@ from jax.experimental.shard_map import shard_map
 from repro.core import scheduler as policy
 from repro.distributed import sharding as shd
 from repro.fhe_client.service.batcher import DecJob, EncJob
+from repro.fhe_client.service.faults import AllStreamsFailed, EventLog
 from repro.kernels import ops as kops
 
 
 @dataclasses.dataclass(frozen=True)
 class DispatchRecord:
-    """One job launch: which stream ran what, under which top-level mode."""
+    """One job launch: which stream ran what, under which top-level mode.
+    ``attempt > 0`` marks a retry of a failed stream's job (same job, same
+    nonce lease, surviving stream)."""
     round: int
     stream: int
     kind: str                       # 'enc' | 'dec'
     mode: policy.Mode
     bucket: int
     rids: tuple
+    attempt: int = 0
 
 
 class StreamExecutor:
@@ -118,12 +122,26 @@ class StreamExecutor:
 
 class DualStreamScheduler:
     """Maps batch jobs onto the stream executors, round by round, with the
-    analytic scheduler's mode policy, and records the dispatch log."""
+    analytic scheduler's mode policy, and records the dispatch log.
 
-    def __init__(self, client, devices=None, n_streams: int | None = None):
-        groups = shd.stream_groups(devices, n_streams)
+    Failure story: ``faults`` (a ``FaultInjector``) is probed at every
+    launch and materialize; a stream whose launch raises is marked dead
+    (``mark_failed``), its job is re-queued at the FRONT of its kind's
+    queue (same job object, same nonce lease — the retried ciphertexts
+    stay bit-identical), and subsequent rounds plan over the surviving
+    streams only. ``events`` (an ``EventLog``) records every failure,
+    re-queue and degradation so tests can replay the recovery.
+    """
+
+    def __init__(self, client, devices=None, n_streams: int | None = None,
+                 oversubscribe: bool = False, faults=None, events=None):
+        groups = shd.stream_groups(devices, n_streams,
+                                   oversubscribe=oversubscribe)
         self.streams = [StreamExecutor(client, g, i)
                         for i, g in enumerate(groups)]
+        self.faults = faults
+        self.events = events if events is not None else EventLog()
+        self._alive = [True] * len(self.streams)
         self.log: list[DispatchRecord] = []
         self._round = 0
 
@@ -137,26 +155,119 @@ class DualStreamScheduler:
         every batch axis divides every stream's mesh."""
         return self.streams[0].n_shards
 
+    # --- stream liveness ----------------------------------------------------
+
+    @property
+    def alive_streams(self) -> list[int]:
+        return [i for i, a in enumerate(self._alive) if a]
+
+    @property
+    def n_alive(self) -> int:
+        return sum(self._alive)
+
+    def mark_failed(self, stream: int, detail: str = "") -> None:
+        """Declare a stream dead; it takes no further launches. Records a
+        ``stream_failed`` event (+ ``degraded`` on the 2->1 transition).
+        Never raises — callers check ``n_alive`` to decide whether any
+        work can still run."""
+        if not self._alive[stream]:
+            return
+        self._alive[stream] = False
+        self.events.record("stream_failed", stream=stream,
+                           round=self._round, detail=detail)
+        if self.n_alive == 1:
+            self.events.record("degraded", stream=self.alive_streams[0],
+                               round=self._round,
+                               detail="single-stream operation")
+
+    def revive_all(self) -> None:
+        """Bring every stream back (deployment-level recovery seam; tests
+        use it between fault scenarios)."""
+        self._alive = [True] * len(self.streams)
+
+    # --- launches -----------------------------------------------------------
+
+    def launch_job(self, stream: int, job, attempt: int = 0):
+        """Fault-seamed single-job launch on one stream (no log entry)."""
+        if self.faults is not None:
+            self.faults.on_launch(stream=stream, round=self._round, job=job)
+        return self.streams[stream].launch(job)
+
     def dispatch(self, enc_jobs, dec_jobs):
-        """Launch every pending job; returns [(job, unmaterialized out)]
-        in launch order. Each round assigns ``core.scheduler``'s policy
-        pick to the streams and launches before the round is blocked on —
-        the dispatch log is exactly ``plan_rounds(n_enc, n_dec)``."""
+        """Launch every pending job; returns ``(launched, undispatched)``
+        with ``launched`` = [(record, job, out)] in launch order (``out``
+        unmaterialized) and ``undispatched`` = jobs that could not launch
+        because every stream died. Each round assigns ``core.scheduler``'s
+        policy pick to the ALIVE streams and launches before the round is
+        blocked on — with no failures the dispatch log is exactly
+        ``plan_rounds(n_enc, n_dec, n_alive)`` and ``undispatched`` is
+        empty. A launch that raises marks its stream dead and re-queues
+        the job at the FRONT of its queue (same job, same nonce lease) for
+        the surviving streams."""
         enc_q, dec_q = deque(enc_jobs), deque(dec_jobs)
         launched = []
         while enc_q or dec_q:
+            alive = self.alive_streams
+            if not alive:
+                break
             kinds = policy.assign_streams(len(enc_q), len(dec_q),
-                                          self.n_streams)
+                                          len(alive))
             mode = policy.round_mode(kinds)
-            for stream, kind in enumerate(kinds):
-                job = (enc_q if kind == "enc" else dec_q).popleft()
-                out = self.streams[stream].launch(job)
+            for stream, kind in zip(alive, kinds):
+                q = enc_q if kind == "enc" else dec_q
+                job = q.popleft()
+                try:
+                    out = self.launch_job(stream, job)
+                except Exception as e:  # noqa: BLE001 — any launch failure
+                    q.appendleft(job)
+                    self.events.record(
+                        "requeue", stream=stream, round=self._round,
+                        rids=job.rids, detail=f"launch failed: {e}")
+                    self.mark_failed(stream, detail=repr(e))
+                    break               # re-plan the round over survivors
                 self.log.append(DispatchRecord(
                     round=self._round, stream=stream, kind=kind, mode=mode,
                     bucket=job.bucket, rids=job.rids))
-                launched.append((job, out))
+                launched.append((self.log[-1], job, out))
             self._round += 1
-        return launched
+        return launched, list(enc_q) + list(dec_q)
+
+    def relaunch(self, job, attempt: int):
+        """Re-launch one failed job on the surviving streams (bounded-
+        retry path; the job keeps its nonce lease so the retried rows are
+        bit-identical). Returns (record, out). Tries each alive stream
+        in turn, marking further failures dead as it goes; raises
+        ``AllStreamsFailed`` when none survives."""
+        kind = "enc" if isinstance(job, EncJob) else "dec"
+        while True:
+            alive = self.alive_streams
+            if not alive:
+                raise AllStreamsFailed(
+                    f"no alive stream to retry job rids={job.rids}")
+            stream = alive[0]
+            try:
+                out = self.launch_job(stream, job, attempt=attempt)
+            except Exception as e:  # noqa: BLE001
+                self.events.record(
+                    "requeue", stream=stream, round=self._round,
+                    rids=job.rids, attempt=attempt,
+                    detail=f"retry launch failed: {e}")
+                self.mark_failed(stream, detail=repr(e))
+                continue
+            rec = DispatchRecord(
+                round=self._round, stream=stream, kind=kind,
+                mode=policy.round_mode((kind,)), bucket=job.bucket,
+                rids=job.rids, attempt=attempt)
+            self.log.append(rec)
+            self._round += 1
+            return rec, out
+
+    def check_materialize(self, rec: DispatchRecord, job) -> None:
+        """Materialize-phase fault seam (called right before a result is
+        blocked on; the injected 'result_error' failure shape)."""
+        if self.faults is not None:
+            self.faults.on_materialize(stream=rec.stream, round=rec.round,
+                                       job=job)
 
     def clear_log(self):
         """Reset the dispatch log and round counter (telemetry window

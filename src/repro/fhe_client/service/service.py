@@ -10,56 +10,212 @@ request stream):
         -> jitted / shard_map'ed cores one launch per job per stream
         -> demux                       per-request results, padding dropped
 
-Everything is synchronous-at-flush: ``submit_*`` only enqueues; ``flush``
-coalesces, dispatches every pending job (all launches go out before any
-result is blocked on — jax async dispatch overlaps the streams), then
-materializes and demultiplexes results. ``result(rid)`` auto-flushes.
+Two operating modes share that flow:
+
+  * **closed-loop** (the PR 4 behaviour, still the default): ``submit_*``
+    only enqueues; ``flush`` coalesces, dispatches every pending job (all
+    launches go out before any result is blocked on — jax async dispatch
+    overlaps the streams), then materializes and demultiplexes results.
+  * **always-on** (``start()``/``stop()``): a background dispatch loop
+    (``service.runtime``) fires full buckets immediately and partially-
+    filled buckets when their oldest request hits the ``max_wait_s``
+    deadline, admits new requests while rounds are in flight (host
+    coalescing overlaps device execution), and exerts backpressure when
+    the bounded submission queues fill (block-with-timeout or reject).
+
+Failure story (both modes): a ``FaultInjector`` seam at every launch and
+materialize, per-job straggler/timeout detection reusing
+``distributed.elastic.FleetMonitor``, bounded retry that re-queues a
+failed stream's jobs onto surviving streams under the SAME nonce-range
+lease (retried ciphertexts stay bit-identical), graceful degradation to
+single-stream operation, and a structured ``EventLog`` tests replay.
 
 Determinism contract: the service draws nonces from the CLIENT's counter
 (padded rows included), so the ciphertext for any submitted message is
 bit-identical to ``client.encode_encrypt_batch`` from the same nonce
-base, regardless of bucket shape, padding, stream assignment or device
-count. Tests pin exactly this.
+base, regardless of bucket shape, padding, stream assignment, device
+count — or which stream finally ran it after a mid-round failure. Tests
+pin exactly this.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import threading
 from collections import deque
 
 import numpy as np
 import jax
 
+from repro.core import scheduler as policy
 from repro.core.encryptor import Ciphertext, CiphertextBatch
+from repro.distributed.elastic import FleetMonitor
 from repro.fhe_client.client import FHEClient
 from repro.fhe_client.service.batcher import (CoalescingBatcher,
                                               DEFAULT_BUCKETS, EncJob,
-                                              Request, now)
+                                              Request, now, oldest_age)
+from repro.fhe_client.service.faults import (AllStreamsFailed, EventLog,
+                                             RequestFailed)
 from repro.fhe_client.service.scheduler import DualStreamScheduler
 
 
+class QueueFull(RuntimeError):
+    """Bounded submission queue rejected (or timed out) a submit — the
+    backpressure signal a front-end sheds load on."""
+
+
 class ClientService:
-    """Request-coalescing, dual-stream FHE client service."""
+    """Request-coalescing, dual-stream FHE client service.
+
+    Robustness/lifecycle knobs (all optional; defaults preserve the
+    closed-loop PR 4 behaviour):
+
+    ``queue_capacity``   — max queued requests per kind (None = unbounded).
+    ``backpressure``     — 'block' (wait up to ``submit_timeout_s`` for
+                           space, then raise ``QueueFull``) or 'reject'
+                           (raise immediately).
+    ``max_wait_s``       — always-on deadline: a partially-filled bucket
+                           dispatches once its oldest request waited this
+                           long (see ``core.scheduler.ready_to_fire``).
+    ``fire_mode``        — partial-round firing policy: 'deadline' |
+                           'eager' | 'full'.
+    ``max_retries``      — bounded per-job retries after a stream failure.
+    ``job_timeout_s``    — a job materializing slower than this marks its
+                           stream failed (straggler isolation); None = off.
+    ``faults``           — a ``FaultInjector`` armed at every launch/
+                           materialize (tests + fault-injected benches).
+    ``oversubscribe``    — allow more streams than devices (logical
+                           streams sharing hardware: independent failure
+                           domains on a single-device host).
+    """
 
     def __init__(self, client: FHEClient | None = None, profile="test",
                  buckets=DEFAULT_BUCKETS, devices=None,
-                 n_streams: int | None = None):
+                 n_streams: int | None = None, *, oversubscribe=False,
+                 faults=None, max_retries: int = 2,
+                 queue_capacity: int | None = None,
+                 backpressure: str = "block", submit_timeout_s: float = 1.0,
+                 max_wait_s: float = 0.005, fire_mode: str = "deadline",
+                 job_timeout_s: float | None = None,
+                 straggler_factor: float = 4.0, straggler_patience: int = 2):
+        if backpressure not in ("block", "reject"):
+            raise ValueError(f"backpressure must be 'block' or 'reject', "
+                             f"got {backpressure!r}")
+        if fire_mode not in policy.FIRE_MODES:
+            raise ValueError(f"fire_mode must be one of "
+                             f"{policy.FIRE_MODES}, got {fire_mode!r}")
         self.client = client if client is not None else FHEClient(profile)
-        self.scheduler = DualStreamScheduler(self.client, devices=devices,
-                                             n_streams=n_streams)
+        self.events = EventLog(clock=now)
+        self.scheduler = DualStreamScheduler(
+            self.client, devices=devices, n_streams=n_streams,
+            oversubscribe=oversubscribe, faults=faults, events=self.events)
         self.batcher = CoalescingBatcher(
             buckets, pad_multiple=self.scheduler.pad_multiple)
+        self.monitor = FleetMonitor(
+            n_hosts=self.scheduler.n_streams,
+            heartbeat_timeout=(job_timeout_s or 3600.0) * 8,
+            straggler_factor=straggler_factor,
+            patience=straggler_patience, clock=now)
+        self.max_retries = int(max_retries)
+        self.queue_capacity = queue_capacity
+        self.backpressure = backpressure
+        self.submit_timeout_s = submit_timeout_s
+        self.max_wait_s = max_wait_s
+        self.fire_mode = fire_mode
+        self.job_timeout_s = job_timeout_s
+
+        # all request state is guarded by one condition (submitters, the
+        # dispatch loop and the completion thread all touch it)
+        self._cond = threading.Condition()
         self._queues = {"enc": deque(), "dec": deque()}
         self._results: dict[int, object] = {}
+        self._failures: dict[int, RequestFailed] = {}
         self._latencies: dict[int, float] = {}
+        self._consumed: set[int] = set()
         self._next_rid = 0
+        self._inflight = 0            # real requests coalesced, not done
+        self._completed_total = 0
+        self._retries_total = 0
+        # scheduler/monitor mutations are serialized separately (the
+        # dispatch and completion threads both launch); never held while
+        # holding _cond
+        self._sched_lock = threading.Lock()
+        self._loop = None             # runtime.DispatchLoop when running
+
+    # --- lifecycle (always-on mode) -----------------------------------------
+
+    @property
+    def running(self) -> bool:
+        return self._loop is not None and self._loop.alive
+
+    def start(self):
+        """Start the background dispatch loop: from here on, submits are
+        admitted while rounds are in flight, full buckets fire
+        immediately, and partial buckets fire on the ``max_wait_s``
+        deadline. Idempotent; returns self (usable as a context
+        manager)."""
+        from repro.fhe_client.service.runtime import DispatchLoop
+        if self._loop is not None and self._loop.alive:
+            return self
+        self._loop = DispatchLoop(self)
+        self._loop.start()
+        return self
+
+    def stop(self, drain: bool = True, timeout: float = 30.0):
+        """Stop the dispatch loop. ``drain=True`` dispatches everything
+        still queued (partial buckets included) and waits for in-flight
+        jobs; ``drain=False`` fails queued requests with RequestFailed.
+        Idempotent."""
+        loop, self._loop = self._loop, None
+        if loop is not None:
+            loop.stop(drain=drain, timeout=timeout)
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb):
+        self.stop(drain=exc_type is None)
+
+    def _check_loop(self):
+        """Surface a crashed dispatch/completion thread to the caller."""
+        loop = self._loop
+        if loop is not None and loop.crashed is not None:
+            raise RuntimeError("service dispatch loop crashed") \
+                from loop.crashed
 
     # --- submission ---------------------------------------------------------
 
-    def _enqueue(self, kind: str, payload) -> int:
-        rid = self._next_rid
-        self._next_rid += 1
-        self._queues[kind].append(
-            Request(rid=rid, kind=kind, payload=payload, t_submit=now()))
+    def _admit(self, kind: str, payload) -> int:
+        """Enqueue under the bounded-queue/backpressure policy."""
+        self._check_loop()
+        with self._cond:
+            cap = self.queue_capacity
+            if cap is not None:
+                if self.backpressure == "reject":
+                    if len(self._queues[kind]) >= cap:
+                        self.events.record("reject", detail=f"{kind} queue "
+                                           f"at capacity {cap}")
+                        raise QueueFull(
+                            f"{kind} queue at capacity {cap} "
+                            f"(backpressure='reject')")
+                else:
+                    deadline = now() + self.submit_timeout_s
+                    while len(self._queues[kind]) >= cap:
+                        remaining = deadline - now()
+                        if remaining <= 0 or not self.running:
+                            self.events.record(
+                                "reject", detail=f"{kind} submit timed out "
+                                f"after {self.submit_timeout_s}s at "
+                                f"capacity {cap}")
+                            raise QueueFull(
+                                f"{kind} queue still at capacity {cap} "
+                                f"after blocking {self.submit_timeout_s}s")
+                        self._cond.wait(timeout=remaining)
+            rid = self._next_rid
+            self._next_rid += 1
+            self._queues[kind].append(
+                Request(rid=rid, kind=kind, payload=payload, t_submit=now()))
+            self._cond.notify_all()   # wake the dispatch loop
         return rid
 
     def submit_encrypt(self, message) -> int:
@@ -70,12 +226,16 @@ class ClientService:
         if msg.shape != (n_slots,):
             raise ValueError(f"message must hold {n_slots} slots, "
                              f"got shape {np.shape(message)}")
-        return self._enqueue("enc", msg)
+        return self._admit("enc", msg)
 
     def submit_decrypt(self, ct) -> int:
         """Queue one server-returned ciphertext (``Ciphertext`` or a
         (c0, c1, scale) triple of (>=2, N) stacks) for decrypt+decode.
-        Returns the request id; the result is an (n_slots,) complex row."""
+        Returns the request id; the result is an (n_slots,) complex row.
+
+        Validation happens HERE, at the submit boundary: a malformed
+        payload failing later inside a dispatch would take the whole
+        coalesced batch (and its reserved nonces) down with it."""
         if isinstance(ct, Ciphertext):
             if ct.c1 is None:
                 raise ValueError("expand seeded ciphertexts "
@@ -83,73 +243,280 @@ class ClientService:
                                  "submitting for decryption")
             payload = (ct.c0, ct.c1, float(ct.scale))
         else:
-            c0, c1, scale = ct
+            try:
+                c0, c1, scale = ct
+            except (TypeError, ValueError):
+                raise ValueError(
+                    "submit_decrypt takes a Ciphertext or a (c0, c1, "
+                    f"scale) triple, got {type(ct).__name__}") from None
             payload = (c0, c1, float(scale))
-        # validate at the submit boundary: a malformed payload failing
-        # later inside flush() would take the whole coalesced batch (and
-        # its reserved nonces) down with it
         n = self.client.ctx.params.n
+        shapes = {}
         for name, poly in (("c0", payload[0]), ("c1", payload[1])):
             shape = np.shape(poly)
-            if len(shape) != 2 or shape[0] < 2 or shape[1] != n:
+            if len(shape) != 2 or shape[0] < 2:
                 raise ValueError(
-                    f"decrypt {name} must be a (>=2, {n}) limb stack, "
+                    f"decrypt {name} must be a (>=2, N={n}) limb stack, "
                     f"got shape {shape}")
-        return self._enqueue("dec", payload)
+            if shape[1] != n:
+                raise ValueError(
+                    f"decrypt {name} has ring degree {shape[1]}, but this "
+                    f"client's parameter set has N={n} — wrong parameter "
+                    f"set or transposed stack (shape {shape})")
+            shapes[name] = shape
+        if shapes["c0"][0] != shapes["c1"][0]:
+            raise ValueError(
+                f"decrypt c0/c1 limb counts differ: c0 has "
+                f"{shapes['c0'][0]} limbs, c1 has {shapes['c1'][0]} — "
+                f"the pair must come from the same ciphertext level")
+        if not np.isfinite(payload[2]) or payload[2] <= 0:
+            raise ValueError(f"decrypt scale must be a positive finite "
+                             f"number, got {payload[2]!r}")
+        return self._admit("dec", payload)
 
-    # --- execution ----------------------------------------------------------
+    # --- coalescing (shared by flush and the dispatch loop) -----------------
 
-    def pending(self) -> dict:
-        return {k: len(q) for k, q in self._queues.items()}
+    def _coalesce_locked(self, fire_enc=True, fire_dec=True,
+                         allow_partial=True, allow_partial_dec=True):
+        """Pop queued requests into jobs + reserve nonces. Caller holds
+        ``_cond``. ``fire_*`` gate each kind (the dispatch loop fires
+        queues independently); ``allow_partial*`` control whether a
+        trailing sub-bucket group dispatches or keeps waiting for its
+        deadline. Returns (enc_jobs, dec_jobs)."""
+        enc_jobs, dec_jobs = [], []
+        if fire_enc:
+            enc_jobs, n_nonces = self.batcher.coalesce_enc(
+                self._queues["enc"], nonce0=0,
+                n_slots=self.client.ctx.params.n_slots,
+                allow_partial=allow_partial)
+            if n_nonces:
+                base = self.client.take_nonces(n_nonces)
+                enc_jobs = [dataclasses.replace(j, nonce0=base + j.nonce0)
+                            for j in enc_jobs]
+        if fire_dec:
+            dec_jobs = self.batcher.coalesce_dec(
+                self._queues["dec"], allow_partial=allow_partial_dec)
+        self._inflight += sum(j.n_real for j in enc_jobs + dec_jobs)
+        if enc_jobs or dec_jobs:
+            self._cond.notify_all()   # queue space freed: wake submitters
+        return enc_jobs, dec_jobs
 
-    def flush(self):
-        """Coalesce + dispatch every queued request and demux results.
-        Returns the number of requests completed in this flush."""
-        n_slots = self.client.ctx.params.n_slots
-        enc_jobs, n_nonces = self.batcher.coalesce_enc(
-            self._queues["enc"], nonce0=0, n_slots=n_slots)
-        if n_nonces:
-            base = self.client.take_nonces(n_nonces)
-            enc_jobs = [
-                EncJob(messages=j.messages, nonce0=base + j.nonce0,
-                       rids=j.rids, t_submits=j.t_submits)
-                for j in enc_jobs
-            ]
-        dec_jobs = self.batcher.coalesce_dec(self._queues["dec"])
+    # --- completion / failure handling --------------------------------------
 
-        launched = self.scheduler.dispatch(enc_jobs, dec_jobs)
-        done = 0
-        for job, out in launched:
-            jax.block_until_ready(out)
-            t_done = now()
-            if isinstance(job, EncJob):
-                c0, c1 = out
-                p = self.client.ctx.params
-                rows = (Ciphertext(c0=c0[i], c1=c1[i], n_limbs=p.n_limbs,
-                                   scale=p.delta)
-                        for i in range(job.n_real))
-            else:
-                msgs = self.client.decrypt_results(out, job.scales)
-                rows = (msgs[i] for i in range(job.n_real))
+    def _sync_monitor_locked(self):
+        """Mirror scheduler stream deaths into the fleet monitor (the
+        monitor's median-based straggler math must not count the dead)."""
+        alive = set(self.scheduler.alive_streams)
+        for s in range(self.scheduler.n_streams):
+            if s not in alive and self.monitor.hosts[s].alive:
+                self.monitor.mark_failed(s)
+
+    def _store(self, job, rows, t_done):
+        """Demux one completed job's real rows into per-request results."""
+        with self._cond:
             for rid, t_sub, row in zip(job.rids, job.t_submits, rows):
                 self._results[rid] = row
                 self._latencies[rid] = t_done - t_sub
-                done += 1
-        return done
+            self._inflight -= job.n_real
+            self._completed_total += job.n_real
+            self._cond.notify_all()
 
-    def result(self, rid: int):
-        """Result for a request id, consumed on retrieval (flushes only if
-        the request is actually still queued)."""
-        if rid not in self._results:
+    def _fail(self, job, attempt, cause):
+        """Exhausted retries (or no streams left): fail the job's rids."""
+        self.events.record("request_failed", rids=job.rids, attempt=attempt,
+                           detail=repr(cause))
+        with self._cond:
+            for rid in job.rids:
+                self._failures[rid] = RequestFailed(rid, attempt + 1, cause)
+            self._inflight -= job.n_real
+            self._completed_total += job.n_real
+            self._cond.notify_all()
+
+    def _demux(self, job, out):
+        """Materialized job output -> real result rows."""
+        if isinstance(job, EncJob):
+            c0, c1 = out
+            p = self.client.ctx.params
+            return [Ciphertext(c0=c0[i], c1=c1[i], n_limbs=p.n_limbs,
+                               scale=p.delta) for i in range(job.n_real)]
+        msgs = self.client.decrypt_results(out, job.scales)
+        return [msgs[i] for i in range(job.n_real)]
+
+    def _run_job(self, rec, job, out):
+        """Materialize one launched job, with the full failure story:
+        materialize-phase fault seam, stream death -> bounded retry on
+        survivors (same job, same nonce lease), straggler/timeout
+        detection via the fleet monitor. Stores results or failures."""
+        attempt = rec.attempt
+        while True:
+            t0 = now()
+            try:
+                self.scheduler.check_materialize(rec, job)
+                jax.block_until_ready(out)
+            except Exception as e:  # noqa: BLE001 — any materialize failure
+                with self._sched_lock:
+                    self.scheduler.mark_failed(rec.stream, detail=repr(e))
+                    self._sync_monitor_locked()
+                    if attempt >= self.max_retries \
+                            or self.scheduler.n_alive == 0:
+                        self._fail(job, attempt, e)
+                        return
+                    attempt += 1
+                    self._retries_total += 1
+                    self.events.record(
+                        "requeue", stream=rec.stream, round=rec.round,
+                        rids=job.rids, attempt=attempt,
+                        detail=f"materialize failed: {e}")
+                    try:
+                        rec, out = self.scheduler.relaunch(job, attempt)
+                    except AllStreamsFailed as dead:
+                        self._fail(job, attempt, dead)
+                        return
+                continue
+            break
+        dt = now() - t0
+        t_done = now()
+        with self._sched_lock:
+            self.monitor.heartbeat(rec.stream)
+            self.monitor.report_step_time(rec.stream, dt)
+            if self.job_timeout_s is not None and dt > self.job_timeout_s \
+                    and self.scheduler.n_alive > 1:
+                # the result arrived, but far past budget: isolate the
+                # straggling stream so later jobs avoid it (never kill the
+                # last stream over a slow-but-correct result)
+                self.scheduler.mark_failed(
+                    rec.stream, detail=f"job took {dt:.4f}s "
+                    f"(timeout {self.job_timeout_s}s)")
+            else:
+                for s in self.monitor.stragglers():
+                    if s in self.scheduler.alive_streams \
+                            and self.scheduler.n_alive > 1:
+                        self.scheduler.mark_failed(
+                            s, detail="straggler (fleet-monitor policy)")
+            self._sync_monitor_locked()
+        if attempt > 0:
+            self.events.record("retry_ok", stream=rec.stream,
+                               round=rec.round, rids=job.rids,
+                               attempt=attempt)
+        self._store(job, self._demux(job, out), t_done)
+
+    # --- execution (closed-loop mode) ---------------------------------------
+
+    def pending(self) -> dict:
+        with self._cond:
+            return {k: len(q) for k, q in self._queues.items()}
+
+    def flush(self):
+        """Complete every queued request; returns how many finished.
+
+        Closed-loop mode: coalesce + dispatch + materialize synchronously.
+        Always-on mode: nudge the loop to fire everything pending
+        (partial buckets included) and wait for the queues and in-flight
+        jobs to drain."""
+        if self.running:
+            start_total = self._completed_total
+            self._loop.drain()
+            with self._cond:
+                return self._completed_total - start_total
+        with self._cond:
+            enc_jobs, dec_jobs = self._coalesce_locked(allow_partial=True)
+        with self._sched_lock:
+            launched, undispatched = self.scheduler.dispatch(enc_jobs,
+                                                             dec_jobs)
+        done0 = self._completed_total
+        for job in undispatched:      # every stream died before launch
+            self._fail(job, 0, AllStreamsFailed(
+                f"no alive stream for job rids={job.rids}"))
+        for rec, job, out in launched:
+            self._run_job(rec, job, out)
+        return self._completed_total - done0
+
+    # --- result retrieval ----------------------------------------------------
+
+    def _lookup(self, rid: int, consume: bool):
+        """Shared result/peek lookup. Caller holds ``_cond``."""
+        if rid in self._failures:
+            raise self._failures[rid]
+        if rid in self._results:
+            row = self._results.pop(rid) if consume else self._results[rid]
+            if consume:
+                self._consumed.add(rid)
+            return row
+        return _PENDING
+
+    def result(self, rid: int, timeout: float | None = 30.0):
+        """Result for a request id, consumed on retrieval (``peek`` is the
+        non-consuming read). Closed-loop: flushes if the request is still
+        queued. Always-on: blocks until the loop completes it (or
+        ``timeout`` elapses). Raises ``RequestFailed`` if the request
+        exhausted its retry budget, and KeyError with a precise reason
+        (unknown rid vs already consumed) otherwise."""
+        self._check_loop()
+        with self._cond:
+            got = self._lookup(rid, consume=True)
+            if got is not _PENDING:
+                return got
             if rid >= self._next_rid:
-                raise KeyError(f"unknown request id {rid}")
-            if any(req.rid == rid for q in self._queues.values()
-                   for req in q):
-                self.flush()
-        if rid not in self._results:
-            raise KeyError(f"request {rid} has no stored result "
-                           f"(already retrieved?)")
-        return self._results.pop(rid)
+                raise KeyError(f"unknown request id {rid} (nothing was "
+                               f"ever submitted under it)")
+            if rid in self._consumed:
+                raise KeyError(f"request {rid} was already retrieved — "
+                               f"result() consumes; use peek() for "
+                               f"non-consuming reads")
+            if self.running:
+                deadline = None if timeout is None else now() + timeout
+                while True:
+                    got = self._lookup(rid, consume=True)
+                    if got is not _PENDING:
+                        return got
+                    self._check_loop()
+                    remaining = (None if deadline is None
+                                 else deadline - now())
+                    if remaining is not None and remaining <= 0:
+                        raise TimeoutError(
+                            f"request {rid} not completed within "
+                            f"{timeout}s (still queued or in flight)")
+                    self._cond.wait(timeout=remaining)
+            queued = any(req.rid == rid for q in self._queues.values()
+                         for req in q)
+        if not queued:
+            raise KeyError(f"request {rid} has no stored result and is "
+                           f"not queued (already retrieved?)")
+        self.flush()
+        with self._cond:
+            got = self._lookup(rid, consume=True)
+        if got is _PENDING:
+            raise KeyError(f"request {rid} did not complete in flush")
+        return got
+
+    def peek(self, rid: int):
+        """Non-consuming read of a completed request's result. Raises
+        KeyError('still pending') if the request exists but has not
+        completed — use ``done(rid)`` to poll without raising."""
+        with self._cond:
+            got = self._lookup(rid, consume=False)
+            if got is not _PENDING:
+                return got
+            if rid >= self._next_rid:
+                raise KeyError(f"unknown request id {rid} (nothing was "
+                               f"ever submitted under it)")
+            if rid in self._consumed:
+                raise KeyError(f"request {rid} was already retrieved — "
+                               f"result() consumes; peek() only sees "
+                               f"results not yet consumed")
+            raise KeyError(f"request {rid} is still pending (queued or in "
+                           f"flight)")
+
+    def done(self, rid: int) -> bool:
+        """True once a request has completed (result ready, already
+        consumed, or failed); False while queued/in flight. Raises
+        KeyError for rids never issued."""
+        with self._cond:
+            if rid >= self._next_rid:
+                raise KeyError(f"unknown request id {rid} (nothing was "
+                               f"ever submitted under it)")
+            return (rid in self._results or rid in self._consumed
+                    or rid in self._failures)
 
     def latency(self, rid: int) -> float:
         """Submit-to-materialize latency (s) of a completed request.
@@ -159,10 +526,12 @@ class ClientService:
         return self._latencies[rid]
 
     def reset_telemetry(self):
-        """Drop accumulated latencies and the dispatch log (results still
-        pending retrieval are kept). Bounds memory on long-running
-        services; per-window stats start fresh afterwards."""
-        self._latencies.clear()
+        """Drop accumulated latencies, events and the dispatch log
+        (results still pending retrieval are kept). Bounds memory on
+        long-running services; per-window stats start fresh afterwards."""
+        with self._cond:
+            self._latencies.clear()
+        self.events.clear()
         self.scheduler.clear_log()
 
     # --- batch conveniences (the example / bench entry points) -------------
@@ -198,12 +567,35 @@ class ClientService:
         by_stream = {}
         for rec in log:
             by_stream[rec.stream] = by_stream.get(rec.stream, 0) + 1
+        with self._cond:
+            queued = {k: len(q) for k, q in self._queues.items()}
+            inflight = self._inflight
+            completed = self._completed_total
+            failed = len(self._failures)
         return {
             "n_streams": self.scheduler.n_streams,
+            "alive_streams": self.scheduler.alive_streams,
             "shards_per_stream": self.scheduler.pad_multiple,
             "buckets": self.batcher.buckets,
             "jobs_dispatched": len(log),
             "rounds": len({rec.round for rec in log}),
             "jobs_by_stream": by_stream,
             "modes": [m.value for m, _k in self.scheduler.modes_executed()],
+            "running": self.running,
+            "queued": queued,
+            "inflight": inflight,
+            "completed": completed,
+            "failed_requests": failed,
+            "retries": self._retries_total,
+            "events": len(self.events),
         }
+
+
+class _Pending:
+    """Sentinel: request exists but has no stored result yet."""
+
+    def __repr__(self):
+        return "<pending>"
+
+
+_PENDING = _Pending()

@@ -89,6 +89,48 @@ def test_fleet_monitor_failure_and_straggler():
     assert slow == [2]
 
 
+def test_fleet_monitor_mark_failed_and_revive():
+    """The client-service runtime's liveness seams: explicit observed-error
+    death (``mark_failed``), recovery (``revive``), and heartbeat refresh
+    keeping a busy host alive across the timeout window."""
+    t = [0.0]
+    mon = FleetMonitor(n_hosts=2, heartbeat_timeout=10.0,
+                       clock=lambda: t[0])
+    assert mon.mark_failed(0) is True        # observed error: dies at once
+    assert mon.mark_failed(0) is False       # idempotent: already dead
+    assert mon.alive_hosts == [1]
+    t[0] = 100.0                             # long past the stale window
+    mon.revive(0)                            # fresh heartbeat on revive...
+    assert mon.alive_hosts == [0, 1]
+    t[0] = 105.0
+    assert mon.check_failures() == [1]       # ...so only host 1 is stale
+    # heartbeat refresh: a host that keeps completing work never times out
+    mon.revive(1)
+    for step in range(5):
+        t[0] = 105.0 + 8.0 * (step + 1)      # each gap < timeout
+        mon.heartbeat(0), mon.heartbeat(1)
+        assert mon.check_failures() == []
+
+
+def test_fleet_monitor_straggler_streak_and_small_fleets():
+    t = [0.0]
+    mon = FleetMonitor(n_hosts=3, straggler_factor=1.5, patience=2,
+                       clock=lambda: t[0])
+    # a single slow step never fires: the streak resets on recovery
+    for dt0 in (2.2, 1.0, 2.2, 1.0):
+        for h, dt in ((0, dt0), (1, 1.0), (2, 1.0)):
+            mon.report_step_time(h, dt)
+        assert mon.stragglers() == []
+    # dead hosts drop out of the median; with <2 alive reporters the
+    # straggler policy cannot fire at all (no meaningful median)
+    mon.mark_failed(1)
+    mon.mark_failed(2)
+    mon.report_step_time(0, 50.0)
+    assert mon.stragglers() == []
+    mon.revive(0)                            # revive clears the slow streak
+    assert mon.hosts[0].slow_streak == 0
+
+
 def test_adamw_8bit_tracks_fp32():
     """8-bit-moment AdamW must track the fp32 optimizer closely."""
     k = jax.random.PRNGKey(1)
