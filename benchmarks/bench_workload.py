@@ -1,7 +1,32 @@
 """Fig. 2b reproduction: client-side op breakdown and the ~10:1
-encrypt:decrypt imbalance that motivates the dual-RSC modes."""
+encrypt:decrypt imbalance that motivates the dual-RSC modes, plus the
+encrypted-inference end-to-end workload row (what one linear+poly3 layer
+costs server-side at the bootstrappable preset)."""
 
 from repro.core.scheduler import ClientWorkload
+
+
+def _encrypted_inference_row(d: int = 8):
+    """Analytic transform/level budget for poly3(W @ x + b) on ciphertexts
+    (examples/secure_inference.py --encrypted): one hoisted decomposition
+    shared by d-1 rotations, d ct x pt products with ONE deferred rescale,
+    then Horner poly3 (two ct x ct, two ct x pt) — 4 levels end to end."""
+    from repro.core import get_context
+    ctx = get_context("boot")
+    l = ctx.params.n_limbs
+    # hoisted decompose (2l+1) + (d-1) per-rotation apply+moddown (l+2 each)
+    # + matvec rescale (1) + 2 mul_ct (3l+3 each) + 2 mul_pt_rescale (1 each)
+    transforms = (2 * l + 1) + (d - 1) * (l + 2) + 1 + 2 * (3 * l + 3) + 2
+    ct_bytes = 2 * l * ctx.n * 4
+    return {
+        "bench": "fig2_workload", "name": "encrypted_inference_e2e",
+        "us_per_call": 0.0,
+        "derived": f"preset=boot;d={d};levels=4;"
+                   f"transforms={transforms};"
+                   f"rotations_hoisted={d - 1};"
+                   f"ct_upload_bytes={ct_bytes};"
+                   f"budget=2^-12",
+    }
 
 
 def run():
@@ -24,5 +49,5 @@ def run():
         "us_per_call": 0.0,
         "derived": f"enc={w.butterflies(w.transforms_enc()):.3e};"
                    f"dec={w.butterflies(w.transforms_dec()):.3e}",
-    }]
+    }, _encrypted_inference_row()]
     return rows

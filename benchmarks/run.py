@@ -25,6 +25,7 @@ PREFERRED_ORDER = (
     "bench_memory",          # Fig. 6b + §IV-B
     "bench_client_latency",  # Fig. 5a
     "bench_client_service",  # §III scheduling, executed (requests/s)
+    "bench_server_ops",      # server-side CKKS ops + BTS inventory
 )
 
 

@@ -53,6 +53,20 @@ PROFILES = {
     "n14": CKKSParams(logn=14, n_limbs=24, decrypt_limbs=2, delta_bits=55),
     "test": CKKSParams(logn=10, n_limbs=6, decrypt_limbs=2, delta_bits=50),
     "tiny": CKKSParams(logn=6, n_limbs=3, decrypt_limbs=2, delta_bits=40),
+    # Server-side eval presets: Delta ~ prime size (2^30) so each ct x ct /
+    # ct x pt rescale drops one ~30-bit limb and the scale returns to ~Delta
+    # — the single-scale regime every rescaling evaluator needs.  The client
+    # profiles above trade that for decrypt headroom (Delta >> 2^30), which
+    # caps them at depth 0.
+    "server": CKKSParams(logn=10, n_limbs=8, decrypt_limbs=2, delta_bits=30),
+    # Toy-ring variant of `server` for the fast test lane: same limb depth
+    # (so 4-level encrypted-inference workloads fit), 2^6 ring.
+    "tinyboot": CKKSParams(logn=6, n_limbs=8, decrypt_limbs=2,
+                           delta_bits=30),
+    # Bootstrappable preset: the paper's N=2^16 / 24-limb geometry at
+    # eval-capable scale.  Deep-L server workloads mod-switch down
+    # (ServerCiphertext.drop_to) to the depth they need.
+    "boot": CKKSParams(logn=16, n_limbs=24, decrypt_limbs=2, delta_bits=30),
 }
 
 
@@ -77,6 +91,23 @@ class CKKSContext:
         # headroom check: Delta * |m|_max must fit the decrypt modulus
         q01 = self.q_list[0] * self.q_list[1]
         assert params.delta < q01 / 4, "Delta too large for 2-limb decrypt"
+        self._special_plan: nttmod.NTTPlan | None = None
+        self._n_plus_1 = n_plus_1
+
+    def special_plan(self) -> "nttmod.NTTPlan":
+        """NTT plan for the key-switching special modulus P (hybrid/GHS key
+        switching, the BTS/FAB structure): the next NTT-friendly prime after
+        the ciphertext primes, from the same deterministic eq.(8) search —
+        re-running with count = L+1 reproduces the first L primes exactly, so
+        the ciphertext modulus chain is untouched.  Built lazily: clients
+        never pay for it."""
+        if self._special_plan is None:
+            primes = find_ntt_friendly_primes(
+                p_bw=self.params.p_bw, n_plus_1=self._n_plus_1,
+                count=self.params.n_limbs + 1)
+            assert primes[:-1] == self.primes, "prime search not prefix-stable"
+            self._special_plan = nttmod.make_plan(primes[-1], self.params.n)
+        return self._special_plan
 
     @property
     def n(self) -> int:

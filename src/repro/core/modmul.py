@@ -111,6 +111,22 @@ def mulmod_montgomery_u64_stacked(a, b_mont, q, qinv_neg):
     return jnp.where(u >= qq, u - qq, u).astype(a.dtype)
 
 
+def mulmod_montgomery_u64_t(a, b_mont, q, qinv_neg):
+    """Traced-constant u64 REDC on uint32 operands — the f64-datapath engine
+    of the server-side eval kernels.
+
+    Unlike ``mulmod_montgomery_u64`` the per-limb constants are TRACED uint32
+    scalars (read from the stacked SMEM table inside a kernel body), so one
+    kernel body serves every limb row.  Bit-identical to the static-constant
+    path; the df32 engine (``mulmod_montgomery_limb_t``) is the pure-uint32
+    alternative the x64-free lane compiles.
+    """
+    u = mulmod_montgomery_u64_stacked(
+        a.astype(U64), jnp.asarray(b_mont).astype(U64),
+        jnp.asarray(q).astype(U64), jnp.asarray(qinv_neg).astype(U32))
+    return u.astype(U32)
+
+
 def mulmod_montgomery_stacked(a, b_mont, q, qinv_neg):
     """Stacked-limb REDC that works with or without jax x64.
 

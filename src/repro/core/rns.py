@@ -234,6 +234,35 @@ def centered_to_df(sign, hi, lo, inv_scale) -> dfl.DF:
     return dfl.terms4_to_df(w3, w2, w1, w0)
 
 
+# --- key-switch decomposition (server-side eval kernels) -------------------
+#
+# Hybrid key switching decomposes a polynomial per source limb: the residue
+# mod q_j is centered to a signed digit D_j with |D_j| <= q_j/2 < 2^30, then
+# base-extended to every modulus row (ciphertext primes + the special prime
+# P).  Because every prime in the eq.(8) family sits in [2^30, 2^31), the
+# centered digit's magnitude is below EVERY target modulus — base extension
+# is one conditional add, no reduction.  Both helpers take traced moduli so
+# one kernel body serves all limb rows, and both are pure int32/uint32 (the
+# df32 datapath compiles them with JAX_ENABLE_X64=0).
+
+
+def ks_center_t(v, q):
+    """uint32 residues in [0, q) -> centered int32 in (-q/2, q/2].
+
+    q odd (an NTT prime), so there are no ties: values strictly above
+    (q-1)/2 = q >> 1 map down by q."""
+    q = jnp.asarray(q, jnp.uint32)
+    vi = v.astype(jnp.int32)
+    return jnp.where(v > (q >> jnp.uint32(1)), vi - q.astype(jnp.int32), vi)
+
+
+def ks_residue_t(w, q):
+    """Centered int32 digit |w| < q -> uint32 residue mod q (exact single
+    conditional add; the caller guarantees |w| <= q_src/2 < 2^30 <= q)."""
+    q = jnp.asarray(q, jnp.uint32)
+    return jnp.where(w < 0, w + q.astype(jnp.int32), w).astype(jnp.uint32)
+
+
 # --- exact oracles (tests only) --------------------------------------------
 
 

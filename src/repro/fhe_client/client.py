@@ -137,6 +137,23 @@ class FHEClient:
         self._encrypt_core_mega32 = jax.jit(self._encrypt_core_mega32_impl)
         self._decrypt_core_mega32 = jax.jit(self._decrypt_core_mega32_impl)
 
+    # --- evaluation-key generation (server-side eval material) --------------
+
+    def make_evaluation_keys(self, rotations=(), include_relin: bool = True,
+                             seed: int | None = None):
+        """Evaluation material for a ``fhe_server.ServerEvaluator``:
+        relinearization + rotation keys (hybrid key switching, one special
+        prime).  The secret key never leaves this method's frame — only
+        RLWE-encrypted key pairs are returned, and only those cross the
+        wire (``service.wire.serialize_evaluation_keys``).
+
+        ``rotations``: the slot left-rotation amounts the server may apply
+        (e.g. ``fhe_server.inference.matvec_rotations(d)``)."""
+        from repro.fhe_server import keys as server_keys
+        return server_keys.make_evaluation_keys(
+            self.ctx, self.keys.sk, rotations=rotations,
+            include_relin=include_relin, seed=seed)
+
     # --- message packing ----------------------------------------------------
 
     def slot_capacity(self) -> int:

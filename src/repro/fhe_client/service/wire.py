@@ -1,12 +1,16 @@
 """Wire layer: deterministic serialization for ciphertexts and results.
 
-The client<->server boundary (paper Fig. 1) ships three payload kinds:
+The client<->server boundary (paper Fig. 1) ships four payload kinds:
 
   * full ciphertext batches — (B, L, N) uint32 residue stacks (c0, c1);
   * seeded (compressed) ciphertexts — c0 plus the 128-bit-seed-derived
     PRNG stream id that regenerates ``a`` on the receiver, the paper's
     on-chip `a`-regeneration trick that halves upload traffic;
-  * decoded results — (B, n_slots) complex message batches.
+  * decoded results — (B, n_slots) complex message batches;
+  * evaluation keys — the one-time key broadcast for server-side CKKS
+    (relinearization + rotation key-switch keys, ``repro.fhe_server``).
+    Evaluation material only: every plane is an RLWE pair under the
+    secret key, never the key itself.
 
 Encoding is fully deterministic (fixed magic/version header, little-endian
 scalars, C-order little-endian array planes): serializing the same value
@@ -30,11 +34,13 @@ VERSION = 1
 KIND_CT_BATCH = 1
 KIND_CT_SEEDED = 2
 KIND_RESULT = 3
+KIND_EVAL_KEYS = 4
 
 _HDR = struct.Struct("<4sBBxx")          # magic, version, kind, pad
 _CT_BATCH = struct.Struct("<IIId")       # B, L, N, scale
 _CT_SEEDED = struct.Struct("<IIdQ")      # L, N, scale, a_stream
 _RESULT = struct.Struct("<II")           # B, n_slots
+_EVAL_KEYS = struct.Struct("<IIIBxxxI")  # N, L, special_q, has_relin, n_rot
 
 
 def _u32_bytes(x) -> bytes:
@@ -133,6 +139,48 @@ def deserialize_result(buf: bytes) -> np.ndarray:
     re = np.frombuffer(buf, dtype="<f8", count=b * n, offset=off)
     im = np.frombuffer(buf, dtype="<f8", count=b * n, offset=off + plane)
     return (re + 1j * im).reshape(b, n)
+
+
+def serialize_evaluation_keys(keys) -> bytes:
+    """EvaluationKeys -> bytes: counts + sorted rotation ids, then per key
+    (relin first, rotations in id order) the b plane then the a plane, each
+    a (L, L+1, N) uint32 stack in C order."""
+    rot_ids = sorted(keys.rot)
+    parts = [
+        _header(KIND_EVAL_KEYS),
+        _EVAL_KEYS.pack(keys.n, keys.n_limbs, keys.special_q,
+                        1 if keys.relin is not None else 0, len(rot_ids)),
+        np.asarray(rot_ids, dtype="<u4").tobytes(),
+    ]
+    ksks = ([keys.relin] if keys.relin is not None else []) + \
+        [keys.rot[r] for r in rot_ids]
+    for ksk in ksks:
+        parts.append(_u32_bytes(ksk.b_mont))
+        parts.append(_u32_bytes(ksk.a_mont))
+    return b"".join(parts)
+
+
+def deserialize_evaluation_keys(buf: bytes):
+    from repro.fhe_server.keys import EvaluationKeys, KeySwitchKey
+    _parse_header(buf, KIND_EVAL_KEYS)
+    off = _HDR.size
+    n, l, special_q, has_relin, n_rot = _EVAL_KEYS.unpack_from(buf, off)
+    off += _EVAL_KEYS.size
+    rot_ids = np.frombuffer(buf, dtype="<u4", count=n_rot, offset=off)
+    off += 4 * n_rot
+    count = l * (l + 1) * n
+
+    def plane():
+        nonlocal off
+        x = np.frombuffer(buf, dtype="<u4", count=count,
+                          offset=off).reshape(l, l + 1, n)
+        off += 4 * count
+        return jnp.asarray(x)
+
+    relin = KeySwitchKey(plane(), plane()) if has_relin else None
+    rot = {int(r): KeySwitchKey(plane(), plane()) for r in rot_ids}
+    return EvaluationKeys(n=n, n_limbs=l, special_q=special_q,
+                          relin=relin, rot=rot)
 
 
 def payload_kind(buf: bytes) -> int:

@@ -1,0 +1,21 @@
+"""Server-side CKKS evaluator (ROADMAP item 4): the minimal homomorphic op
+set — additions, ct x pt / ct x ct with rescale, rotations via hybrid key
+switching (hoisted where the rotation set allows) — as limb-folded Pallas
+kernels on the client's NTT/modmul surface, plus the evaluation-key
+generation seam and encrypted linear-layer/activation workloads.
+"""
+
+from repro.fhe_server.ct import (ServerCiphertext, ServerPlaintext,
+                                 combined_scale)
+from repro.fhe_server.encoding import encode_plaintext, encode_scalar
+from repro.fhe_server.eval_ops import ServerEvaluator
+from repro.fhe_server.keys import (EvaluationKeys, KeySwitchKey,
+                                   galois_element, galois_perm_ntt,
+                                   make_evaluation_keys)
+
+__all__ = [
+    "ServerCiphertext", "ServerPlaintext", "ServerEvaluator",
+    "EvaluationKeys", "KeySwitchKey", "combined_scale",
+    "encode_plaintext", "encode_scalar",
+    "galois_element", "galois_perm_ntt", "make_evaluation_keys",
+]

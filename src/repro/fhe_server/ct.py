@@ -1,0 +1,95 @@
+"""Level/scale-tracking server-side ciphertext and plaintext containers.
+
+The client containers (``core.encryptor.CiphertextBatch``) carry a limb
+count and one scale; server-side evaluation additionally needs *exact*
+level/scale accounting — every rescale divides the scale by the dropped
+prime and every multiply multiplies scales — so ``ServerCiphertext`` pins
+both and the eval ops assert the bookkeeping (``eval_ops``).
+
+Scale is stored as a float but all updates are computed through exact
+``Fraction`` arithmetic and converted once (``combined_scale``): a float64
+scale is an exact rational, so e.g. encode-at-q(drop) followed by ct x pt +
+rescale returns the scale to EXACTLY Delta (asserted in the homomorphism
+tier), and the unavoidable 1-ulp representation error on irrational-ish
+scales (Delta^2/q) stays ~2^-52 relative — invisible under the op budgets.
+
+``drop_to`` is the free RNS mod-switch: truncating to the first l' limbs is
+exact (Q_{l'} divides Q_l, the decrypt relation holds mod every
+sub-modulus; scale unchanged).  Deep-L presets use it to run a workload at
+the depth it needs — the bootstrappable preset's 24 limbs are budget, not
+mandatory work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from fractions import Fraction
+
+import jax.numpy as jnp
+
+from repro.core.encryptor import CiphertextBatch
+
+
+def combined_scale(*factors, divisor: int = 1) -> float:
+    """Exact-rational scale bookkeeping: prod(factors) / divisor, computed
+    in Fractions (float inputs are exact rationals) and rounded to float
+    once at the end."""
+    acc = Fraction(1)
+    for f in factors:
+        acc *= Fraction(f)
+    return float(acc / divisor)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerCiphertext:
+    """(B, level, N) NTT-domain RLWE pair with pinned level/scale."""
+
+    c0: jnp.ndarray
+    c1: jnp.ndarray
+    level: int                 # live limb count (rescale drops the last)
+    scale: float
+
+    def __post_init__(self):
+        assert self.c0.ndim == 3 and self.c0.shape == self.c1.shape
+        assert self.c0.shape[1] == self.level, \
+            f"limb axis {self.c0.shape[1]} != level {self.level}"
+
+    @property
+    def batch(self) -> int:
+        return int(self.c0.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.c0.shape[2])
+
+    @classmethod
+    def from_batch(cls, cb: CiphertextBatch) -> "ServerCiphertext":
+        return cls(c0=cb.c0, c1=cb.c1, level=cb.n_limbs, scale=cb.scale)
+
+    def to_batch(self) -> CiphertextBatch:
+        return CiphertextBatch(c0=self.c0, c1=self.c1,
+                               n_limbs=self.level, scale=self.scale)
+
+    def drop_to(self, level: int) -> "ServerCiphertext":
+        """Exact mod-switch by limb truncation (scale unchanged)."""
+        assert 2 <= level <= self.level, (level, self.level)
+        if level == self.level:
+            return self
+        return ServerCiphertext(c0=self.c0[:, :level], c1=self.c1[:, :level],
+                                level=level, scale=self.scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerPlaintext:
+    """Server-side encoded plaintext at an arbitrary scale/level.
+
+    ``data`` (level, N) or (B, level, N) plain NTT residues (ct + pt);
+    ``data_mont`` the Montgomery form (ct x pt: one REDC per product)."""
+
+    data: jnp.ndarray
+    data_mont: jnp.ndarray
+    level: int
+    scale: float
+
+    def __post_init__(self):
+        assert self.data.shape[-2] == self.level

@@ -1,0 +1,52 @@
+"""Host-side plaintext encoding for the server evaluator.
+
+The client encoder fixes scale = Delta; server-side plaintexts (weight
+diagonals, polynomial coefficients, biases) need *arbitrary* scales:
+
+  * a multiplicand encoded at scale q_{l-1} (the prime the following
+    rescale drops) returns the ciphertext scale to exactly Delta;
+  * an addend must be encoded at exactly the ciphertext's current scale.
+
+Encoding is exact host arithmetic: float64 coefficient values times scale,
+rounded once (values < 2^52 by construction: |z| ~ O(1) slots, scale <
+2^31 * a small constant), reduced per limb in int64, then the stacked NTT.
+This runs once per (weights, level) at setup time — not a hot path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import encoder
+from repro.core import ntt as nttmod
+from repro.core.context import CKKSContext
+from repro.fhe_server.ct import ServerPlaintext
+
+
+def encode_plaintext(z, ctx: CKKSContext, level: int,
+                     scale: float) -> ServerPlaintext:
+    """(..., n_slots) complex slot values -> ServerPlaintext at `scale`
+    with `level` limbs."""
+    coeffs = np.asarray(encoder.slots_to_coeffs(z, ctx), dtype=np.float64)
+    scaled = np.rint(coeffs * scale)
+    assert np.all(np.abs(scaled) < 2 ** 62), "encoded value overflows int64"
+    iv = scaled.astype(np.int64)
+    sp = ctx.stacked_plans(level)
+    res = np.stack([(iv % np.int64(q)).astype(np.uint32)
+                    for q in ctx.q_list[:level]])        # (level, ..., N)
+    data = nttmod.ntt_stacked(jnp.asarray(res), sp)
+    r2 = jnp.asarray(sp.bcast(sp.r2, data.ndim))
+    from repro.core import modmul
+    data_mont = modmul.mulmod_montgomery_stacked(
+        data, r2, jnp.asarray(sp.bcast(sp.q, data.ndim)),
+        jnp.asarray(sp.bcast(sp.qinv_neg, data.ndim)))
+    return ServerPlaintext(data=data, data_mont=data_mont,
+                           level=level, scale=float(scale))
+
+
+def encode_scalar(c: float, ctx: CKKSContext, level: int,
+                  scale: float) -> ServerPlaintext:
+    """Constant plaintext: every slot holds the real value c."""
+    z = np.full((ctx.params.n_slots,), complex(c), dtype=np.complex128)
+    return encode_plaintext(z, ctx, level, scale)

@@ -1,0 +1,195 @@
+"""ServerEvaluator — the public server-side CKKS op set.
+
+Each op is one ``pallas_call`` (``kernels/server_eval.py``), jitted once
+per (op, level, batch) shape via the evaluator's jit cache — warm calls
+re-lower nothing (launch-count pinned in tests).  The evaluator owns:
+
+  * the level/scale bookkeeping: adds require matching scales (asserted
+    exactly, up to the 1-ulp float representation of rational scales),
+    multiplies combine scales in exact rational arithmetic
+    (``ct.combined_scale``), rescales divide by the dropped prime;
+  * the per-level key slices: evaluation keys are generated once at full L
+    (level-independent gadget, see ``keys``); at level l the kernel sees
+    rows [0:l] + the special row;
+  * the per-rotation NTT permutations (static numpy, shipped to the kernel
+    as an input row so one lowering serves every rotation amount).
+
+Op inventory mapped to the server-side accelerators (BTS/FAB, DESIGN.md
+§6): add_ct/add_pt (pointwise), mul_pt (+ optional fused rescale), mul_ct
+(tensor + relinearization + rescale), rescale, rotate (Galois + key
+switch), hoisted_rotations (decompose once, apply per rotation — the
+hoisting baked into BTS's matvec datapath).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.context import CKKSContext
+from repro.fhe_server import keys as keysmod
+from repro.fhe_server.ct import ServerCiphertext, ServerPlaintext, \
+    combined_scale
+from repro.kernels import server_eval
+
+
+def _scales_match(a: float, b: float) -> bool:
+    return abs(a - b) <= 1e-9 * max(abs(a), abs(b))
+
+
+class ServerEvaluator:
+    """Stateless-per-call evaluator bound to (context, evaluation keys,
+    datapath).  ``datapath='df32'`` is the device default (pure uint32);
+    ``'f64'`` the u64 oracle — bit-identical results."""
+
+    def __init__(self, ctx: CKKSContext,
+                 eval_keys: "keysmod.EvaluationKeys | None" = None,
+                 datapath: str = "df32", interpret: bool | None = None):
+        from repro.kernels import ops as kops
+        self.ctx = ctx
+        self.keys = eval_keys
+        self.datapath = datapath
+        self.interpret = (kops.default_interpret()
+                          if interpret is None else interpret)
+        self._jit: dict = {}
+        self._key_slices: dict = {}
+        self._perms: dict = {}
+
+    # -- caches -------------------------------------------------------------
+
+    def _jitted(self, name: str, fn):
+        if name not in self._jit:
+            self._jit[name] = jax.jit(fn)
+        return self._jit[name]
+
+    def _sliced_key(self, ksk: "keysmod.KeySwitchKey", level: int):
+        """(L, L+1, N) full-L key -> (l, l+1, N) level-l rows [0:l] + P."""
+        ck = (id(ksk), level)
+        if ck not in self._key_slices:
+            idx = np.array(list(range(level)) + [self.ctx.params.n_limbs])
+            self._key_slices[ck] = (ksk.b_mont[:level][:, idx],
+                                    ksk.a_mont[:level][:, idx])
+        return self._key_slices[ck]
+
+    def _perm(self, rn: int):
+        if rn not in self._perms:
+            g = keysmod.galois_element(rn, self.ctx.n)
+            self._perms[rn] = jnp.asarray(
+                keysmod.galois_perm_ntt(g, self.ctx.n).reshape(1, -1))
+        return self._perms[rn]
+
+    def _rot_key(self, rn: int, level: int):
+        if self.keys is None or rn not in self.keys.rot:
+            raise KeyError(f"no rotation key for r={rn} "
+                           f"(have {self.keys.rotations if self.keys else ()})")
+        return self._sliced_key(self.keys.rot[rn], level)
+
+    def _q_drop(self, level: int) -> int:
+        return self.ctx.q_list[level - 1]
+
+    # -- additions ----------------------------------------------------------
+
+    def add_ct(self, x: ServerCiphertext, y: ServerCiphertext):
+        lvl = min(x.level, y.level)
+        x, y = x.drop_to(lvl), y.drop_to(lvl)
+        assert _scales_match(x.scale, y.scale), (x.scale, y.scale)
+        fn = self._jitted("add_ct", lambda a0, a1, b0, b1: server_eval.add_ct(
+            a0, a1, b0, b1, self.ctx, interpret=self.interpret))
+        c0, c1 = fn(x.c0, x.c1, y.c0, y.c1)
+        return ServerCiphertext(c0, c1, lvl, x.scale)
+
+    def add_pt(self, x: ServerCiphertext, pt: ServerPlaintext):
+        assert pt.level == x.level and pt.data.ndim == 2
+        assert _scales_match(x.scale, pt.scale), (x.scale, pt.scale)
+        fn = self._jitted("add_pt", lambda a0, a1, p: server_eval.add_pt(
+            a0, a1, p, self.ctx, interpret=self.interpret))
+        c0, c1 = fn(x.c0, x.c1, pt.data)
+        return ServerCiphertext(c0, c1, x.level, x.scale)
+
+    # -- multiplies / rescale -----------------------------------------------
+
+    def mul_pt(self, x: ServerCiphertext, pt: ServerPlaintext,
+               rescale: bool = True):
+        assert pt.level == x.level and pt.data.ndim == 2
+        if rescale:
+            fn = self._jitted(
+                "mul_pt_rescale",
+                lambda a0, a1, p: server_eval.mul_pt_rescale(
+                    a0, a1, p, self.ctx, datapath=self.datapath,
+                    interpret=self.interpret))
+            c0, c1 = fn(x.c0, x.c1, pt.data_mont)
+            scale = combined_scale(x.scale, pt.scale,
+                                   divisor=self._q_drop(x.level))
+            return ServerCiphertext(c0, c1, x.level - 1, scale)
+        fn = self._jitted("mul_pt", lambda a0, a1, p: server_eval.mul_pt(
+            a0, a1, p, self.ctx, datapath=self.datapath,
+            interpret=self.interpret))
+        c0, c1 = fn(x.c0, x.c1, pt.data_mont)
+        return ServerCiphertext(c0, c1, x.level,
+                                combined_scale(x.scale, pt.scale))
+
+    def rescale(self, x: ServerCiphertext):
+        assert x.level >= 3, "rescale below the 2-limb decrypt floor"
+        fn = self._jitted("rescale", lambda a0, a1: server_eval.rescale(
+            a0, a1, self.ctx, datapath=self.datapath,
+            interpret=self.interpret))
+        c0, c1 = fn(x.c0, x.c1)
+        return ServerCiphertext(
+            c0, c1, x.level - 1,
+            combined_scale(x.scale, divisor=self._q_drop(x.level)))
+
+    def mul_ct(self, x: ServerCiphertext, y: ServerCiphertext):
+        assert self.keys is not None and self.keys.relin is not None, \
+            "ct x ct needs a relinearization key"
+        lvl = min(x.level, y.level)
+        x, y = x.drop_to(lvl), y.drop_to(lvl)
+        kb, ka = self._sliced_key(self.keys.relin, lvl)
+        fn = self._jitted(
+            "mul_ct",
+            lambda a0, a1, b0, b1, rb, ra: server_eval.mul_ct_relin(
+                a0, a1, b0, b1, rb, ra, self.ctx, datapath=self.datapath,
+                interpret=self.interpret))
+        c0, c1 = fn(x.c0, x.c1, y.c0, y.c1, kb, ka)
+        scale = combined_scale(x.scale, y.scale, divisor=self._q_drop(lvl))
+        return ServerCiphertext(c0, c1, lvl - 1, scale)
+
+    # -- rotations ----------------------------------------------------------
+
+    def rotate(self, x: ServerCiphertext, r: int):
+        """Slot left-rotation by r (scale/level unchanged)."""
+        rn = int(r) % self.ctx.params.n_slots
+        if rn == 0:
+            return x
+        kb, ka = self._rot_key(rn, x.level)
+        fn = self._jitted(
+            "rotate", lambda a0, a1, pm, rb, ra: server_eval.rotate(
+                a0, a1, pm, rb, ra, self.ctx, datapath=self.datapath,
+                interpret=self.interpret))
+        c0, c1 = fn(x.c0, x.c1, self._perm(rn), kb, ka)
+        return ServerCiphertext(c0, c1, x.level, x.scale)
+
+    def hoisted_rotations(self, x: ServerCiphertext, rotations):
+        """{r: rotate(x, r)} with the key-switch decomposition computed
+        ONCE and shared across the rotation set (two kernel bodies total,
+        the second re-dispatched per rotation with zero re-lowering)."""
+        rns_ = [int(r) % self.ctx.params.n_slots for r in rotations]
+        out = {}
+        need = [rn for rn in dict.fromkeys(rns_) if rn != 0]
+        if need:
+            dfn = self._jitted(
+                "ks_decompose", lambda c1: server_eval.ks_decompose(
+                    c1, self.ctx, interpret=self.interpret))
+            h = dfn(x.c1)
+            afn = self._jitted(
+                "ks_apply_rot",
+                lambda a0, hh, pm, rb, ra: server_eval.ks_apply_rot(
+                    a0, hh, pm, rb, ra, self.ctx, datapath=self.datapath,
+                    interpret=self.interpret))
+            for rn in need:
+                kb, ka = self._rot_key(rn, x.level)
+                c0, c1 = afn(x.c0, h, self._perm(rn), kb, ka)
+                out[rn] = ServerCiphertext(c0, c1, x.level, x.scale)
+        for r, rn in zip(rotations, rns_):
+            out[r] = x if rn == 0 else out[rn]
+        return out

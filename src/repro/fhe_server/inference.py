@@ -1,0 +1,94 @@
+"""Encrypted linear algebra on top of the op set: the workload layer.
+
+``encrypted_matvec`` is the diagonal (Halevi-Shoup) method BTS's matvec
+datapath hoists: y = sum_u diag_u(W) * rot_u(x).  The input vector is
+replicated across slot blocks (d must divide n_slots), so the global slot
+rotation coincides with the per-block rotation and d-dimensional matvecs
+ride in one ciphertext.  All d-1 rotations share one hoisted key-switch
+decomposition; the d products accumulate BEFORE the single rescale (less
+noise, fewer kernels), and the diagonals are encoded at scale q_drop so
+the output scale returns to exactly the input scale.
+
+``encrypted_poly3`` evaluates c0 + c1 x + c2 x^2 + c3 x^3 by Horner —
+((c3 x + c2) x + c1) x + c0 — one ct x pt and two ct x ct multiplies, each
+followed by its fused rescale; constants are encoded at exactly the running
+ciphertext scale.  Together with the matvec this consumes 4 levels: the
+degree-3 activation after a linear layer, the encrypted-inference block of
+``examples/secure_inference.py --encrypted``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.fhe_server import encoding
+from repro.fhe_server.ct import ServerCiphertext
+from repro.fhe_server.eval_ops import ServerEvaluator
+
+
+def replicate_slots(x: np.ndarray, n_slots: int) -> np.ndarray:
+    """(d,) real vector -> (n_slots,) block-replicated complex slots."""
+    d = x.shape[-1]
+    assert n_slots % d == 0, (d, n_slots)
+    return np.tile(np.asarray(x, np.float64),
+                   n_slots // d).astype(np.complex128)
+
+
+def matvec_rotations(d: int) -> list:
+    return list(range(1, d))
+
+
+def encrypted_matvec(ev: ServerEvaluator, ct: ServerCiphertext,
+                     w: np.ndarray, bias: np.ndarray | None = None
+                     ) -> ServerCiphertext:
+    """W @ x (+ bias) on a block-replicated ciphertext.  Consumes 1 level;
+    output scale == input scale exactly."""
+    d = w.shape[0]
+    assert w.shape == (d, d)
+    ns = ev.ctx.params.n_slots
+    assert ns % d == 0, f"d={d} must divide n_slots={ns}"
+    q_drop = float(ev.ctx.q_list[ct.level - 1])
+    idx = np.arange(ns)
+
+    rotated = ev.hoisted_rotations(ct, matvec_rotations(d))
+    acc = None
+    for u in range(d):
+        diag = w[idx % d, (idx + u) % d].astype(np.complex128)
+        pt = encoding.encode_plaintext(diag, ev.ctx, ct.level, q_drop)
+        term = ev.mul_pt(ct if u == 0 else rotated[u], pt, rescale=False)
+        acc = term if acc is None else ev.add_ct(acc, term)
+    acc = ev.rescale(acc)
+    if bias is not None:
+        bt = np.asarray(bias, np.float64)[idx % d].astype(np.complex128)
+        acc = ev.add_pt(
+            acc, encoding.encode_plaintext(bt, ev.ctx, acc.level, acc.scale))
+    return acc
+
+
+def encrypted_poly3(ev: ServerEvaluator, ct: ServerCiphertext,
+                    coeffs) -> ServerCiphertext:
+    """c0 + c1 x + c2 x^2 + c3 x^3 by Horner; consumes 3 levels."""
+    c0, c1, c2, c3 = (float(c) for c in coeffs)
+    q_drop = float(ev.ctx.q_list[ct.level - 1])
+    t = ev.mul_pt(ct, encoding.encode_scalar(c3, ev.ctx, ct.level, q_drop))
+    t = ev.add_pt(t, encoding.encode_scalar(c2, ev.ctx, t.level, t.scale))
+    t = ev.mul_ct(t, ct.drop_to(t.level))
+    t = ev.add_pt(t, encoding.encode_scalar(c1, ev.ctx, t.level, t.scale))
+    t = ev.mul_ct(t, ct.drop_to(t.level))
+    t = ev.add_pt(t, encoding.encode_scalar(c0, ev.ctx, t.level, t.scale))
+    return t
+
+
+def encrypted_linear_poly3(ev: ServerEvaluator, ct: ServerCiphertext,
+                           w: np.ndarray, bias: np.ndarray,
+                           poly) -> ServerCiphertext:
+    """poly3(W @ x + b) — the encrypted inference block (4 levels)."""
+    return encrypted_poly3(ev, encrypted_matvec(ev, ct, w, bias), poly)
+
+
+def reference_linear_poly3(x: np.ndarray, w: np.ndarray, bias: np.ndarray,
+                           poly) -> np.ndarray:
+    """Plaintext model the encrypted path must match."""
+    c0, c1, c2, c3 = (float(c) for c in poly)
+    y = w @ np.asarray(x, np.float64) + np.asarray(bias, np.float64)
+    return c0 + c1 * y + c2 * y ** 2 + c3 * y ** 3

@@ -1,0 +1,218 @@
+"""Evaluation-key material for the server-side CKKS evaluator.
+
+Hybrid (special-modulus / GHS) key switching, the structure BTS and FAB
+build their key-switch units around: one extra NTT-friendly prime P beyond
+the L ciphertext primes, and one key-switch key per source limb.  The key
+for source limb j encrypts the gadget
+
+    g_j = P * q~_j * s_from   mod (Q * P),     q~_j = (Q/q_j) * (Q/q_j)^-1
+
+whose residue is delta_ij * (P mod q_i) on ciphertext row i and 0 on the
+special row — for EVERY level l, because q~_j === delta_ij (mod q_i).  Keys
+are therefore generated once at full L and sliced per level; switching a
+polynomial d decomposes it per limb (centered digit D_j = [d]_{q_j}, base
+extension by one conditional add — ``rns.ks_center_t`` / ``ks_residue_t``),
+accumulates sum_j D_j * ksk_j === P * d * s_from (mod Q_l * P), and divides
+by P with rounding (the same machinery as rescale), which shrinks the key
+noise by a factor of P ~ 2^30.
+
+Security seam: this module consumes the secret key but only EVALUATION
+material leaves it — KSK pairs are RLWE encryptions under s, exactly like
+the public key.  ``FHEClient.make_evaluation_keys`` is the client-side entry
+point; the wire layer (``service.wire.serialize_evaluation_keys``) is what
+crosses to the server.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import modmul
+from repro.core import ntt as nttmod
+from repro.core import prng
+from repro.core.context import CKKSContext
+from repro.core.encryptor import SecretKey
+from repro.core.ntt import bitrev_indices
+
+# Key-material PRNG streams. The encryption streams grow as 0x10000 + 16 *
+# nonce, so key streams live in a high disjoint window: per-key offsets are
+# key_id * 0x1000 + j * 64 + row  (j < L <= 24, row <= L, so < 0x1000).
+STREAM_KSK_A = 0x60000000
+STREAM_KSK_E = 0x70000000
+
+
+# ---------------------------------------------------------------------------
+# Galois automorphisms in the repo's NTT evaluation order
+# ---------------------------------------------------------------------------
+
+
+def galois_element(r: int, n: int) -> int:
+    """Slot LEFT-rotation by r (z'_j = z_{j+r}) <-> X -> X^g, g = 5^r mod 2N.
+
+    Slot j holds m(zeta^{5^j}) (``fft.rot_group``), so composing with
+    sigma_g: X -> X^{5^r} shifts the orbit index by r."""
+    return pow(5, r % (n // 2), 2 * n)
+
+
+def galois_perm_ntt(g: int, n: int) -> np.ndarray:
+    """Index permutation applying sigma_g to an NTT-domain row.
+
+    The forward transform is the merged-psi CT DIT: out[i] = a(psi^e_i) with
+    e_i = 2*brv(i)+1.  sigma_g(a)(psi^e) = a(psi^{g*e mod 2N}), and g*e is
+    again odd, so sigma_g permutes the evaluation points:
+    sigma_g(A)[i] = A[perm[i]] with brv(perm[i]) = (g*e_i mod 2N - 1)/2.
+    Same permutation for every prime row (it only touches exponents), so one
+    gather applies the automorphism to the whole limb stack — exact, no
+    signs, no arithmetic."""
+    brv = bitrev_indices(n)
+    m = 2 * n
+    tgt = (g * (2 * brv + 1)) % m
+    return brv[(tgt - 1) // 2].astype(np.int32)
+
+
+def galois_apply_coeffs(coeffs: np.ndarray, g: int, n: int) -> np.ndarray:
+    """Coefficient-domain oracle: a(X) -> a(X^g) mod X^N + 1 (signed),
+    for pinning the NTT-order permutation against an exact reference."""
+    k = np.arange(n)
+    e = (g * k) % (2 * n)
+    sign = np.where(e < n, 1, -1).astype(coeffs.dtype)
+    out = np.zeros_like(coeffs)
+    out[..., e % n] = sign * coeffs
+    return out
+
+
+# ---------------------------------------------------------------------------
+# key containers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KeySwitchKey:
+    """One switch s_from -> s: per source limb j an RLWE pair over the
+    extended modulus Q * P.  Shapes (L, L+1, N) uint32, Montgomery form;
+    row axis = L ciphertext primes then the special prime (always last, so
+    level-l slices keep rows [0:l] + [L])."""
+
+    b_mont: jnp.ndarray
+    a_mont: jnp.ndarray
+
+    @property
+    def n_limbs(self) -> int:
+        return int(self.b_mont.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class EvaluationKeys:
+    """Public evaluation material the client ships to the server."""
+
+    n: int
+    n_limbs: int
+    special_q: int                       # the key-switch prime P
+    relin: KeySwitchKey | None           # s^2 -> s   (ct x ct)
+    rot: dict                            # {r: KeySwitchKey} sigma_g(s) -> s
+
+    @property
+    def rotations(self) -> tuple:
+        return tuple(sorted(self.rot))
+
+
+# ---------------------------------------------------------------------------
+# extended-stack helpers (ciphertext primes + special prime)
+# ---------------------------------------------------------------------------
+
+
+def ext_plans(ctx: CKKSContext):
+    return tuple(ctx.plans) + (ctx.special_plan(),)
+
+
+def _ext_sp(ctx: CKKSContext) -> nttmod.StackedPlans:
+    return nttmod.stack_plans(ext_plans(ctx))
+
+
+def _sp_mul(a, b_mont, sp):
+    return modmul.mulmod_montgomery_stacked(
+        a, b_mont, jnp.asarray(sp.bcast(sp.q, a.ndim)),
+        jnp.asarray(sp.bcast(sp.qinv_neg, a.ndim)))
+
+
+def _sp_to_mont(x, sp):
+    return _sp_mul(x, jnp.asarray(sp.bcast(sp.r2, x.ndim)), sp)
+
+
+def _sp_small_to_ntt(coeffs_i32, sp):
+    """Signed small polynomial (N,) -> (rows, N) NTT-domain residues."""
+    q = sp.q.astype(np.int64).reshape((sp.n_limbs,) + (1,) * coeffs_i32.ndim)
+    return nttmod.ntt_stacked(prng.signed_to_residue(coeffs_i32[None], q), sp)
+
+
+# ---------------------------------------------------------------------------
+# key generation
+# ---------------------------------------------------------------------------
+
+
+def make_keyswitch_key(ctx: CKKSContext, s_from, s_ext_mont,
+                       seed: int, key_id: int) -> KeySwitchKey:
+    """ksk_j = (b_j, a_j) with b_j = e_j - a_j*s + delta_row-j * (P mod q_j)
+    * s_from, all rows NTT-domain over the extended stack.
+
+    s_from: (L+1, N) plain NTT residues of the source secret;
+    s_ext_mont: (L+1, N) Montgomery form of the target secret s."""
+    L, n = ctx.params.n_limbs, ctx.n
+    sp = _ext_sp(ctx)
+    rows = L + 1
+    p_special = ctx.special_plan().prime.q
+    q_ext = tuple(ctx.q_list) + (p_special,)
+
+    b_stack, a_stack = [], []
+    for j in range(L):
+        base = key_id * 0x1000 + j * 64
+        a = jnp.stack([
+            prng.uniform_mod_q(seed, STREAM_KSK_A + base + i, n, q_ext[i])
+            for i in range(rows)
+        ])
+        e_ntt = _sp_small_to_ntt(
+            prng.cbd(seed, STREAM_KSK_E + base, n), sp)
+        b = modmul.submod(e_ntt, _sp_mul(a, s_ext_mont, sp),
+                          jnp.asarray(sp.bcast(sp.q, 2)))
+        # gadget lands on row j only: (P mod q_j) * s_from[j]
+        qj = q_ext[j]
+        pm_mont = np.uint32((p_special % qj) * ((1 << 32) % qj) % qj)
+        grow = modmul.mulmod_montgomery_stacked(
+            s_from[j], jnp.asarray(pm_mont),
+            jnp.asarray(np.uint64(qj)), jnp.asarray(sp.qinv_neg[j]))
+        b = b.at[j].set(modmul.addmod(b[j], grow, qj))
+        b_stack.append(_sp_to_mont(b, sp))
+        a_stack.append(_sp_to_mont(a, sp))
+    return KeySwitchKey(b_mont=jnp.stack(b_stack), a_mont=jnp.stack(a_stack))
+
+
+def make_evaluation_keys(ctx: CKKSContext, sk: SecretKey, rotations=(),
+                         include_relin: bool = True,
+                         seed: int | None = None) -> EvaluationKeys:
+    """Relinearization (s^2 -> s) + one rotation key per requested slot
+    rotation (sigma_g(s) -> s).  Deterministic in (seed, key id)."""
+    seed = seed if seed is not None else ctx.params.seed
+    n = ctx.n
+    sp = _ext_sp(ctx)
+    s_plain = _sp_small_to_ntt(sk.s_coeffs, sp)          # (L+1, N)
+    s_mont = _sp_to_mont(s_plain, sp)
+
+    relin = None
+    if include_relin:
+        s2 = _sp_mul(s_plain, s_mont, sp)                # s^2, plain domain
+        relin = make_keyswitch_key(ctx, s2, s_mont, seed, key_id=0)
+
+    rot = {}
+    for r in rotations:
+        rn = int(r) % (n // 2)
+        if rn == 0 or rn in rot:
+            continue
+        perm = galois_perm_ntt(galois_element(rn, n), n)
+        rot[rn] = make_keyswitch_key(ctx, s_plain[:, perm], s_mont, seed,
+                                     key_id=1 + rn)
+    return EvaluationKeys(n=n, n_limbs=ctx.params.n_limbs,
+                          special_q=int(ctx.special_plan().prime.q),
+                          relin=relin, rot=rot)

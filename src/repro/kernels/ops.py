@@ -36,7 +36,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import fft as fftmod
 from repro.core.context import CKKSContext
 from repro.kernels import client_pointwise, client_stream, common, fft_df, \
-    ntt_butterfly, ntt_matmul
+    ntt_butterfly, ntt_matmul, server_eval
 
 
 def default_interpret() -> bool:
@@ -344,3 +344,68 @@ def special_ifft(z, m: int, block_rows: int = 1,
     out = fft_df.special_ifft_rows(z2, m, block_rows=block_rows,
                                    interpret=interpret)
     return out[0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# server-side eval ops (fhe_server; kernels in kernels/server_eval.py)
+# ---------------------------------------------------------------------------
+#
+# Same wiring contract as the client cores: each wrapper resolves the
+# interpret default and forwards to exactly one pallas_call.  Pointwise ops
+# run the (L, B) limb-folded grid; cross-limb ops (rescale / relinearize /
+# key switch) run the megakernel (B,) grid with the limb loop unrolled in
+# the body.  `datapath` selects the pointwise REDC engine ('df32' pure
+# uint32 / 'f64' traced u64), bit-identical results.
+
+
+def server_add_ct(c0a, c1a, c0b, c1b, ctx: CKKSContext,
+                  interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return server_eval.add_ct(c0a, c1a, c0b, c1b, ctx, interpret=interpret)
+
+
+def server_add_pt(c0, c1, pt, ctx: CKKSContext,
+                  interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return server_eval.add_pt(c0, c1, pt, ctx, interpret=interpret)
+
+
+def server_mul_pt(c0, c1, pt_mont, ctx: CKKSContext, datapath: str = "f64",
+                  rescale: bool = False, interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    fn = server_eval.mul_pt_rescale if rescale else server_eval.mul_pt
+    return fn(c0, c1, pt_mont, ctx, datapath=datapath, interpret=interpret)
+
+
+def server_rescale(c0, c1, ctx: CKKSContext, datapath: str = "f64",
+                   interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return server_eval.rescale(c0, c1, ctx, datapath=datapath,
+                               interpret=interpret)
+
+
+def server_mul_ct(a0, a1, b0, b1, ksk_b, ksk_a, ctx: CKKSContext,
+                  datapath: str = "f64", interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return server_eval.mul_ct_relin(a0, a1, b0, b1, ksk_b, ksk_a, ctx,
+                                    datapath=datapath, interpret=interpret)
+
+
+def server_rotate(c0, c1, perm, ksk_b, ksk_a, ctx: CKKSContext,
+                  datapath: str = "f64", interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return server_eval.rotate(c0, c1, perm, ksk_b, ksk_a, ctx,
+                              datapath=datapath, interpret=interpret)
+
+
+def server_ks_decompose(c1, ctx: CKKSContext, interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return server_eval.ks_decompose(c1, ctx, interpret=interpret)
+
+
+def server_ks_apply_rot(c0, h, perm, ksk_b, ksk_a, ctx: CKKSContext,
+                        datapath: str = "f64",
+                        interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return server_eval.ks_apply_rot(c0, h, perm, ksk_b, ksk_a, ctx,
+                                    datapath=datapath, interpret=interpret)

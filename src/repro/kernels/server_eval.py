@@ -1,0 +1,525 @@
+"""Server-side CKKS eval kernels: the BTS/FAB op inventory on the client's
+NTT/modmul surface.
+
+Two launch geometries, matching how much cross-limb state an op needs:
+
+  * **Pointwise ops** (ct+ct, ct+pt, ct x pt without rescale) touch each
+    limb independently -> the client's limb-folded ``(L, B)`` grid, one
+    table row per grid step (``client_pointwise`` convention).  One
+    ``pallas_call``, one kernel body.
+  * **Cross-limb ops** (rescale, ct x pt fused with rescale, ct x ct with
+    relinearization + rescale, rotation via key switching) need every limb
+    of a ciphertext row at once -> the megakernel ``(B,)`` grid with the
+    whole ``(l+1, K)`` SMEM constant table and the limb loop statically
+    unrolled in the body (``client_stream`` convention).  Still one
+    ``pallas_call`` per op.
+
+Key switching is hybrid (special modulus P, see ``fhe_server.keys``): per
+source limb j, INTT -> centered digit (``rns.ks_center_t``) -> base-extend
+(one conditional add, ``rns.ks_residue_t``) -> NTT per target row ->
+multiply-accumulate against the KSK rows -> mod-down by P (the rescale
+machinery applied to the special row).  The base-extension NTTs vectorise
+across the digit rows (one stacked (l, N) transform per target prime) and
+the b/a polys ride stacked (2, N) through the mod-down, so a full switch
+is ~3l + 2 transform instances — the unrolled jaxpr stays linear in l.
+
+The **hoisted** rotation pair splits that at the decompose/apply boundary:
+``_ks_decompose_kernel`` emits the digit-NTT stack once (the 2l+1 transform
+part, rotation-independent because the centered decomposition commutes with
+Galois automorphisms exactly — center(q - v) = -center(v), automorphisms
+permute NTT evaluation points), and ``_ks_apply_rot_kernel`` permutes the
+*digits* and runs only the multiply-accumulate + mod-down per rotation.
+Both consume the SAME stage helpers as the fused ``_rotate_kernel``, so
+hoisted rotations are bit-identical to plain ones (pinned in tests).
+
+Datapath knob: the NTT/INTT stage loops are the shared pure-uint32
+traced-constant bodies (``common.ntt_stages_t``); the pointwise REDC engine
+dispatches on ``datapath`` — ``'f64'`` runs the traced u64 reference REDC
+(``modmul.mulmod_montgomery_u64_t``), ``'df32'`` the pure-uint32 16-bit
+limb REDC (``mulmod_montgomery_limb_t``).  Bit-identical by construction;
+the df32 bodies hold zero 64-bit ops (jaxpr-scanned in tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import modmul, rns
+from repro.core.context import CKKSContext
+from repro.kernels import common
+
+
+# ---------------------------------------------------------------------------
+# constants: the client (l+1, K) table + server extras
+# ---------------------------------------------------------------------------
+
+SERVER_EXTRA_SCALARS = 3     # per-row: R^2, (P^-1)*R, (q_drop^-1)*R
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConsts:
+    """Stacked constants for one (context, level): the client NTT seed table
+    over level+1 rows (ciphertext primes + special prime LAST) extended with
+    the server columns.  ``kc`` offsets stay valid — extras are appended."""
+
+    kc: common.StackedKernelConsts
+    table: np.ndarray            # (level+1, kc.n_scalars + 3) uint32
+    level: int
+    n: int
+    off_r2: int                  # enter the Montgomery domain
+    off_pinv: int                # mod-down by the special prime
+    off_qdinv: int               # rescale by the dropped prime (rows < l-1)
+
+
+_SERVER_CONSTS_MEMO: dict = {}
+
+
+def server_consts(ctx: CKKSContext, level: int) -> ServerConsts:
+    plans = ctx.plans[:level] + (ctx.special_plan(),)
+    key = tuple(id(p) for p in plans)
+    cached = _SERVER_CONSTS_MEMO.get(key)
+    if cached is not None:
+        return cached
+    kc = common.stacked_kernel_consts(plans)
+    qs = [int(p.prime.q) for p in plans]
+    p_special, q_drop = qs[-1], qs[level - 1]
+    r = 1 << 32
+    extra = np.zeros((level + 1, SERVER_EXTRA_SCALARS), np.uint32)
+    for i, q in enumerate(qs):
+        extra[i, 0] = (r * r) % q
+        if q != p_special:
+            extra[i, 1] = (pow(p_special % q, -1, q) * r) % q
+        if i < level - 1:
+            extra[i, 2] = (pow(q_drop % q, -1, q) * r) % q
+    sc = ServerConsts(
+        kc=kc, table=np.concatenate([kc.table, extra], axis=1),
+        level=level, n=kc.n,
+        off_r2=kc.n_scalars, off_pinv=kc.n_scalars + 1,
+        off_qdinv=kc.n_scalars + 2,
+    )
+    _SERVER_CONSTS_MEMO[key] = sc
+    return sc
+
+
+# ---------------------------------------------------------------------------
+# shared in-kernel stage helpers
+# ---------------------------------------------------------------------------
+
+
+def _mm(a, b_mont, q, qinv_neg, datapath: str):
+    """Pointwise REDC engine dispatch (both engines bit-identical)."""
+    if datapath == "df32":
+        return modmul.mulmod_montgomery_limb_t(a, b_mont, q, qinv_neg)
+    return modmul.mulmod_montgomery_u64_t(a, b_mont, q, qinv_neg)
+
+
+def _rc(c_ref, i: int):
+    return c_ref[i, common.OFF_Q], c_ref[i, common.OFF_QINV]
+
+
+def _to_digit(x_row, c_ref, sc: ServerConsts, j: int):
+    """NTT row j (1, N) -> centered coefficient digit, int32 (1, N)."""
+    q, qi = _rc(c_ref, j)
+    return rns.ks_center_t(
+        common.intt_stages_t(x_row, c_ref, sc.kc, q, qi, row=j), q)
+
+
+def _digit_to_row(w, c_ref, sc: ServerConsts, i: int):
+    """Centered digit -> NTT-domain residues on modulus row i (base
+    extension is exact: |w| < 2^30 <= q_i)."""
+    q, qi = _rc(c_ref, i)
+    return common.ntt_stages_t(rns.ks_residue_t(w, q), c_ref, sc.kc, q, qi,
+                               row=i)
+
+
+def _ks_digits(x, c_ref, sc: ServerConsts):
+    """(l, N) NTT rows -> digit-NTT stack h[i] = (l, N) over all l+1 modulus
+    rows.  The per-source INTTs are necessarily per-row (each limb has its
+    own plan), but the base-extension NTTs vectorise: for target row i ALL l
+    centered digits share one plan row, so they ride ONE stacked (l, N)
+    transform — l + (l+1) transforms instead of the naive l*(l+1)+l (this
+    is what keeps the unrolled megakernel's jaxpr, and its compile time,
+    linear in l rather than quadratic)."""
+    l = sc.level
+    w = jnp.concatenate([_to_digit(x[j:j + 1], c_ref, sc, j)
+                         for j in range(l)], 0)          # (l, N) int32
+    return [_digit_to_row(w, c_ref, sc, i) for i in range(l + 1)]
+
+
+def _sum_rows(t, q):
+    """(rows, N) -> (1, N) addmod reduction."""
+    s = t[0:1]
+    for j in range(1, t.shape[0]):
+        s = modmul.addmod(s, t[j:j + 1], q)
+    return s
+
+
+def _ks_accumulate(h, kb_ref, ka_ref, c_ref, sc: ServerConsts, dp: str):
+    """acc[i] = (2, N): row 0 = sum_j REDC(h[i][j] * ksk_b[j][i]), row 1 the
+    same against ksk_a — both products vectorised over the l digit rows."""
+    l = sc.level
+    kb, ka = kb_ref[...], ka_ref[...]
+    out = []
+    for i in range(l + 1):
+        q, qi = _rc(c_ref, i)
+        s0 = _sum_rows(_mm(h[i], kb[:, i], q, qi, dp), q)
+        s1 = _sum_rows(_mm(h[i], ka[:, i], q, qi, dp), q)
+        out.append(jnp.concatenate([s0, s1], 0))
+    return out
+
+
+def _ks_moddown(acc, c_ref, sc: ServerConsts, dp: str):
+    """Divide the accumulated extended stack by P with rounding.  The b/a
+    polys stay stacked (2, N) through the INTT/NTT pair, then split into the
+    usual per-poly row lists."""
+    l = sc.level
+    qp, qip = _rc(c_ref, l)
+    wp = rns.ks_center_t(
+        common.intt_stages_t(acc[l], c_ref, sc.kc, qp, qip, row=l), qp)
+    ks0, ks1 = [], []
+    for i in range(l):
+        q, qi = _rc(c_ref, i)
+        diff = modmul.submod(acc[i], _digit_to_row(wp, c_ref, sc, i), q)
+        r = _mm(diff, c_ref[i, sc.off_pinv], q, qi, dp)
+        ks0.append(r[0:1])
+        ks1.append(r[1:2])
+    return ks0, ks1
+
+
+def _keyswitch(x, kb_ref, ka_ref, c_ref, sc: ServerConsts, dp: str):
+    """Full hybrid key switch of (l, N) rows x: returns (ks0, ks1) row
+    lists such that ks0 + ks1*s ~ x*s_from / 1 (noise ~ key noise / P)."""
+    h = _ks_digits(x, c_ref, sc)
+    acc = _ks_accumulate(h, kb_ref, ka_ref, c_ref, sc, dp)
+    return _ks_moddown(acc, c_ref, sc, dp)
+
+
+def _rescale2(rows0, rows1, c_ref, sc: ServerConsts, dp: str):
+    """Drop limb l-1 of both polys: x_i' = (x_i - [x_{l-1}]) * q_drop^-1
+    mod q_i.  The correction term is the centered coefficient lift of the
+    dropped limb, base-extended and re-NTT'd (the transform is linear, so
+    the subtraction happens in the NTT domain); b/a ride stacked (2, N)
+    through every transform."""
+    l = sc.level
+    qd, qid = _rc(c_ref, l - 1)
+    top = jnp.concatenate([rows0[l - 1], rows1[l - 1]], 0)
+    w = rns.ks_center_t(
+        common.intt_stages_t(top, c_ref, sc.kc, qd, qid, row=l - 1), qd)
+    out0, out1 = [], []
+    for i in range(l - 1):
+        q, qi = _rc(c_ref, i)
+        x = jnp.concatenate([rows0[i], rows1[i]], 0)
+        diff = modmul.submod(x, _digit_to_row(w, c_ref, sc, i), q)
+        r = _mm(diff, c_ref[i, sc.off_qdinv], q, qi, dp)
+        out0.append(r[0:1])
+        out1.append(r[1:2])
+    return out0, out1
+
+
+def _rows(ref):
+    """(1, l, N) ciphertext block -> (l, N) array."""
+    return ref[...][0]
+
+
+def _write(ref, rows):
+    ref[...] = jnp.concatenate(rows, 0)[None]
+
+
+# ---------------------------------------------------------------------------
+# pointwise kernels — (L, B) limb-folded grid
+# ---------------------------------------------------------------------------
+
+
+def _add_ct_kernel(c_ref, a0_ref, a1_ref, b0_ref, b1_ref, o0_ref, o1_ref):
+    q = c_ref[0, common.OFF_Q]
+    o0_ref[...] = modmul.addmod(a0_ref[...], b0_ref[...], q)
+    o1_ref[...] = modmul.addmod(a1_ref[...], b1_ref[...], q)
+
+
+def _add_pt_kernel(c_ref, a0_ref, a1_ref, p_ref, o0_ref, o1_ref):
+    q = c_ref[0, common.OFF_Q]
+    o0_ref[...] = modmul.addmod(a0_ref[...], p_ref[...], q)
+    o1_ref[...] = a1_ref[...]
+
+
+def _mul_pt_kernel(c_ref, a0_ref, a1_ref, pm_ref, o0_ref, o1_ref, *,
+                   datapath: str):
+    q, qi = _rc(c_ref, 0)
+    o0_ref[...] = _mm(a0_ref[...], pm_ref[...], q, qi, datapath)
+    o1_ref[...] = _mm(a1_ref[...], pm_ref[...], q, qi, datapath)
+
+
+# ---------------------------------------------------------------------------
+# cross-limb kernels — (B,) grid, limbs unrolled in the body
+# ---------------------------------------------------------------------------
+
+
+def _rescale_kernel(c_ref, a0_ref, a1_ref, o0_ref, o1_ref, *,
+                    sc: ServerConsts, datapath: str):
+    x0, x1 = _rows(a0_ref), _rows(a1_ref)
+    out0, out1 = _rescale2([x0[j:j + 1] for j in range(sc.level)],
+                           [x1[j:j + 1] for j in range(sc.level)],
+                           c_ref, sc, datapath)
+    _write(o0_ref, out0)
+    _write(o1_ref, out1)
+
+
+def _mul_pt_rescale_kernel(c_ref, a0_ref, a1_ref, pm_ref, o0_ref, o1_ref, *,
+                           sc: ServerConsts, datapath: str):
+    pm = pm_ref[...]
+    x0, x1 = _rows(a0_ref), _rows(a1_ref)
+    rows0, rows1 = [], []
+    for j in range(sc.level):
+        q, qi = _rc(c_ref, j)
+        rows0.append(_mm(x0[j:j + 1], pm[j:j + 1], q, qi, datapath))
+        rows1.append(_mm(x1[j:j + 1], pm[j:j + 1], q, qi, datapath))
+    out0, out1 = _rescale2(rows0, rows1, c_ref, sc, datapath)
+    _write(o0_ref, out0)
+    _write(o1_ref, out1)
+
+
+def _mul_ct_relin_kernel(c_ref, a0_ref, a1_ref, b0_ref, b1_ref,
+                         kb_ref, ka_ref, o0_ref, o1_ref, *,
+                         sc: ServerConsts, datapath: str):
+    """Tensor (d0, d1, d2) -> relinearize d2 with the s^2 key -> rescale."""
+    l, dp = sc.level, datapath
+    a0, a1 = _rows(a0_ref), _rows(a1_ref)
+    b0, b1 = _rows(b0_ref), _rows(b1_ref)
+    d0, d1, d2 = [], [], []
+    for j in range(l):
+        q, qi = _rc(c_ref, j)
+        r2 = c_ref[j, sc.off_r2]
+        b0m = _mm(b0[j:j + 1], r2, q, qi, dp)     # enter Montgomery once
+        b1m = _mm(b1[j:j + 1], r2, q, qi, dp)
+        d0.append(_mm(a0[j:j + 1], b0m, q, qi, dp))
+        d1.append(modmul.addmod(_mm(a0[j:j + 1], b1m, q, qi, dp),
+                                _mm(a1[j:j + 1], b0m, q, qi, dp), q))
+        d2.append(_mm(a1[j:j + 1], b1m, q, qi, dp))
+    ks0, ks1 = _keyswitch(jnp.concatenate(d2, 0), kb_ref, ka_ref,
+                          c_ref, sc, dp)
+    rows0 = [modmul.addmod(d0[i], ks0[i], c_ref[i, common.OFF_Q])
+             for i in range(l)]
+    rows1 = [modmul.addmod(d1[i], ks1[i], c_ref[i, common.OFF_Q])
+             for i in range(l)]
+    out0, out1 = _rescale2(rows0, rows1, c_ref, sc, dp)
+    _write(o0_ref, out0)
+    _write(o1_ref, out1)
+
+
+def _rotate_kernel(c_ref, a0_ref, a1_ref, perm_ref, kb_ref, ka_ref,
+                   o0_ref, o1_ref, *, sc: ServerConsts, datapath: str):
+    """sigma_g(ct) + key switch sigma_g(s) -> s.  The permutation rides in
+    as an input row, so ONE lowering serves every rotation amount."""
+    l, dp = sc.level, datapath
+    perm = perm_ref[0]
+    a1p = jnp.take(_rows(a1_ref), perm, axis=-1)
+    ks0, ks1 = _keyswitch(a1p, kb_ref, ka_ref, c_ref, sc, dp)
+    a0p = jnp.take(_rows(a0_ref), perm, axis=-1)
+    rows0 = [modmul.addmod(a0p[i:i + 1], ks0[i], c_ref[i, common.OFF_Q])
+             for i in range(l)]
+    _write(o0_ref, rows0)
+    _write(o1_ref, ks1)
+
+
+def _ks_decompose_kernel(c_ref, a1_ref, h_ref, *, sc: ServerConsts):
+    """Hoisting, half 1: the rotation-independent digit-NTT stack of c1."""
+    h = _ks_digits(_rows(a1_ref), c_ref, sc)
+    h_ref[...] = jnp.stack(h)[None]                     # (1, l+1, l, N)
+
+
+def _ks_apply_rot_kernel(c_ref, a0_ref, h_ref, perm_ref, kb_ref, ka_ref,
+                         o0_ref, o1_ref, *, sc: ServerConsts, datapath: str):
+    """Hoisting, half 2: permute the DIGITS (exact — the centered
+    decomposition commutes with sigma_g), then multiply-accumulate +
+    mod-down only.  Bit-identical to ``_rotate_kernel``."""
+    l, dp = sc.level, datapath
+    perm = perm_ref[0]
+    hp = jnp.take(h_ref[...][0], perm, axis=-1)         # (l+1, l, N)
+    acc = _ks_accumulate([hp[i] for i in range(l + 1)],
+                         kb_ref, ka_ref, c_ref, sc, dp)
+    ks0, ks1 = _ks_moddown(acc, c_ref, sc, dp)
+    a0p = jnp.take(_rows(a0_ref), perm, axis=-1)
+    rows0 = [modmul.addmod(a0p[i:i + 1], ks0[i], c_ref[i, common.OFF_Q])
+             for i in range(l)]
+    _write(o0_ref, rows0)
+    _write(o1_ref, ks1)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+
+def _pointwise_call(kernel, ctx: CKKSContext, level: int, batch: int, n: int,
+                    n_ct_in: int, n_pt_in: int, n_out: int, interpret: bool,
+                    **kw):
+    """(L, B)-grid launch: one table row + one limb block per step."""
+    kc = common.stacked_kernel_consts(ctx.plans[:level])
+    cspec = pl.BlockSpec((1, kc.n_scalars), lambda l, b: (l, 0),
+                         memory_space=pltpu.SMEM)
+    dspec = pl.BlockSpec((1, 1, n), lambda l, b: (b, l, 0),
+                         memory_space=pltpu.VMEM)
+    pspec = pl.BlockSpec((1, n), lambda l, b: (l, 0),
+                         memory_space=pltpu.VMEM)
+    shape = jax.ShapeDtypeStruct((batch, level, n), jnp.uint32)
+    call = pl.pallas_call(
+        functools.partial(kernel, **kw) if kw else kernel,
+        grid=(level, batch),
+        in_specs=[cspec] + [dspec] * n_ct_in + [pspec] * n_pt_in,
+        out_specs=(dspec,) * n_out,
+        out_shape=(shape,) * n_out,
+        interpret=interpret,
+    )
+    return call, jnp.asarray(kc.table)
+
+
+def add_ct(c0a, c1a, c0b, c1b, ctx: CKKSContext, interpret: bool = True):
+    batch, level, n = c0a.shape
+    call, table = _pointwise_call(_add_ct_kernel, ctx, level, batch, n,
+                                  n_ct_in=4, n_pt_in=0, n_out=2,
+                                  interpret=interpret)
+    return call(table, c0a, c1a, c0b, c1b)
+
+
+def add_pt(c0, c1, pt, ctx: CKKSContext, interpret: bool = True):
+    batch, level, n = c0.shape
+    call, table = _pointwise_call(_add_pt_kernel, ctx, level, batch, n,
+                                  n_ct_in=2, n_pt_in=1, n_out=2,
+                                  interpret=interpret)
+    return call(table, c0, c1, pt)
+
+
+def mul_pt(c0, c1, pt_mont, ctx: CKKSContext, datapath: str = "f64",
+           interpret: bool = True):
+    """ct x pt WITHOUT rescale (accumulation-friendly: sum products first,
+    rescale once)."""
+    common.check_datapath(datapath)
+    batch, level, n = c0.shape
+    call, table = _pointwise_call(_mul_pt_kernel, ctx, level, batch, n,
+                                  n_ct_in=2, n_pt_in=1, n_out=2,
+                                  interpret=interpret, datapath=datapath)
+    return call(table, c0, c1, pt_mont)
+
+
+def _cross_specs(sc: ServerConsts):
+    rows, k = sc.table.shape
+    tspec = pl.BlockSpec((rows, k), lambda b: (0, 0),
+                         memory_space=pltpu.SMEM)
+    ctspec = pl.BlockSpec((1, sc.level, sc.n), lambda b: (b, 0, 0),
+                          memory_space=pltpu.VMEM)
+    keyspec = pl.BlockSpec((sc.level, sc.level + 1, sc.n),
+                           lambda b: (0, 0, 0), memory_space=pltpu.VMEM)
+    ptspec = pl.BlockSpec((sc.level, sc.n), lambda b: (0, 0),
+                          memory_space=pltpu.VMEM)
+    permspec = pl.BlockSpec((1, sc.n), lambda b: (0, 0),
+                            memory_space=pltpu.VMEM)
+    return tspec, ctspec, keyspec, ptspec, permspec
+
+
+def _out(batch, level, n, count):
+    shape = jax.ShapeDtypeStruct((batch, level, n), jnp.uint32)
+    return (shape,) * count
+
+
+def rescale(c0, c1, ctx: CKKSContext, datapath: str = "f64",
+            interpret: bool = True):
+    common.check_datapath(datapath)
+    batch, level, n = c0.shape
+    sc = server_consts(ctx, level)
+    tspec, ctspec, _, _, _ = _cross_specs(sc)
+    ospec = pl.BlockSpec((1, level - 1, n), lambda b: (b, 0, 0),
+                         memory_space=pltpu.VMEM)
+    call = pl.pallas_call(
+        functools.partial(_rescale_kernel, sc=sc, datapath=datapath),
+        grid=(batch,), in_specs=[tspec, ctspec, ctspec],
+        out_specs=(ospec, ospec), out_shape=_out(batch, level - 1, n, 2),
+        interpret=interpret)
+    return call(jnp.asarray(sc.table), c0, c1)
+
+
+def mul_pt_rescale(c0, c1, pt_mont, ctx: CKKSContext, datapath: str = "f64",
+                   interpret: bool = True):
+    common.check_datapath(datapath)
+    batch, level, n = c0.shape
+    sc = server_consts(ctx, level)
+    tspec, ctspec, _, ptspec, _ = _cross_specs(sc)
+    ospec = pl.BlockSpec((1, level - 1, n), lambda b: (b, 0, 0),
+                         memory_space=pltpu.VMEM)
+    call = pl.pallas_call(
+        functools.partial(_mul_pt_rescale_kernel, sc=sc, datapath=datapath),
+        grid=(batch,), in_specs=[tspec, ctspec, ctspec, ptspec],
+        out_specs=(ospec, ospec), out_shape=_out(batch, level - 1, n, 2),
+        interpret=interpret)
+    return call(jnp.asarray(sc.table), c0, c1, pt_mont)
+
+
+def mul_ct_relin(a0, a1, b0, b1, ksk_b, ksk_a, ctx: CKKSContext,
+                 datapath: str = "f64", interpret: bool = True):
+    common.check_datapath(datapath)
+    batch, level, n = a0.shape
+    sc = server_consts(ctx, level)
+    tspec, ctspec, keyspec, _, _ = _cross_specs(sc)
+    ospec = pl.BlockSpec((1, level - 1, n), lambda b: (b, 0, 0),
+                         memory_space=pltpu.VMEM)
+    call = pl.pallas_call(
+        functools.partial(_mul_ct_relin_kernel, sc=sc, datapath=datapath),
+        grid=(batch,),
+        in_specs=[tspec, ctspec, ctspec, ctspec, ctspec, keyspec, keyspec],
+        out_specs=(ospec, ospec), out_shape=_out(batch, level - 1, n, 2),
+        interpret=interpret)
+    return call(jnp.asarray(sc.table), a0, a1, b0, b1, ksk_b, ksk_a)
+
+
+def rotate(c0, c1, perm, ksk_b, ksk_a, ctx: CKKSContext,
+           datapath: str = "f64", interpret: bool = True):
+    common.check_datapath(datapath)
+    batch, level, n = c0.shape
+    sc = server_consts(ctx, level)
+    tspec, ctspec, keyspec, _, permspec = _cross_specs(sc)
+    call = pl.pallas_call(
+        functools.partial(_rotate_kernel, sc=sc, datapath=datapath),
+        grid=(batch,),
+        in_specs=[tspec, ctspec, ctspec, permspec, keyspec, keyspec],
+        out_specs=(ctspec, ctspec), out_shape=_out(batch, level, n, 2),
+        interpret=interpret)
+    return call(jnp.asarray(sc.table), c0, c1, perm, ksk_b, ksk_a)
+
+
+def ks_decompose(c1, ctx: CKKSContext, interpret: bool = True):
+    batch, level, n = c1.shape
+    sc = server_consts(ctx, level)
+    tspec, ctspec, _, _, _ = _cross_specs(sc)
+    hspec = pl.BlockSpec((1, level + 1, level, n), lambda b: (b, 0, 0, 0),
+                         memory_space=pltpu.VMEM)
+    call = pl.pallas_call(
+        functools.partial(_ks_decompose_kernel, sc=sc),
+        grid=(batch,), in_specs=[tspec, ctspec],
+        out_specs=hspec,
+        out_shape=jax.ShapeDtypeStruct((batch, level + 1, level, n),
+                                       jnp.uint32),
+        interpret=interpret)
+    return call(jnp.asarray(sc.table), c1)
+
+
+def ks_apply_rot(c0, h, perm, ksk_b, ksk_a, ctx: CKKSContext,
+                 datapath: str = "f64", interpret: bool = True):
+    common.check_datapath(datapath)
+    batch, level, n = c0.shape
+    sc = server_consts(ctx, level)
+    tspec, ctspec, keyspec, _, permspec = _cross_specs(sc)
+    hspec = pl.BlockSpec((1, level + 1, level, n), lambda b: (b, 0, 0, 0),
+                         memory_space=pltpu.VMEM)
+    call = pl.pallas_call(
+        functools.partial(_ks_apply_rot_kernel, sc=sc, datapath=datapath),
+        grid=(batch,),
+        in_specs=[tspec, ctspec, hspec, permspec, keyspec, keyspec],
+        out_specs=(ctspec, ctspec), out_shape=_out(batch, level, n, 2),
+        interpret=interpret)
+    return call(jnp.asarray(sc.table), c0, h, perm, ksk_b, ksk_a)

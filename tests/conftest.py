@@ -161,3 +161,56 @@ def tiny_mega_client():
     i.e. exactly what a plain FHEClient(profile='tiny') builds."""
     from repro.fhe_client.client import FHEClient
     return FHEClient(profile="tiny", pipeline="megakernel")
+
+
+# ---------------------------------------------------------------------------
+# server-side eval fixtures (tests/test_server_ops.py)
+# ---------------------------------------------------------------------------
+# The server homomorphism tier reuses ``tiny_device_client`` (the staged
+# f64 client — decrypting post-multiply ciphertexts needs the f64 scale
+# chain, non-pow2 scales) and generates one evaluation-key set per session:
+# keygen + the per-(op, level) megakernel compiles dominate, so both
+# evaluators (df32 device default + f64 oracle) share keys and jit caches.
+
+SRV_ROTATIONS = (1, 2, 5)
+
+
+@pytest.fixture(scope="session")
+def srv_eval_keys(tiny_device_client):
+    return tiny_device_client.make_evaluation_keys(rotations=SRV_ROTATIONS)
+
+
+@pytest.fixture(scope="session")
+def srv_ev(tiny_device_client, srv_eval_keys):
+    """Server evaluator on the DEVICE datapath (df32)."""
+    from repro.fhe_server import ServerEvaluator
+    return ServerEvaluator(tiny_device_client.ctx, srv_eval_keys,
+                           datapath="df32")
+
+
+@pytest.fixture(scope="session")
+def srv_ev_f64(tiny_device_client, srv_eval_keys):
+    """Server evaluator on the f64 oracle datapath."""
+    from repro.fhe_server import ServerEvaluator
+    return ServerEvaluator(tiny_device_client.ctx, srv_eval_keys,
+                           datapath="f64")
+
+
+@pytest.fixture(scope="session")
+def tinyboot_client():
+    """Deep-L toy ring (N=2^6, 8 limbs, Delta=2^30) — the fast lane's
+    end-to-end encrypted-inference geometry (4-level workloads fit)."""
+    from repro.fhe_client.client import FHEClient
+    return FHEClient(profile="tinyboot", pipeline="staged", datapath="f64")
+
+
+@pytest.fixture(scope="session")
+def tinyboot_ev(tinyboot_client):
+    """Server evaluator for the d=4 encrypted-inference workload
+    (rotations 1..3), shared so the e2e and matvec tests reuse one key
+    set and one per-(op, level) jit cache."""
+    from repro.fhe_server import ServerEvaluator
+    from repro.fhe_server import inference as inf
+    keys = tinyboot_client.make_evaluation_keys(
+        rotations=inf.matvec_rotations(4))
+    return ServerEvaluator(tinyboot_client.ctx, keys)

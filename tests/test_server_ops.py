@@ -1,0 +1,706 @@
+"""Differential homomorphism tier for the server-side CKKS op set.
+
+Every op in ``repro.fhe_server`` is pinned three ways:
+
+  * **homomorphism** — decrypt(op(encrypt(x))) matches the plaintext op
+    within a NAMED per-op noise budget (``NOISE_BUDGET``), at the tiny
+    geometry for the fast lane and at the server/boot presets nightly;
+  * **exact accounting** — level and scale after every op match the exact
+    rational bookkeeping (rescale returns the scale to EXACTLY Delta when
+    the multiplicand is encoded at the dropped prime);
+  * **bit-level structure** — the df32 device datapath is bit-identical to
+    the f64 oracle datapath for EVERY op (both REDC engines are exact),
+    hoisted rotations are bit-identical to fused ones, and the fused
+    mul_pt+rescale kernel is bit-identical to mul_pt followed by rescale.
+
+Launch-count pins ride the ``pallas_call_counter`` fixture: each op lowers
+exactly ONE kernel body, and warm evaluator calls re-lower nothing.  A
+jaxpr scan proves the df32 server cores trace x64-free.  The decode
+/Delta double-rounding regression (the ROADMAP watch item) lives here too:
+an adversarial centered value whose df32 pair collapse and f64-oracle
+double-rounding land on DIFFERENT planes — divergence exactly 2^(k-48),
+both paths still inside the 2^-48 pair-window budget — plus a dense
+random differential showing the shipped prime grids do not trip it.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.fhe_server import (ServerCiphertext, ServerEvaluator,
+                              combined_scale, encode_plaintext)
+from repro.fhe_server import inference as inf
+from repro.fhe_server import keys as skeys
+
+from conftest import SRV_ROTATIONS
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# named noise budgets (max |slot error|, messages |z| <= 1)
+# ---------------------------------------------------------------------------
+# Measured at the tiny geometry (N=2^6, 3 limbs, Delta=2^40, P ~ 2^30):
+# additions ~1e-9, rotations ~6e-10, ct x pt ~3e-9, ct x ct ~5e-10. The
+# budgets below give ~4-8x headroom; a regression that doubles key-switch
+# or rescale noise trips them.
+
+NOISE_BUDGET = {
+    "add_ct": 2.0 ** -27,
+    "add_pt": 2.0 ** -27,
+    "mul_pt": 2.0 ** -25,
+    "mul_ct": 2.0 ** -26,
+    "rescale": 2.0 ** -25,
+    "rotate": 2.0 ** -27,
+    "e2e_linear_poly3": 2.0 ** -12,      # 4 levels at the tinyboot geometry
+}
+
+
+def _enc(client, z) -> ServerCiphertext:
+    z = np.asarray(z, np.complex128)
+    if z.ndim == 1:
+        z = z[None]
+    return ServerCiphertext.from_batch(client.encode_encrypt_batch(z))
+
+
+def _dec(client, ct: ServerCiphertext) -> np.ndarray:
+    return np.asarray(client.decrypt_batch(list(ct.to_batch())))
+
+
+def _slots(ctx, seed, scale=0.5):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(ctx.params.n_slots) * scale
+
+
+def _bit_eq(a: ServerCiphertext, b: ServerCiphertext) -> bool:
+    return bool(jnp.all(a.c0 == b.c0) & jnp.all(a.c1 == b.c1))
+
+
+def _q_drop(ctx, level: int) -> float:
+    return float(ctx.q_list[level - 1])
+
+
+# ---------------------------------------------------------------------------
+# Galois machinery: eval-point-convention pin
+# ---------------------------------------------------------------------------
+
+
+def test_galois_perm_matches_coeff_oracle(tiny_device_client):
+    """NTT(sigma_g(a)) == NTT(a)[perm] for the repo's merged-psi CT DIT
+    order — the permutation the rotation kernels gather by, pinned against
+    the exact signed coefficient-domain automorphism."""
+    from repro.core import ntt as nttmod
+    ctx = tiny_device_client.ctx
+    n = ctx.n
+    sp = ctx.stacked_plans(1)
+    q = int(ctx.plans[0].prime.q)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, q, size=n).astype(np.uint32)
+    A = np.asarray(nttmod.ntt_stacked(jnp.asarray(a[None, None]), sp))[0, 0]
+    for r in (1, 2, 5, ctx.params.n_slots - 1):
+        g = skeys.galois_element(r, n)
+        b = (skeys.galois_apply_coeffs(a.astype(np.int64), g, n) % q)
+        B = np.asarray(nttmod.ntt_stacked(
+            jnp.asarray(b[None, None].astype(np.uint32)), sp))[0, 0]
+        perm = skeys.galois_perm_ntt(g, n)
+        assert np.array_equal(B, A[perm]), f"r={r}"
+    # sigma_g composition: perm(r1) o perm(r2) == perm(r1 + r2)
+    p1 = skeys.galois_perm_ntt(skeys.galois_element(1, n), n)
+    p2 = skeys.galois_perm_ntt(skeys.galois_element(2, n), n)
+    p3 = skeys.galois_perm_ntt(skeys.galois_element(3, n), n)
+    assert np.array_equal(p1[p2], p3)
+
+
+# ---------------------------------------------------------------------------
+# additions
+# ---------------------------------------------------------------------------
+
+
+def test_add_ct_homomorphism(tiny_device_client, srv_ev, srv_ev_f64):
+    client = tiny_device_client
+    za, zb = _slots(client.ctx, 1), _slots(client.ctx, 2)
+    x, y = _enc(client, za), _enc(client, zb)
+    s = srv_ev.add_ct(x, y)
+    assert s.level == x.level and s.scale == x.scale
+    err = np.max(np.abs(_dec(client, s)[0] - (za + zb)))
+    assert err < NOISE_BUDGET["add_ct"], err
+    # additions are datapath-free: both evaluators bit-identical
+    assert _bit_eq(s, srv_ev_f64.add_ct(x, y))
+
+
+def test_add_pt_homomorphism(tiny_device_client, srv_ev):
+    client = tiny_device_client
+    ctx = client.ctx
+    za, w = _slots(ctx, 3), _slots(ctx, 4)
+    x = _enc(client, za)
+    pt = encode_plaintext(w.astype(np.complex128), ctx, x.level, x.scale)
+    s = srv_ev.add_pt(x, pt)
+    assert s.level == x.level and s.scale == x.scale
+    err = np.max(np.abs(_dec(client, s)[0] - (za + w)))
+    assert err < NOISE_BUDGET["add_pt"], err
+    # c1 passes through untouched
+    assert bool(jnp.all(s.c1 == x.c1))
+
+
+def test_add_ct_level_alignment(tiny_device_client, srv_ev):
+    """Adding ciphertexts at different levels mod-switches the deeper one
+    down (exact limb truncation, scale unchanged)."""
+    client = tiny_device_client
+    za, zb = _slots(client.ctx, 5), _slots(client.ctx, 6)
+    x, y = _enc(client, za), _enc(client, zb)
+    s = srv_ev.add_ct(x, y.drop_to(x.level - 1))
+    assert s.level == x.level - 1
+    err = np.max(np.abs(_dec(client, s)[0] - (za + zb)))
+    assert err < NOISE_BUDGET["add_ct"], err
+
+
+# ---------------------------------------------------------------------------
+# multiplies + rescale: homomorphism AND exact scale accounting
+# ---------------------------------------------------------------------------
+
+
+def test_mul_pt_rescale_exact_scale(tiny_device_client, srv_ev, srv_ev_f64):
+    """ct x pt with the multiplicand encoded at the dropped prime: the
+    post-rescale scale is EXACTLY Delta (rational bookkeeping), the level
+    drops by one, and both datapaths agree bit-for-bit."""
+    client = tiny_device_client
+    ctx = client.ctx
+    za, w = _slots(ctx, 7), _slots(ctx, 8)
+    x = _enc(client, za)
+    pt = encode_plaintext(w.astype(np.complex128), ctx, x.level,
+                          _q_drop(ctx, x.level))
+    m = srv_ev.mul_pt(x, pt)
+    assert m.level == x.level - 1
+    assert m.scale == float(ctx.params.delta)        # exact, not approximate
+    err = np.max(np.abs(_dec(client, m)[0] - w * za))
+    assert err < NOISE_BUDGET["mul_pt"], err
+    assert _bit_eq(m, srv_ev_f64.mul_pt(x, pt))
+
+
+def test_mul_pt_raw_then_rescale_matches_fused(tiny_device_client, srv_ev):
+    """Accumulation contract: mul_pt(rescale=False) then rescale() is
+    bit-identical to the fused kernel, and the scale bookkeeping composes
+    to the same exact value."""
+    client = tiny_device_client
+    ctx = client.ctx
+    za, w = _slots(ctx, 9), _slots(ctx, 10)
+    x = _enc(client, za)
+    pt = encode_plaintext(w.astype(np.complex128), ctx, x.level,
+                          _q_drop(ctx, x.level))
+    raw = srv_ev.mul_pt(x, pt, rescale=False)
+    assert raw.level == x.level
+    assert raw.scale == combined_scale(x.scale, pt.scale)
+    fused = srv_ev.mul_pt(x, pt)
+    stepped = srv_ev.rescale(raw)
+    assert _bit_eq(fused, stepped)
+    assert fused.scale == stepped.scale and fused.level == stepped.level
+
+
+def test_mul_ct_relin_homomorphism(tiny_device_client, srv_ev, srv_ev_f64):
+    client = tiny_device_client
+    ctx = client.ctx
+    za, zb = _slots(ctx, 11), _slots(ctx, 12)
+    x, y = _enc(client, za), _enc(client, zb)
+    m = srv_ev.mul_ct(x, y)
+    assert m.level == x.level - 1
+    # exact rational scale: Delta^2 / q_drop (NOT a power of two)
+    assert m.scale == combined_scale(x.scale, y.scale,
+                                     divisor=int(ctx.q_list[x.level - 1]))
+    err = np.max(np.abs(_dec(client, m)[0] - za * zb))
+    assert err < NOISE_BUDGET["mul_ct"], err
+    assert _bit_eq(m, srv_ev_f64.mul_ct(x, y))
+
+
+def test_mul_ct_square_then_add(tiny_device_client, srv_ev):
+    """(x*x) + (x*y): mixed post-multiply ciphertexts share the same exact
+    scale, so the addition is legal and accurate."""
+    client = tiny_device_client
+    za, zb = _slots(client.ctx, 13), _slots(client.ctx, 14)
+    x, y = _enc(client, za), _enc(client, zb)
+    s = srv_ev.add_ct(srv_ev.mul_ct(x, x), srv_ev.mul_ct(x, y))
+    err = np.max(np.abs(_dec(client, s)[0] - (za * za + za * zb)))
+    assert err < NOISE_BUDGET["mul_ct"] * 2, err
+
+
+def test_rescale_floor_asserts(tiny_device_client, srv_ev):
+    x = _enc(tiny_device_client, _slots(tiny_device_client.ctx, 15))
+    low = x.drop_to(2)
+    with pytest.raises(AssertionError):
+        srv_ev.rescale(low)
+    with pytest.raises(AssertionError):
+        x.drop_to(1)
+
+
+def test_scale_mismatch_asserts(tiny_device_client, srv_ev):
+    client = tiny_device_client
+    ctx = client.ctx
+    x = _enc(client, _slots(ctx, 16))
+    pt = encode_plaintext(np.zeros(ctx.params.n_slots, np.complex128), ctx,
+                          x.level, x.scale * 2)
+    with pytest.raises(AssertionError):
+        srv_ev.add_pt(x, pt)
+
+
+# ---------------------------------------------------------------------------
+# rotations
+# ---------------------------------------------------------------------------
+
+
+def test_rotate_homomorphism(tiny_device_client, srv_ev, srv_ev_f64):
+    client = tiny_device_client
+    za = _slots(client.ctx, 17)
+    x = _enc(client, za)
+    for r in SRV_ROTATIONS:
+        rot = srv_ev.rotate(x, r)
+        assert rot.level == x.level and rot.scale == x.scale
+        err = np.max(np.abs(_dec(client, rot)[0] - np.roll(za, -r)))
+        assert err < NOISE_BUDGET["rotate"], (r, err)
+        assert _bit_eq(rot, srv_ev_f64.rotate(x, r))
+    # r == 0 is the identity (no kernel, same object)
+    assert srv_ev.rotate(x, 0) is x
+    ns = client.ctx.params.n_slots
+    assert srv_ev.rotate(x, ns) is x
+
+
+def test_rotate_missing_key_raises(tiny_device_client, srv_ev):
+    x = _enc(tiny_device_client, _slots(tiny_device_client.ctx, 18))
+    with pytest.raises(KeyError):
+        srv_ev.rotate(x, 3)          # only SRV_ROTATIONS have keys
+
+
+def test_hoisted_rotations_bit_identical(tiny_device_client, srv_ev):
+    """Hoisting shares ONE key-switch decomposition across the rotation
+    set; results are bit-identical to per-rotation fused kernels (the
+    centered digit decomposition commutes with Galois automorphisms)."""
+    client = tiny_device_client
+    za = _slots(client.ctx, 19)
+    x = _enc(client, za)
+    ns = client.ctx.params.n_slots
+    rots = list(SRV_ROTATIONS) + [0, ns + 1]      # dupes mod n_slots + id
+    out = srv_ev.hoisted_rotations(x, rots)
+    for r in SRV_ROTATIONS:
+        assert _bit_eq(out[r], srv_ev.rotate(x, r)), f"r={r}"
+    assert out[0] is x
+    assert _bit_eq(out[ns + 1], out[1])           # ns+1 == 1 mod n_slots
+
+
+def test_rotate_composes(tiny_device_client, srv_ev):
+    """rotate(rotate(x, 1), 1) ~ rotate(x, 2) within twice the budget."""
+    client = tiny_device_client
+    za = _slots(client.ctx, 20)
+    x = _enc(client, za)
+    twice = srv_ev.rotate(srv_ev.rotate(x, 1), 1)
+    err = np.max(np.abs(_dec(client, twice)[0] - np.roll(za, -2)))
+    assert err < 2 * NOISE_BUDGET["rotate"], err
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: homomorphism properties over random messages
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _sets = settings(max_examples=10, deadline=None,
+                     suppress_health_check=[HealthCheck.too_slow])
+    _seed = st.integers(min_value=0, max_value=2 ** 31 - 1)
+
+    @_sets
+    @given(seed=_seed)
+    def test_prop_add_mul_homomorphism(tiny_device_client, srv_ev, seed):
+        """decrypt(x*y + x) tracks the plaintext for random messages (warm
+        jit caches: each example is pure dispatch)."""
+        client = tiny_device_client
+        rng = np.random.default_rng(seed)
+        ns = client.ctx.params.n_slots
+        za = rng.uniform(-1, 1, ns)
+        zb = rng.uniform(-1, 1, ns)
+        x, y = _enc(client, za), _enc(client, zb)
+        m = srv_ev.mul_ct(x, y)
+        got = _dec(client, m)[0]
+        assert np.max(np.abs(got - za * zb)) < NOISE_BUDGET["mul_ct"]
+
+    @_sets
+    @given(seed=_seed, r=st.integers(min_value=0, max_value=63))
+    def test_prop_rotate_homomorphism(tiny_device_client, srv_ev, seed, r):
+        client = tiny_device_client
+        ns = client.ctx.params.n_slots
+        rn = r % ns
+        if rn not in (0,) + SRV_ROTATIONS:
+            rn = SRV_ROTATIONS[rn % len(SRV_ROTATIONS)]
+        rng = np.random.default_rng(seed)
+        za = rng.uniform(-1, 1, ns)
+        x = _enc(client, za)
+        got = _dec(client, srv_ev.rotate(x, rn))[0]
+        assert np.max(np.abs(got - np.roll(za, -rn))) \
+            < NOISE_BUDGET["rotate"]
+
+
+# ---------------------------------------------------------------------------
+# launch-count pins (satellite: one kernel body per op, zero warm re-lowers)
+# ---------------------------------------------------------------------------
+
+
+def test_launch_counts_one_kernel_per_op(tiny_device_client, srv_eval_keys,
+                                         pallas_call_counter):
+    """Every server op is exactly ONE pallas_call with the expected kernel
+    body (eager wrapper calls — each lowering is observed directly)."""
+    from repro.kernels import ops as kops
+    client = tiny_device_client
+    ctx = client.ctx
+    x = _enc(client, _slots(ctx, 21))
+    lvl = x.level
+    kb = srv_eval_keys.relin.b_mont[:lvl][:, list(range(lvl)) +
+                                          [ctx.params.n_limbs]]
+    ka = srv_eval_keys.relin.a_mont[:lvl][:, list(range(lvl)) +
+                                          [ctx.params.n_limbs]]
+    perm = jnp.asarray(skeys.galois_perm_ntt(
+        skeys.galois_element(1, ctx.n), ctx.n).reshape(1, -1))
+    pt = encode_plaintext(np.zeros(ctx.params.n_slots, np.complex128),
+                          ctx, lvl, x.scale)
+
+    pallas_call_counter.clear()
+    kops.server_add_ct(x.c0, x.c1, x.c0, x.c1, ctx)
+    kops.server_add_pt(x.c0, x.c1, pt.data, ctx)
+    kops.server_mul_pt(x.c0, x.c1, pt.data_mont, ctx)
+    kops.server_mul_pt(x.c0, x.c1, pt.data_mont, ctx, rescale=True)
+    kops.server_rescale(x.c0, x.c1, ctx)
+    kops.server_mul_ct(x.c0, x.c1, x.c0, x.c1, kb, ka, ctx)
+    kops.server_rotate(x.c0, x.c1, perm, kb, ka, ctx)
+    h = kops.server_ks_decompose(x.c1, ctx)
+    kops.server_ks_apply_rot(x.c0, h, perm, kb, ka, ctx)
+    assert pallas_call_counter.by_name() == {
+        "_add_ct_kernel": 1,
+        "_add_pt_kernel": 1,
+        "_mul_pt_kernel": 1,
+        "_mul_pt_rescale_kernel": 1,
+        "_rescale_kernel": 1,
+        "_mul_ct_relin_kernel": 1,
+        "_rotate_kernel": 1,
+        "_ks_decompose_kernel": 1,
+        "_ks_apply_rot_kernel": 1,
+    }
+
+
+def test_warm_evaluator_relowers_nothing(tiny_device_client, srv_ev,
+                                         pallas_call_counter):
+    """Warm evaluator calls hit the jit cache: ZERO new lowerings, even
+    for a rotation amount never used before (the permutation is an input
+    row, not a closure constant)."""
+    client = tiny_device_client
+    x = _enc(client, _slots(client.ctx, 22))
+    srv_ev.rotate(x, 1)              # ensure traced at this shape
+    srv_ev.mul_ct(x, x)
+    pallas_call_counter.clear()
+    srv_ev.rotate(x, 2)              # different rotation, same lowering
+    srv_ev.rotate(x, 5)
+    srv_ev.mul_ct(x, x)
+    srv_ev.add_ct(x, x)
+    assert len(pallas_call_counter) == 0, pallas_call_counter.by_name()
+
+
+# ---------------------------------------------------------------------------
+# jaxpr scan: the df32 server cores trace x64-free
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.x64smoke
+def test_df32_server_cores_trace_x64_free(tiny_device_client, srv_eval_keys):
+    """The device-datapath server kernels hold zero f64/u64/i64/c128
+    equations — they lower on f32/u32-only TPU VPUs."""
+    from test_datapath_oracle import _wide_dtypes
+    from repro.kernels import server_eval
+    client = tiny_device_client
+    ctx = client.ctx
+    lvl = ctx.params.n_limbs
+    n = ctx.n
+    c = jnp.zeros((1, lvl, n), jnp.uint32)
+    pt = jnp.zeros((lvl, n), jnp.uint32)
+    kb = srv_eval_keys.relin.b_mont
+    ka = srv_eval_keys.relin.a_mont
+    perm = jnp.zeros((1, n), jnp.int32)
+
+    cores = {
+        "mul_pt": lambda: jax.make_jaxpr(
+            lambda a0, a1, p: server_eval.mul_pt(
+                a0, a1, p, ctx, datapath="df32"))(c, c, pt),
+        "mul_pt_rescale": lambda: jax.make_jaxpr(
+            lambda a0, a1, p: server_eval.mul_pt_rescale(
+                a0, a1, p, ctx, datapath="df32"))(c, c, pt),
+        "rescale": lambda: jax.make_jaxpr(
+            lambda a0, a1: server_eval.rescale(
+                a0, a1, ctx, datapath="df32"))(c, c),
+        "mul_ct": lambda: jax.make_jaxpr(
+            lambda a0, a1, b0, b1, rb, ra: server_eval.mul_ct_relin(
+                a0, a1, b0, b1, rb, ra, ctx,
+                datapath="df32"))(c, c, c, c, kb, ka),
+        "rotate": lambda: jax.make_jaxpr(
+            lambda a0, a1, pm, rb, ra: server_eval.rotate(
+                a0, a1, pm, rb, ra, ctx,
+                datapath="df32"))(c, c, perm, kb, ka),
+    }
+    for name, trace in cores.items():
+        wide = _wide_dtypes(trace())
+        assert wide == set(), f"{name} is not x64-free: {wide}"
+
+
+# ---------------------------------------------------------------------------
+# decode /Delta pair collapse: the ROADMAP double-rounding watch item
+# ---------------------------------------------------------------------------
+
+
+def _f64_oracle_pair(v_exact: float):
+    """The f64-oracle decode path: round to fl64 FIRST, then split into a
+    df32 pair (hi = f32(x), lo = f32(x - hi)) — two rounding steps."""
+    hi = np.float32(v_exact)
+    lo = np.float32(v_exact - float(hi))
+    return hi, lo
+
+
+def _df32_pair_value(hi_pair) -> float:
+    return float(hi_pair[0]) + float(hi_pair[1])
+
+
+def test_decode_pair_collapse_double_rounding_divergence():
+    """Pin the pathological pattern behind the ROADMAP watch item: a
+    centered value whose tail straddles the fl64 RNE boundary so the
+    f64-oracle path (RNE53, then f32 split) double-rounds UP while the
+    direct df32 4-term collapse rounds DOWN.  The divergence is EXACTLY
+    one bit at position k-48 — both paths stay inside the documented
+    2^-48 relative pair-window budget, which is why the shipped grids
+    (see the differential below) never trip it, but the planes are NOT
+    identical on this pattern."""
+    from fractions import Fraction
+    from repro.core import rns
+
+    for k in range(53, 60):
+        v = (1 << k) + (1 << (k - 25)) + (1 << (k - 48)) \
+            + (1 << (k - 49)) - (1 << (k - 53))
+        # direct df32 path: u32 word pair -> 4 exact f32 terms -> collapse
+        hi_w = jnp.asarray([np.uint32(v >> 32)])
+        lo_w = jnp.asarray([np.uint32(v & 0xFFFFFFFF)])
+        d = rns.centered_to_df(jnp.asarray([np.float32(1.0)]), hi_w, lo_w,
+                               np.float32(1.0))
+        df32_val = Fraction(float(d.hi[0])) + Fraction(float(d.lo[0]))
+        # f64-oracle path: RNE53 first (float(v)), then the f32 split
+        oh, ol = _f64_oracle_pair(float(v))
+        f64_val = Fraction(float(oh)) + Fraction(float(ol))
+
+        exact = Fraction(v)
+        budget = Fraction(2) ** (k - 48)          # 2^-48 relative to 2^k
+        assert abs(df32_val - exact) <= budget, k
+        assert abs(f64_val - exact) <= budget, k
+        # the divergence is real and exactly one bit at k-48
+        assert f64_val - df32_val == Fraction(2) ** (k - 48), k
+
+
+def test_decode_pair_collapse_shipped_grids_bounded():
+    """Dense random differential over the SHIPPED decrypt prime pairs
+    (tiny/test/server profiles), df32 CRT + pair collapse vs the
+    double-rounding f64-oracle path (exact CRT -> fl64 -> f32 split).
+
+    Dense sampling (2^14 residue pairs per grid — far beyond what the
+    n_slots-sized decode suites ever draw) DOES surface the watch-item
+    divergence on the lo plane, so bit-equality is the wrong pin.  What
+    holds, and is pinned here:
+
+      * the hi planes are bit-identical for EVERY sampled pair — the two
+        paths only ever disagree in the residual word;
+      * the path difference is bounded by 2^-43 of the sample magnitude
+        (measured max ~2^-44; each path rounds within a few ulps of the
+        2^-48 pair window, so their gap is a small multiple of it);
+      * the df32 collapse itself stays within 2^-44 of the EXACT value
+        on the worst divergent samples (measured 2^-45..2^-46).
+    """
+    from fractions import Fraction
+    from repro.core import get_context, rns
+
+    rng = np.random.default_rng(23)
+    for profile in ("tiny", "test", "server"):
+        ctx = get_context(profile)
+        q0, q1 = int(ctx.q_list[0]), int(ctx.q_list[1])
+        db = ctx.params.delta_bits
+        inv = np.float32(2.0 ** -db)
+        m = 1 << 14
+        c0 = rng.integers(0, q0, size=m, dtype=np.uint64)
+        c1 = rng.integers(0, q1, size=m, dtype=np.uint64)
+        # df32 path (pure uint32)
+        s, hi, lo = rns.crt2_centered_u32(
+            jnp.asarray(c0.astype(np.uint32)),
+            jnp.asarray(c1.astype(np.uint32)), q0, q1)
+        d = rns.centered_to_df(s, hi, lo, inv)
+        dhi, dlo = np.asarray(d.hi), np.asarray(d.lo)
+        # oracle path: exact CRT -> centered int -> fl64 -> f32 split
+        Q = q0 * q1
+        g0 = pow(Q // q0, -1, q0)
+        g1 = pow(Q // q1, -1, q1)
+        v = (c0.astype(object) * g0 % q0 * (Q // q0)
+             + c1.astype(object) * g1 % q1 * (Q // q1)) % Q
+        v = np.where(v > Q // 2, v - Q, v)
+        fl = np.array([float(x) for x in v]) * float(inv)
+        ohi = fl.astype(np.float32)
+        olo = (fl - ohi.astype(np.float64)).astype(np.float32)
+        # hi planes never split
+        assert np.array_equal(dhi, ohi), profile
+        # lo divergence bounded relative to the sample magnitude
+        diff = np.abs((dhi.astype(np.float64) + dlo.astype(np.float64))
+                      - (ohi.astype(np.float64) + olo.astype(np.float64)))
+        mag = np.abs(fl) + 2.0 ** -db
+        assert float(np.max(diff / mag)) < 2.0 ** -43, profile
+        # worst divergent samples: df32 collapse vs the EXACT value
+        iv = Fraction(1, 1 << db)
+        for i in np.argsort(-diff / mag)[:16]:
+            ex = Fraction(int(v[i])) * iv
+            err = abs(Fraction(float(dhi[i])) + Fraction(float(dlo[i])) - ex)
+            sc = Fraction(2) ** (int(v[i]).bit_length() - db)
+            assert err / sc < Fraction(2) ** -44, (profile, int(i))
+
+
+# ---------------------------------------------------------------------------
+# wire round-trip: the evaluation-key broadcast
+# ---------------------------------------------------------------------------
+
+
+def test_eval_keys_wire_roundtrip(tiny_device_client, srv_eval_keys):
+    from repro.fhe_client.service import wire
+    buf = wire.serialize_evaluation_keys(srv_eval_keys)
+    assert buf == wire.serialize_evaluation_keys(srv_eval_keys)  # determin.
+    assert wire.payload_kind(buf) == wire.KIND_EVAL_KEYS
+    back = wire.deserialize_evaluation_keys(buf)
+    assert back.n == srv_eval_keys.n
+    assert back.n_limbs == srv_eval_keys.n_limbs
+    assert back.special_q == srv_eval_keys.special_q
+    assert back.rotations == srv_eval_keys.rotations
+    assert bool(jnp.all(back.relin.b_mont == srv_eval_keys.relin.b_mont))
+    assert bool(jnp.all(back.relin.a_mont == srv_eval_keys.relin.a_mont))
+    for r in srv_eval_keys.rotations:
+        assert bool(jnp.all(back.rot[r].b_mont
+                            == srv_eval_keys.rot[r].b_mont))
+
+
+def test_eval_keys_are_evaluation_material_only(srv_eval_keys):
+    """Structural security pin: the broadcast holds only (b, a) RLWE pairs
+    — uniform-looking uint32 NTT residues, never small/ternary data (a
+    serialized secret key would be recognisably sparse)."""
+    for ksk in [srv_eval_keys.relin] + list(srv_eval_keys.rot.values()):
+        for plane in (ksk.b_mont, ksk.a_mont):
+            arr = np.asarray(plane)
+            assert arr.dtype == np.uint32
+            # ternary/small material would concentrate mass near 0 and q
+            frac_small = np.mean(arr < 1024)
+            assert frac_small < 0.01
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: encrypted linear layer + degree-3 activation (fast geometry)
+# ---------------------------------------------------------------------------
+
+
+def test_e2e_encrypted_linear_poly3(tinyboot_client, tinyboot_ev):
+    """The secure_inference --encrypted flow at the tinyboot geometry:
+    matvec (hoisted rotations, accumulate-then-rescale) + Horner poly3 —
+    4 levels — matches the plaintext model within the e2e budget, through
+    the wire format, on the DEVICE datapath."""
+    from repro.fhe_client.service import wire
+    client = tinyboot_client
+    ctx = client.ctx
+    ev = tinyboot_ev
+    d = 4
+    rng = np.random.default_rng(31)
+    xv = rng.standard_normal(d) * 0.5
+    w = rng.standard_normal((d, d)) * 0.4
+    bias = rng.standard_normal(d) * 0.3
+    poly = (0.1, 0.5, -0.2, 0.05)
+
+    z = inf.replicate_slots(xv, ctx.params.n_slots)
+    ct_up = wire.serialize_ciphertext_batch(client.encode_encrypt_batch(
+        z[None]))
+    # the evaluation-key broadcast survives the wire bit-exactly, so
+    # evaluating with the session evaluator == evaluating with the
+    # deserialized copy (one shared jit cache instead of recompiling)
+    ek = wire.deserialize_evaluation_keys(
+        wire.serialize_evaluation_keys(ev.keys))
+    assert bool(jnp.all(ek.relin.b_mont == ev.keys.relin.b_mont))
+    assert ek.rotations == ev.keys.rotations
+
+    x_ct = ServerCiphertext.from_batch(
+        wire.deserialize_ciphertext_batch(ct_up)).drop_to(6)
+    y_ct = inf.encrypted_linear_poly3(ev, x_ct, w, bias, poly)
+    assert y_ct.level == 2
+    down = wire.serialize_ciphertext_batch(y_ct.to_batch())
+
+    got = np.asarray(client.decrypt_batch(
+        list(wire.deserialize_ciphertext_batch(down))))[0].real[:d]
+    ref = inf.reference_linear_poly3(xv, w, bias, poly)
+    err = float(np.max(np.abs(got - ref)))
+    assert err < NOISE_BUDGET["e2e_linear_poly3"], err
+
+
+def test_matvec_alone_exact_scale(tinyboot_client, tinyboot_ev):
+    """The diagonal-method matvec consumes exactly one level and returns
+    the input scale exactly (diagonals encoded at the dropped prime)."""
+    client = tinyboot_client
+    ctx = client.ctx
+    ev = tinyboot_ev
+    d = 4
+    rng = np.random.default_rng(33)
+    xv = rng.standard_normal(d) * 0.5
+    w = rng.standard_normal((d, d)) * 0.5
+    x_ct = _enc(client, inf.replicate_slots(xv, ctx.params.n_slots))
+    x_ct = x_ct.drop_to(6)
+    y = inf.encrypted_matvec(ev, x_ct, w)
+    assert y.level == x_ct.level - 1
+    assert y.scale == x_ct.scale                 # exact
+    got = np.asarray(client.decrypt_batch(list(y.to_batch())))[0].real[:d]
+    assert np.max(np.abs(got - w @ xv)) < 2.0 ** -10
+
+
+# ---------------------------------------------------------------------------
+# nightly sweeps: server/boot presets
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_server_preset_ops_sweep():
+    """Homomorphism at the `server` preset (N=2^10, 8 limbs): the fast
+    lane's tiny-geometry budgets hold at real ring degree too."""
+    from repro.fhe_client.client import FHEClient
+    client = FHEClient(profile="server", pipeline="staged", datapath="f64")
+    ctx = client.ctx
+    rng = np.random.default_rng(41)
+    za = rng.uniform(-1, 1, ctx.params.n_slots)
+    zb = rng.uniform(-1, 1, ctx.params.n_slots)
+    keys = client.make_evaluation_keys(rotations=(1,))
+    ev = ServerEvaluator(ctx, keys)
+    x, y = _enc(client, za), _enc(client, zb)
+    x, y = x.drop_to(4), y.drop_to(4)            # bound compile cost
+    assert np.max(np.abs(_dec(client, ev.add_ct(x, y))[0] - (za + zb))) \
+        < 2.0 ** -15
+    assert np.max(np.abs(_dec(client, ev.mul_ct(x, y))[0] - za * zb)) \
+        < 2.0 ** -13
+    assert np.max(np.abs(_dec(client, ev.rotate(x, 1))[0]
+                         - np.roll(za, -1))) < 2.0 ** -14
+
+
+@pytest.mark.slow
+def test_boot_preset_drop_to_eval():
+    """Bootstrappable preset (N=2^16, 24 limbs): mod-switch down and run
+    one multiply + rotate at depth — the deep-L path stays correct."""
+    from repro.fhe_client.client import FHEClient
+    client = FHEClient(profile="boot", pipeline="staged", datapath="f64")
+    ctx = client.ctx
+    rng = np.random.default_rng(43)
+    za = rng.uniform(-1, 1, ctx.params.n_slots)
+    keys = client.make_evaluation_keys(rotations=(1,))
+    ev = ServerEvaluator(ctx, keys)
+    x = _enc(client, za).drop_to(3)
+    m = ev.mul_ct(x, x)
+    assert m.level == 2
+    assert np.max(np.abs(_dec(client, m)[0] - za * za)) < 2.0 ** -12
+    r = ev.rotate(x, 1)
+    assert np.max(np.abs(_dec(client, r)[0] - np.roll(za, -1))) < 2.0 ** -13
