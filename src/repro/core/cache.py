@@ -1,0 +1,104 @@
+"""Content-keyed bounded LRU caches for derived CKKS/NTT state.
+
+Until ISSUE 8 every memo of derived per-plan state (``kernels.common.
+plan_consts``/``stacked_kernel_consts``, ``core.ntt.stack_plans``,
+``kernels.server_eval.server_consts``) was keyed by ``id(plan)`` WITHOUT
+holding a reference to the keyed plan, and the memos were unbounded.
+Under the multi-tenant registry (bounded context cache + LRU-evicted
+clients) plans actually die; CPython reuses freed ids aggressively for
+same-type objects, so a stale ``id``-keyed entry can serve *another
+plan's* NTT constants — silently wrong ciphertexts. The regression test
+(tests/test_multi_tenant.py::test_plan_consts_survives_gc_id_reuse)
+forces exactly that id reuse.
+
+The fix is structural, shared here:
+
+  * ``plan_key(plan)`` — a plan's CONTENT key ``(q, n)``. ``make_plan``
+    is a pure deterministic function of ``(prime, n)`` and ``NTTPrime``
+    is itself derived deterministically from ``q`` (the eq.(8) search),
+    so two plans with equal ``(q, n)`` hold identical tables: content
+    equality is exact, and a content key can never serve another plan's
+    constants, whatever the allocator does with ids.
+  * ``LRUCache`` — a small bounded mapping (``OrderedDict`` LRU) so
+    parameter sweeps (the workload matrix, the property grids) retain a
+    bounded working set instead of growing forever.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable
+
+
+def plan_key(plan) -> tuple[int, int]:
+    """Content key of an NTTPlan: ``(q, N)`` determines every derived
+    constant (see module docstring)."""
+    return (int(plan.prime.q), int(plan.n))
+
+
+def plans_key(plans) -> tuple[tuple[int, int], ...]:
+    """Content key of an ordered plan stack."""
+    return tuple(plan_key(p) for p in plans)
+
+
+class LRUCache:
+    """Bounded content-keyed memo: ``get_or_build(key, build)`` with LRU
+    eviction past ``capacity``. An optional ``on_evict(key, value)`` hook
+    lets owners release dependent state."""
+
+    def __init__(self, capacity: int, on_evict: Callable | None = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._data: OrderedDict = OrderedDict()
+        self._on_evict = on_evict
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key) -> bool:
+        return key in self._data
+
+    def get(self, key, default=None):
+        if key in self._data:
+            self._data.move_to_end(key)
+            return self._data[key]
+        return default
+
+    def get_or_build(self, key, build: Callable):
+        if key in self._data:
+            self._data.move_to_end(key)
+            return self._data[key]
+        value = build()
+        self.put(key, value)
+        return value
+
+    def put(self, key, value) -> None:
+        self._data[key] = value
+        self._data.move_to_end(key)
+        self._trim()
+
+    def pop(self, key, default=None):
+        return self._data.pop(key, default)
+
+    def set_capacity(self, capacity: int) -> int:
+        """Change the bound (evicting down if needed); returns the old."""
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        old, self.capacity = self.capacity, int(capacity)
+        self._trim()
+        return old
+
+    def _trim(self) -> None:
+        while len(self._data) > self.capacity:
+            key, value = self._data.popitem(last=False)
+            self.evictions += 1
+            if self._on_evict is not None:
+                self._on_evict(key, value)
+
+    def clear(self) -> None:
+        self._data.clear()
+
+    def keys(self):
+        return list(self._data.keys())

@@ -9,10 +9,10 @@ encryption at 24 limbs, server returns 2-limb ciphertexts.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import numpy as np
 
+from repro.core import cache
 from repro.core import ntt as nttmod
 from repro.core.primes import NTTPrime, find_ntt_friendly_primes
 
@@ -147,13 +147,41 @@ class CKKSContext:
         return 3 * self.params.n_limbs * self.n * 4
 
 
-@functools.lru_cache(maxsize=None)
+# Bounded context cache (ISSUE 8). This was `lru_cache(maxsize=None)`:
+# under a parameter sweep (the workload matrix, the property grids, a
+# multi-tenant service cycling presets) every context — prime search, NTT
+# plans, twiddle tables — was retained forever. The cache is now a real
+# LRU: live holders (FHEClient.ctx, evaluators) keep their context working
+# after eviction (derived-constant memos are content-keyed, so nothing
+# dangles); only re-REQUESTING an evicted parameter set rebuilds.
+_CONTEXT_CACHE = cache.LRUCache(capacity=16)
+
+
 def context_for(params: CKKSParams) -> CKKSContext:
     """Context cache keyed by the (frozen, hashable) parameter set — named
     profiles and ad-hoc parameter grids (the property-test sweeps) share
     one memo, so repeated use of the same params never redoes the prime
-    search / plan construction."""
-    return CKKSContext(params)
+    search / plan construction. LRU-bounded; see
+    ``set_context_cache_capacity``."""
+    return _CONTEXT_CACHE.get_or_build(params, lambda: CKKSContext(params))
+
+
+def set_context_cache_capacity(capacity: int) -> int:
+    """Bound the context cache (evicting LRU entries down to ``capacity``
+    immediately); returns the previous capacity. The multi-tenant
+    ``KeyContextRegistry`` and the workload-matrix sweeps pin this so peak
+    context retention is asserted, not hoped for."""
+    return _CONTEXT_CACHE.set_capacity(capacity)
+
+
+def context_cache_len() -> int:
+    """Number of contexts currently retained by the cache."""
+    return len(_CONTEXT_CACHE)
+
+
+def context_cache_evictions() -> int:
+    """Total contexts evicted since process start (monotonic)."""
+    return _CONTEXT_CACHE.evictions
 
 
 def get_context(profile: str | CKKSParams = "paper") -> CKKSContext:

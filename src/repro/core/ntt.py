@@ -38,7 +38,7 @@ import functools
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import modmul
+from repro.core import cache, modmul
 from repro.core.modmul import MontgomeryConstants
 from repro.core.primes import NTTPrime, primitive_2nth_root
 
@@ -98,7 +98,11 @@ class NTTPlan:
         return self.psi_brv_mont.nbytes + self.psi_inv_brv_mont.nbytes
 
 
-@functools.lru_cache(maxsize=None)
+# Bounded (ISSUE 8): a parameter sweep must retain a bounded plan working
+# set, not every (prime, N) it ever touched — at N=2^16 one plan holds ~1 MB
+# of full twiddle tables. Derived-constant memos are content-keyed
+# (``cache.plan_key``), so eviction + rebuild is always safe.
+@functools.lru_cache(maxsize=128)
 def make_plan(prime: NTTPrime, n: int) -> NTTPlan:
     q = prime.q
     logn = n.bit_length() - 1
@@ -233,13 +237,16 @@ class StackedPlans:
         return arr_1d.reshape((self.n_limbs,) + (1,) * (ndim - 1))
 
 
-_STACKED_MEMO: dict[tuple[int, ...], StackedPlans] = {}
+_STACKED_MEMO = cache.LRUCache(capacity=16)
 
 
 def stack_plans(plans) -> StackedPlans:
-    """Memoised by plan identities (plans come from the lru-cached
-    ``make_plan``, so identity is stable per (prime, N))."""
-    key = tuple(id(p) for p in plans)
+    """Memoised by plan CONTENT ((q, N) per limb — ``cache.plan_key``),
+    LRU-bounded: id-keyed entries could outlive their plans and serve a
+    *different* plan's tables after id reuse (ISSUE 8), and the stacked
+    twiddle tables are the largest derived state a parameter sweep
+    retains."""
+    key = cache.plans_key(plans)
     cached = _STACKED_MEMO.get(key)
     if cached is not None:
         return cached
@@ -256,7 +263,7 @@ def stack_plans(plans) -> StackedPlans:
         psi_brv_mont=np.stack([p.psi_brv_mont for p in plans]),
         psi_inv_brv_mont=np.stack([p.psi_inv_brv_mont for p in plans]),
     )
-    _STACKED_MEMO[key] = sp
+    _STACKED_MEMO.put(key, sp)
     return sp
 
 

@@ -93,7 +93,7 @@ def _signed_power_sums(max_exp: int, n_terms: int):
                 yield k, tuple(zip(signs, exps))
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=64)
 def find_ntt_friendly_primes(
     p_bw: int = 30,
     n_plus_1: int = 17,

@@ -121,7 +121,12 @@ class FHEClient:
         self.datapath = datapath
         if datapath == "df32":
             encoder._check_pow2_delta(self.ctx.params.delta)
-        sk, pk = encryptor.keygen(self.ctx, seed=seed)
+        # The client's PRNG seed keys BOTH keygen and every encryption's
+        # (v, e0, e1) Philox streams. Distinct co-resident tenants MUST get
+        # distinct seeds (tenancy.tenant_seed) or they'd draw mask/error
+        # polynomials from the same streams — see fhe_client.tenancy.
+        self.seed = int(seed) if seed is not None else self.ctx.params.seed
+        sk, pk = encryptor.keygen(self.ctx, seed=self.seed)
         self.keys = ClientKeys(sk, pk)
         self._nonce = 0
         # jit-compiled device cores (shape-polymorphic via retrace-per-B;
@@ -191,7 +196,8 @@ class FHEClient:
         residues = encoder.coeffs_to_plaintext_data(coeffs, ctx, L)
         pt = jnp.swapaxes(residues, 0, 1)                 # (B, L, N)
         return kops.encrypt_fused(pt, self.keys.pk.b_mont,
-                                  self.keys.pk.a_mont, ctx, nonce0=nonce0)
+                                  self.keys.pk.a_mont, ctx, seed=self.seed,
+                                  nonce0=nonce0)
 
     def _decrypt_core_impl(self, c0, c1):
         """(B, 2, N) ciphertext stacks -> exact df64 CRT coefficients.
@@ -216,7 +222,8 @@ class FHEClient:
         residues = encoder.coeffs_to_plaintext_data(coeffs, ctx, L)
         pt = jnp.swapaxes(residues, 0, 1)                 # (B, L, N)
         return kops.encrypt_fused(pt, self.keys.pk.b_mont,
-                                  self.keys.pk.a_mont, ctx, nonce0=nonce0)
+                                  self.keys.pk.a_mont, ctx, seed=self.seed,
+                                  nonce0=nonce0)
 
     def _decrypt_core_dev_impl(self, c0, c1, scale):
         """(B, 2, N) ciphertext stacks -> (B, n_slots) f64 (re, im) slot
@@ -251,7 +258,8 @@ class FHEClient:
                                                  ctx.q_list[:L])  # (L, B, N)
         pt = jnp.swapaxes(kops.ntt_limbs(residues, ctx), 0, 1)    # (B, L, N)
         return kops.encrypt_fused(pt, self.keys.pk.b_mont,
-                                  self.keys.pk.a_mont, ctx, nonce0=nonce0)
+                                  self.keys.pk.a_mont, ctx, seed=self.seed,
+                                  nonce0=nonce0)
 
     def _decrypt_core_dev32_impl(self, c0, c1, scale):
         """(B, 2, N) ciphertext stacks -> four (B, n_slots) f32 decoded
@@ -275,7 +283,7 @@ class FHEClient:
         with the f32/u32 interior — nothing but the kernel in the trace."""
         return kops.encode_encrypt_stream(
             (rh, rl, ih, il), self.keys.pk.b_mont, self.keys.pk.a_mont,
-            self.ctx, nonce0=nonce0, datapath="df32")
+            self.ctx, seed=self.seed, nonce0=nonce0, datapath="df32")
 
     def _decrypt_core_mega32_impl(self, c0, c1, scale):
         """Megakernel decrypt+decode, df32 interior: ONE pallas_call in,
@@ -293,7 +301,7 @@ class FHEClient:
         z = dfl.dfc_from_parts(re, im)
         return kops.encode_encrypt_stream(
             dfl.dfc_to_planes(z), self.keys.pk.b_mont, self.keys.pk.a_mont,
-            self.ctx, nonce0=nonce0)
+            self.ctx, seed=self.seed, nonce0=nonce0)
 
     def _decrypt_core_mega_impl(self, c0, c1, scale):
         """(B, 2, N) ciphertext stacks -> (B, n_slots) f64 (re, im) slot

@@ -26,11 +26,15 @@ from repro.fhe_client.service.scheduler import (DispatchRecord,
                                                 DualStreamScheduler,
                                                 StreamExecutor)
 from repro.fhe_client.service.service import ClientService, QueueFull
+from repro.fhe_client.tenancy import (KeyContextRegistry, NonceLease,
+                                      NonceLedger, TenantSession,
+                                      tenant_seed)
 
 __all__ = [
     "AllStreamsFailed", "ClientService", "CoalescingBatcher",
     "DEFAULT_BUCKETS", "DecJob", "DispatchRecord", "DualStreamScheduler",
-    "EncJob", "EventLog", "FaultInjector", "FaultSpec", "QueueFull",
+    "EncJob", "EventLog", "FaultInjector", "FaultSpec",
+    "KeyContextRegistry", "NonceLease", "NonceLedger", "QueueFull",
     "Request", "RequestFailed", "ServiceEvent", "StreamFault",
-    "StreamExecutor", "wire",
+    "StreamExecutor", "TenantSession", "tenant_seed", "wire",
 ]

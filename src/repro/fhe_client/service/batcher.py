@@ -40,11 +40,15 @@ DEFAULT_BUCKETS = (1, 2, 4, 8, 16)
 @dataclasses.dataclass(frozen=True)
 class Request:
     """One queued client op. ``payload``: (n_slots,) complex message for
-    'enc'; (c0 (2, N), c1 (2, N), scale) for 'dec'."""
+    'enc'; (c0 (2, N), c1 (2, N), scale) for 'dec'. ``tenant`` is the
+    lane key — ``(tenant_id, CKKSParams)`` under a multi-tenant service,
+    None for the anonymous single-tenant default — and is an isolation
+    boundary: coalescing refuses to mix lanes in one bucket."""
     rid: int
     kind: str                    # 'enc' | 'dec'
     payload: object
     t_submit: float
+    tenant: object = None        # lane key; None = default tenant
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +59,7 @@ class EncJob:
     rids: tuple                  # request ids of the len(rids) real rows
     t_submits: tuple             # submit timestamp per real row
     kind: str = "enc"
+    tenant: object = None        # lane key this whole bucket belongs to
 
     @property
     def bucket(self) -> int:
@@ -73,6 +78,7 @@ class DecJob:
     rids: tuple
     t_submits: tuple
     kind: str = "dec"
+    tenant: object = None        # lane key this whole bucket belongs to
 
     @property
     def bucket(self) -> int:
@@ -125,13 +131,29 @@ class CoalescingBatcher:
             take = min(len(queue), self.max_bucket)
             yield [queue.popleft() for _ in range(take)]
 
+    @staticmethod
+    def _check_lane(reqs, tenant):
+        """Every request drained into one bucket must belong to the lane
+        being coalesced — a bucket is one kernel launch under ONE tenant's
+        keys and nonce lease, so cross-tenant mixing is an isolation
+        violation, not a batching inefficiency. Raises instead of
+        splitting: a mixed queue means the admission layer is broken."""
+        for r in reqs:
+            if r.tenant != tenant:
+                raise ValueError(
+                    f"cross-tenant coalesce: request {r.rid} belongs to "
+                    f"lane {r.tenant!r} but this queue drains lane "
+                    f"{tenant!r} — buckets never mix tenants or parameter "
+                    f"sets")
+
     def coalesce_enc(self, queue: deque, nonce0: int, n_slots: int,
-                     allow_partial: bool = True):
+                     allow_partial: bool = True, tenant=None):
         """Drain an encrypt queue into EncJobs. Returns (jobs, n_nonces):
         the caller reserves ``n_nonces`` consecutive nonces at ``nonce0``
-        (padded rows included)."""
+        from the LANE's client (padded rows included)."""
         jobs, used = [], 0
         for reqs in self._drain(queue, allow_partial):
+            self._check_lane(reqs, tenant)
             b = self.bucket_for(len(reqs))
             msgs = np.zeros((b, n_slots), np.complex128)
             for i, r in enumerate(reqs):
@@ -139,16 +161,19 @@ class CoalescingBatcher:
             jobs.append(EncJob(
                 messages=msgs, nonce0=nonce0 + used,
                 rids=tuple(r.rid for r in reqs),
-                t_submits=tuple(r.t_submit for r in reqs)))
+                t_submits=tuple(r.t_submit for r in reqs),
+                tenant=tenant))
             used += b
         return jobs, used
 
-    def coalesce_dec(self, queue: deque, allow_partial: bool = True):
+    def coalesce_dec(self, queue: deque, allow_partial: bool = True,
+                     tenant=None):
         """Drain a decrypt queue into DecJobs. Tail padding repeats the
         first real row (any valid ciphertext row works — padded outputs
         are dropped at demux)."""
         jobs = []
         for reqs in self._drain(queue, allow_partial):
+            self._check_lane(reqs, tenant)
             b = self.bucket_for(len(reqs))
             rows = [r.payload for r in reqs]
             rows += [rows[0]] * (b - len(rows))
@@ -164,7 +189,8 @@ class CoalescingBatcher:
                                     scale=float(rows[0][2])),
                 scales=scales,
                 rids=tuple(r.rid for r in reqs),
-                t_submits=tuple(r.t_submit for r in reqs)))
+                t_submits=tuple(r.t_submit for r in reqs),
+                tenant=tenant))
         return jobs
 
 

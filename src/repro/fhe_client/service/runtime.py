@@ -144,15 +144,16 @@ class DispatchLoop:
     # --- dispatch thread ----------------------------------------------------
 
     def _fire_decision_locked(self):
-        """(fire_enc, fire_dec, partial_enc, partial_dec, next_wait):
-        which queues should dispatch now, whether partial tails are
-        included, and how long to sleep if neither fires."""
+        """Per-queue firing decisions: {(lane, kind): (fire, partial)} over
+        every tenant lane, plus how long to sleep if nothing fires. Each
+        lane's queues are judged independently — one tenant's full bucket
+        fires immediately even while another's partial tail is still
+        waiting out its deadline."""
         svc = self.service
         t = now()
         full = svc.batcher.max_bucket
         decision, waits = {}, []
-        for kind in ("enc", "dec"):
-            q = svc._queues[kind]
+        for key, q in svc._queues.items():
             age = oldest_age(q, t)
             fire = policy.ready_to_fire(len(q), age, full, svc.max_wait_s,
                                         svc.fire_mode)
@@ -161,13 +162,13 @@ class DispatchLoop:
             partial = fire and (len(q) < full
                                 or svc.fire_mode == "eager"
                                 or age >= svc.max_wait_s)
-            decision[kind] = (fire, partial)
+            decision[key] = (fire, partial)
             if q and not fire and svc.fire_mode == "deadline":
                 waits.append(max(svc.max_wait_s - age, 0.0))
         if self._drain_req:
-            for kind in ("enc", "dec"):
-                if svc._queues[kind]:
-                    decision[kind] = (True, True)
+            for key, q in svc._queues.items():
+                if q:
+                    decision[key] = (True, True)
         next_wait = min(waits) if waits else None
         return decision, next_wait
 
@@ -187,11 +188,7 @@ class DispatchLoop:
                 if self._stop_req and not any(svc._queues.values()):
                     break
                 draining = self._drain_req
-                (fire_e, part_e) = decision["enc"]
-                (fire_d, part_d) = decision["dec"]
-                enc_jobs, dec_jobs = svc._coalesce_locked(
-                    fire_enc=fire_e, fire_dec=fire_d,
-                    allow_partial=part_e, allow_partial_dec=part_d)
+                enc_jobs, dec_jobs = svc._coalesce_locked(decision)
             # --- outside _cond: record fire events + launch ---------------
             for jobs, kind in ((enc_jobs, "enc"), (dec_jobs, "dec")):
                 for job in jobs:

@@ -57,27 +57,57 @@ class DispatchRecord:
 
 
 class StreamExecutor:
-    """One execution stream (device group) running the client cores."""
+    """One execution stream (device group) running the client cores.
 
-    def __init__(self, client, devices, index: int):
+    Multi-tenant: ``client_for`` maps a job's lane key to that tenant's
+    client; a lane of None is the anonymous default ``client``. Sharded
+    cores are cached ON the tenant's client object (keyed by this
+    stream's device ids), NOT in an executor-side table keyed by
+    ``id(client)`` — an id-keyed table would recreate exactly the
+    GC/id-reuse staleness this PR fixes, and an executor-held strong
+    reference would keep evicted tenants' compiled cores (and key
+    material) alive past registry eviction. Cores die with the client.
+    """
+
+    def __init__(self, client, devices, index: int, client_for=None):
         self.client = client
+        self._client_for = client_for
         self.devices = tuple(devices)
         self.index = index
         self.n_shards = len(self.devices)
         if self.n_shards > 1:
             self.mesh = shd.stream_mesh(self.devices)
-            self._enc = self._sharded_enc_core()
-            self._dec = self._sharded_dec_core()
+            # warm the default tenant's cache eagerly (construction-time
+            # trace, matching the single-tenant behaviour tests pin)
+            self._cores_for(client)
         else:
             self.mesh = None
-            self._enc = self.client.encrypt_core
-            self._dec = self.client.decrypt_core
+
+    def resolve(self, job):
+        """The client whose keys/nonce lease this job runs under."""
+        if job.tenant is None or self._client_for is None:
+            return self.client
+        return self._client_for(job.tenant)
+
+    def _cores_for(self, client):
+        """(enc, dec) cores for one tenant's client on this stream's
+        devices, built on first use and cached on the client itself."""
+        if self.n_shards == 1:
+            return client.encrypt_core, client.decrypt_core
+        table = client.__dict__.setdefault("_stream_sharded_cores", {})
+        key = tuple(d.id for d in self.devices)
+        cores = table.get(key)
+        if cores is None:
+            cores = (self._sharded_enc_core(client),
+                     self._sharded_dec_core(client))
+            table[key] = cores
+        return cores
 
     # --- shard_map'ed cores (multi-device groups) ---------------------------
 
-    def _sharded_enc_core(self):
-        impl = self.client.encrypt_impl
-        n_ops = self.client.n_encrypt_operands
+    def _sharded_enc_core(self, client):
+        impl = client.encrypt_impl
+        n_ops = client.n_encrypt_operands
 
         def local(*args):
             *ops, n0 = args
@@ -88,8 +118,8 @@ class StreamExecutor:
             in_specs=(P("batch"),) * n_ops + (P(),),
             out_specs=P("batch"), check_rep=False))
 
-    def _sharded_dec_core(self):
-        impl = self.client.decrypt_impl
+    def _sharded_dec_core(self, client):
+        impl = client.decrypt_impl
 
         def local(c0, c1, scale):
             return impl(c0, c1, scale)
@@ -110,14 +140,22 @@ class StreamExecutor:
     # --- launches (async: no blocking here) ---------------------------------
 
     def launch(self, job):
+        client = self.resolve(job)
+        enc, dec = self._cores_for(client)
         if isinstance(job, EncJob):
-            ops = self.client.encrypt_operands(job.messages)
-            return self._enc(*[self._place(o) for o in ops],
-                             jnp.uint32(job.nonce0))
+            if job.messages.shape[1] != client.ctx.params.n_slots:
+                raise ValueError(
+                    f"tenant-purity violation: job for lane {job.tenant!r} "
+                    f"carries {job.messages.shape[1]}-slot messages but the "
+                    f"lane's parameter set has n_slots="
+                    f"{client.ctx.params.n_slots}")
+            ops = client.encrypt_operands(job.messages)
+            return enc(*[self._place(o) for o in ops],
+                       jnp.uint32(job.nonce0))
         assert isinstance(job, DecJob)
-        return self._dec(self._place(job.cts.c0),
-                         self._place(job.cts.c1),
-                         self._place(jnp.asarray(job.scales)))
+        return dec(self._place(job.cts.c0),
+                   self._place(job.cts.c1),
+                   self._place(jnp.asarray(job.scales)))
 
 
 class DualStreamScheduler:
@@ -134,10 +172,11 @@ class DualStreamScheduler:
     """
 
     def __init__(self, client, devices=None, n_streams: int | None = None,
-                 oversubscribe: bool = False, faults=None, events=None):
+                 oversubscribe: bool = False, faults=None, events=None,
+                 client_for=None):
         groups = shd.stream_groups(devices, n_streams,
                                    oversubscribe=oversubscribe)
-        self.streams = [StreamExecutor(client, g, i)
+        self.streams = [StreamExecutor(client, g, i, client_for=client_for)
                         for i, g in enumerate(groups)]
         self.faults = faults
         self.events = events if events is not None else EventLog()

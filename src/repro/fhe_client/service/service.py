@@ -48,6 +48,7 @@ import numpy as np
 import jax
 
 from repro.core import scheduler as policy
+from repro.core.context import CKKSParams, PROFILES
 from repro.core.encryptor import Ciphertext, CiphertextBatch
 from repro.distributed.elastic import FleetMonitor
 from repro.fhe_client.client import FHEClient
@@ -57,6 +58,7 @@ from repro.fhe_client.service.batcher import (CoalescingBatcher,
 from repro.fhe_client.service.faults import (AllStreamsFailed, EventLog,
                                              RequestFailed)
 from repro.fhe_client.service.scheduler import DualStreamScheduler
+from repro.fhe_client.tenancy import KeyContextRegistry
 
 
 class QueueFull(RuntimeError):
@@ -97,7 +99,9 @@ class ClientService:
                  backpressure: str = "block", submit_timeout_s: float = 1.0,
                  max_wait_s: float = 0.005, fire_mode: str = "deadline",
                  job_timeout_s: float | None = None,
-                 straggler_factor: float = 4.0, straggler_patience: int = 2):
+                 straggler_factor: float = 4.0, straggler_patience: int = 2,
+                 registry: KeyContextRegistry | None = None,
+                 tenant_capacity: int = 4):
         if backpressure not in ("block", "reject"):
             raise ValueError(f"backpressure must be 'block' or 'reject', "
                              f"got {backpressure!r}")
@@ -105,10 +109,20 @@ class ClientService:
             raise ValueError(f"fire_mode must be one of "
                              f"{policy.FIRE_MODES}, got {fire_mode!r}")
         self.client = client if client is not None else FHEClient(profile)
+        # Multi-tenant key contexts: named tenants resolve through the
+        # registry (derived seeds, per-tenant nonce counters, LRU-bounded
+        # compiled cores). The anonymous default tenant (lane None) is
+        # ALWAYS self.client, never registry-managed: the caller's instance
+        # — its seed, fourier/pipeline config and nonce state — must not be
+        # silently rebuilt by an eviction. Default-lane leases still go
+        # through the shared ledger, so overlap with any tenant is caught.
+        self.registry = registry if registry is not None \
+            else KeyContextRegistry(capacity=tenant_capacity)
         self.events = EventLog(clock=now)
         self.scheduler = DualStreamScheduler(
             self.client, devices=devices, n_streams=n_streams,
-            oversubscribe=oversubscribe, faults=faults, events=self.events)
+            oversubscribe=oversubscribe, faults=faults, events=self.events,
+            client_for=self._client_for)
         self.batcher = CoalescingBatcher(
             buckets, pad_multiple=self.scheduler.pad_multiple)
         self.monitor = FleetMonitor(
@@ -127,7 +141,13 @@ class ClientService:
         # all request state is guarded by one condition (submitters, the
         # dispatch loop and the completion thread all touch it)
         self._cond = threading.Condition()
-        self._queues = {"enc": deque(), "dec": deque()}
+        # queues are LANE-keyed: (lane, kind) -> deque, lane = None for the
+        # default tenant or (tenant_id, CKKSParams) for a named one. A
+        # bucket only ever drains ONE queue, so buckets never mix tenants
+        # or parameter sets by construction (and the batcher re-checks).
+        self._queues: dict[tuple, deque] = {(None, "enc"): deque(),
+                                            (None, "dec"): deque()}
+        self._rr_offset = 0           # round-robin cursor over lanes
         self._results: dict[int, object] = {}
         self._failures: dict[int, RequestFailed] = {}
         self._latencies: dict[int, float] = {}
@@ -183,16 +203,57 @@ class ClientService:
             raise RuntimeError("service dispatch loop crashed") \
                 from loop.crashed
 
+    # --- tenant lanes -------------------------------------------------------
+
+    def _resolve_lane(self, tenant, params):
+        """(lane, CKKSParams) for a submit. ``tenant=None, params=None``
+        is the anonymous default lane (the caller-supplied client);
+        anything else is a registry-managed lane keyed by
+        (tenant_id, params) — params defaults to the service client's."""
+        if params is None:
+            p = self.client.ctx.params
+        elif isinstance(params, CKKSParams):
+            p = params
+        else:
+            p = PROFILES[params]
+        if tenant is None and p == self.client.ctx.params:
+            return None, p
+        return (tenant, p), p
+
+    def _client_for(self, lane):
+        """The FHEClient a lane's jobs run under (builds/readmits the
+        tenant session through the registry for named lanes)."""
+        if lane is None:
+            return self.client
+        tenant_id, params = lane
+        return self.registry.get(tenant_id, params).client
+
+    def _take_nonces(self, lane, count: int) -> int:
+        """The single nonce authority: advance the lane client's counter
+        and record the lease in the shared ledger (overlap => raise)."""
+        if lane is None:
+            base = self.client.take_nonces(count)
+            self.registry.ledger.lease(self.client.seed, base, count)
+            return base
+        tenant_id, params = lane
+        return self.registry.take_nonces(tenant_id, params, count)
+
     # --- submission ---------------------------------------------------------
 
-    def _admit(self, kind: str, payload) -> int:
-        """Enqueue under the bounded-queue/backpressure policy."""
+    def _admit(self, kind: str, payload, lane=None) -> int:
+        """Enqueue under the bounded-queue/backpressure policy. Queues
+        (and their capacity bound) are per (lane, kind) — one tenant
+        saturating its lane never blocks another's submits."""
         self._check_loop()
+        key = (lane, kind)
         with self._cond:
+            q = self._queues.get(key)
+            if q is None:
+                q = self._queues[key] = deque()
             cap = self.queue_capacity
             if cap is not None:
                 if self.backpressure == "reject":
-                    if len(self._queues[kind]) >= cap:
+                    if len(q) >= cap:
                         self.events.record("reject", detail=f"{kind} queue "
                                            f"at capacity {cap}")
                         raise QueueFull(
@@ -200,7 +261,7 @@ class ClientService:
                             f"(backpressure='reject')")
                 else:
                     deadline = now() + self.submit_timeout_s
-                    while len(self._queues[kind]) >= cap:
+                    while len(q) >= cap:
                         remaining = deadline - now()
                         if remaining <= 0 or not self.running:
                             self.events.record(
@@ -213,22 +274,43 @@ class ClientService:
                         self._cond.wait(timeout=remaining)
             rid = self._next_rid
             self._next_rid += 1
-            self._queues[kind].append(
-                Request(rid=rid, kind=kind, payload=payload, t_submit=now()))
+            q.append(Request(rid=rid, kind=kind, payload=payload,
+                             t_submit=now(), tenant=lane))
             self._cond.notify_all()   # wake the dispatch loop
         return rid
 
-    def submit_encrypt(self, message) -> int:
-        """Queue one (n_slots,) complex message for encode+encrypt.
-        Returns the request id; the result is a ``Ciphertext`` row."""
-        msg = np.asarray(message, np.complex128).reshape(-1)
-        n_slots = self.client.ctx.params.n_slots
-        if msg.shape != (n_slots,):
-            raise ValueError(f"message must hold {n_slots} slots, "
-                             f"got shape {np.shape(message)}")
-        return self._admit("enc", msg)
+    def submit_encrypt(self, message, *, tenant=None, params=None) -> int:
+        """Queue one (n_slots,) complex message for encode+encrypt under
+        ``tenant``'s keys (None = the service's own client). Returns the
+        request id; the result is a ``Ciphertext`` row.
 
-    def submit_decrypt(self, ct) -> int:
+        Validation happens HERE, at the submit boundary (symmetric to
+        ``submit_decrypt``): a malformed message failing later inside a
+        dispatch would take the whole coalesced batch — and its reserved
+        nonces — down with it. Strict by design: no silent flatten, no
+        silent truncation, no NaN smuggled into a kernel launch."""
+        lane, p = self._resolve_lane(tenant, params)
+        msg = np.asarray(message)
+        if msg.ndim != 1:
+            raise ValueError(
+                f"message must be a 1-D (n_slots,) vector, got ndim="
+                f"{msg.ndim} shape {msg.shape} — batch submits go one "
+                f"message at a time (the batcher coalesces)")
+        if msg.shape[0] != p.n_slots:
+            raise ValueError(f"message must hold {p.n_slots} slots for "
+                             f"this lane's parameter set, got shape "
+                             f"{msg.shape}")
+        if not np.issubdtype(msg.dtype, np.number):
+            raise ValueError(
+                f"message dtype {msg.dtype} is not numeric — slot "
+                f"vectors are complex (or real) scalars")
+        msg = msg.astype(np.complex128)
+        if not (np.isfinite(msg.real).all() and np.isfinite(msg.imag).all()):
+            raise ValueError("message contains non-finite values (NaN/Inf "
+                             "cannot be CKKS-encoded)")
+        return self._admit("enc", msg, lane)
+
+    def submit_decrypt(self, ct, *, tenant=None, params=None) -> int:
         """Queue one server-returned ciphertext (``Ciphertext`` or a
         (c0, c1, scale) triple of (>=2, N) stacks) for decrypt+decode.
         Returns the request id; the result is an (n_slots,) complex row.
@@ -236,6 +318,7 @@ class ClientService:
         Validation happens HERE, at the submit boundary: a malformed
         payload failing later inside a dispatch would take the whole
         coalesced batch (and its reserved nonces) down with it."""
+        lane, p = self._resolve_lane(tenant, params)
         if isinstance(ct, Ciphertext):
             if ct.c1 is None:
                 raise ValueError("expand seeded ciphertexts "
@@ -250,7 +333,7 @@ class ClientService:
                     "submit_decrypt takes a Ciphertext or a (c0, c1, "
                     f"scale) triple, got {type(ct).__name__}") from None
             payload = (c0, c1, float(scale))
-        n = self.client.ctx.params.n
+        n = p.n
         shapes = {}
         for name, poly in (("c0", payload[0]), ("c1", payload[1])):
             shape = np.shape(poly)
@@ -272,30 +355,53 @@ class ClientService:
         if not np.isfinite(payload[2]) or payload[2] <= 0:
             raise ValueError(f"decrypt scale must be a positive finite "
                              f"number, got {payload[2]!r}")
-        return self._admit("dec", payload)
+        return self._admit("dec", payload, lane)
 
     # --- coalescing (shared by flush and the dispatch loop) -----------------
 
-    def _coalesce_locked(self, fire_enc=True, fire_dec=True,
-                         allow_partial=True, allow_partial_dec=True):
-        """Pop queued requests into jobs + reserve nonces. Caller holds
-        ``_cond``. ``fire_*`` gate each kind (the dispatch loop fires
-        queues independently); ``allow_partial*`` control whether a
-        trailing sub-bucket group dispatches or keeps waiting for its
-        deadline. Returns (enc_jobs, dec_jobs)."""
+    def _rr_queue_keys(self):
+        """Queue keys with the LANE order rotated by a round-robin cursor
+        (advanced once per coalesce pass), so under sustained multi-tenant
+        load no lane's buckets are systematically drained — and its jobs
+        launched — after everyone else's."""
+        lanes = []
+        for lane, _kind in self._queues:
+            if lane not in lanes:
+                lanes.append(lane)
+        if len(lanes) > 1:
+            off = self._rr_offset % len(lanes)
+            lanes = lanes[off:] + lanes[:off]
+        self._rr_offset += 1
+        return [(lane, kind) for lane in lanes for kind in ("enc", "dec")
+                if (lane, kind) in self._queues]
+
+    def _coalesce_locked(self, decision=None):
+        """Pop queued requests into jobs + reserve per-lane nonces. Caller
+        holds ``_cond``. ``decision`` maps queue key (lane, kind) ->
+        (fire, allow_partial); None fires everything, partial tails
+        included (the flush/drain path). Lanes drain in round-robin order;
+        each lane's jobs carry its own nonce lease from its own client.
+        Returns (enc_jobs, dec_jobs)."""
         enc_jobs, dec_jobs = [], []
-        if fire_enc:
-            enc_jobs, n_nonces = self.batcher.coalesce_enc(
-                self._queues["enc"], nonce0=0,
-                n_slots=self.client.ctx.params.n_slots,
-                allow_partial=allow_partial)
-            if n_nonces:
-                base = self.client.take_nonces(n_nonces)
-                enc_jobs = [dataclasses.replace(j, nonce0=base + j.nonce0)
-                            for j in enc_jobs]
-        if fire_dec:
-            dec_jobs = self.batcher.coalesce_dec(
-                self._queues["dec"], allow_partial=allow_partial_dec)
+        for key in self._rr_queue_keys():
+            lane, kind = key
+            fire, partial = (True, True) if decision is None \
+                else decision.get(key, (False, False))
+            if not fire or not self._queues[key]:
+                continue
+            if kind == "enc":
+                p = lane[1] if lane is not None else self.client.ctx.params
+                jobs, n_nonces = self.batcher.coalesce_enc(
+                    self._queues[key], nonce0=0, n_slots=p.n_slots,
+                    allow_partial=partial, tenant=lane)
+                if n_nonces:
+                    base = self._take_nonces(lane, n_nonces)
+                    jobs = [dataclasses.replace(j, nonce0=base + j.nonce0)
+                            for j in jobs]
+                enc_jobs += jobs
+            else:
+                dec_jobs += self.batcher.coalesce_dec(
+                    self._queues[key], allow_partial=partial, tenant=lane)
         self._inflight += sum(j.n_real for j in enc_jobs + dec_jobs)
         if enc_jobs or dec_jobs:
             self._cond.notify_all()   # queue space freed: wake submitters
@@ -333,13 +439,16 @@ class ClientService:
             self._cond.notify_all()
 
     def _demux(self, job, out):
-        """Materialized job output -> real result rows."""
+        """Materialized job output -> real result rows, under the job's
+        OWN lane client (a tenant's results decode with its parameter set
+        and scales, never the default client's)."""
+        client = self._client_for(job.tenant)
         if isinstance(job, EncJob):
             c0, c1 = out
-            p = self.client.ctx.params
+            p = client.ctx.params
             return [Ciphertext(c0=c0[i], c1=c1[i], n_limbs=p.n_limbs,
                                scale=p.delta) for i in range(job.n_real)]
-        msgs = self.client.decrypt_results(out, job.scales)
+        msgs = client.decrypt_results(out, job.scales)
         return [msgs[i] for i in range(job.n_real)]
 
     def _run_job(self, rec, job, out):
@@ -403,6 +512,15 @@ class ClientService:
     # --- execution (closed-loop mode) ---------------------------------------
 
     def pending(self) -> dict:
+        """Queued request counts aggregated by kind (all lanes)."""
+        with self._cond:
+            out = {"enc": 0, "dec": 0}
+            for (_lane, kind), q in self._queues.items():
+                out[kind] += len(q)
+            return out
+
+    def pending_by_lane(self) -> dict:
+        """Queued request counts per (lane, kind) queue."""
         with self._cond:
             return {k: len(q) for k, q in self._queues.items()}
 
@@ -419,7 +537,7 @@ class ClientService:
             with self._cond:
                 return self._completed_total - start_total
         with self._cond:
-            enc_jobs, dec_jobs = self._coalesce_locked(allow_partial=True)
+            enc_jobs, dec_jobs = self._coalesce_locked()
         with self._sched_lock:
             launched, undispatched = self.scheduler.dispatch(enc_jobs,
                                                              dec_jobs)
@@ -568,11 +686,16 @@ class ClientService:
         for rec in log:
             by_stream[rec.stream] = by_stream.get(rec.stream, 0) + 1
         with self._cond:
-            queued = {k: len(q) for k, q in self._queues.items()}
+            queued = {"enc": 0, "dec": 0}
+            for (_lane, kind), q in self._queues.items():
+                queued[kind] += len(q)
+            lanes = {lane for lane, _k in self._queues}
             inflight = self._inflight
             completed = self._completed_total
             failed = len(self._failures)
         return {
+            "lanes": len(lanes),
+            "tenants": self.registry.stats(),
             "n_streams": self.scheduler.n_streams,
             "alive_streams": self.scheduler.alive_streams,
             "shards_per_stream": self.scheduler.pad_multiple,

@@ -35,12 +35,18 @@ KIND_CT_BATCH = 1
 KIND_CT_SEEDED = 2
 KIND_RESULT = 3
 KIND_EVAL_KEYS = 4
+KIND_TENANT = 5
 
 _HDR = struct.Struct("<4sBBxx")          # magic, version, kind, pad
 _CT_BATCH = struct.Struct("<IIId")       # B, L, N, scale
 _CT_SEEDED = struct.Struct("<IIdQ")      # L, N, scale, a_stream
 _RESULT = struct.Struct("<II")           # B, n_slots
 _EVAL_KEYS = struct.Struct("<IIIBxxxI")  # N, L, special_q, has_relin, n_rot
+# tenant envelope: lane routing for a multi-tenant gateway — the CKKS
+# parameter fingerprint (everything that keys a lane), then the tenant id
+# and the wrapped inner payload, length-prefixed
+_TENANT = struct.Struct("<BHHHH16sII")   # logn, L, dec_L, delta_bits,
+#                                          p_bw, base seed, tid_len, n_inner
 
 
 def _u32_bytes(x) -> bytes:
@@ -181,6 +187,44 @@ def deserialize_evaluation_keys(buf: bytes):
     rot = {int(r): KeySwitchKey(plane(), plane()) for r in rot_ids}
     return EvaluationKeys(n=n, n_limbs=l, special_q=special_q,
                           relin=relin, rot=rot)
+
+
+def serialize_tenant_envelope(tenant_id, params, payload: bytes) -> bytes:
+    """Wrap a serialized payload with its lane identity — the tenant id
+    and the full CKKS parameter fingerprint — so a multi-tenant gateway
+    can route it to the right key context WITHOUT decoding the body.
+    Deterministic like every other kind: same lane + same payload =>
+    identical bytes."""
+    tid = str(tenant_id).encode("utf-8")
+    return b"".join([
+        _header(KIND_TENANT),
+        _TENANT.pack(params.logn, params.n_limbs, params.decrypt_limbs,
+                     params.delta_bits, params.p_bw,
+                     int(params.seed).to_bytes(16, "little"),
+                     len(tid), len(payload)),
+        tid,
+        payload,
+    ])
+
+
+def deserialize_tenant_envelope(buf: bytes):
+    """-> (tenant_id: str, params: CKKSParams, inner payload bytes)."""
+    from repro.core.context import CKKSParams
+    _parse_header(buf, KIND_TENANT)
+    off = _HDR.size
+    (logn, l, dec_l, delta_bits, p_bw, seed,
+     tid_len, n_inner) = _TENANT.unpack_from(buf, off)
+    off += _TENANT.size
+    tid = buf[off:off + tid_len].decode("utf-8")
+    off += tid_len
+    inner = bytes(buf[off:off + n_inner])
+    if len(inner) != n_inner:
+        raise ValueError(f"tenant envelope truncated: expected {n_inner} "
+                         f"inner bytes, got {len(inner)}")
+    params = CKKSParams(logn=logn, n_limbs=l, decrypt_limbs=dec_l,
+                        delta_bits=delta_bits, p_bw=p_bw,
+                        seed=int.from_bytes(seed, "little"))
+    return tid, params, inner
 
 
 def payload_kind(buf: bytes) -> int:

@@ -1,0 +1,276 @@
+"""Multi-tenant key contexts: per-tenant seeds, nonce leases, LRU registry.
+
+The always-on client service (PR 6/7) assumed ONE key owner. A co-resident
+deployment — several models / several users sharing the accelerator — needs
+one CKKS key context *per tenant*: its own secret/public key pair, its own
+Philox randomness streams, its own nonce counter. Two invariants make that
+safe and testable:
+
+**Stream disjointness.** Every Philox draw in the pipeline is keyed by a
+128-bit seed (``encryptor`` stream constants partition the per-seed counter
+space). Tenants therefore get *derived seeds*: ``tenant_seed(base, tid)``
+hashes the parameter-set base seed with the tenant id, so no two tenants —
+and no tenant vs. the anonymous default — can ever draw (v, e0, e1) or key
+material from the same stream, regardless of nonce accounting.
+
+**Bit-transparency.** A tenant's derived seed depends only on
+``(params.seed, tenant_id)`` — never on who else is resident, admission
+order, or registry capacity. Combined with per-tenant nonce counters this
+gives the contract the isolation tests pin: the ciphertexts a tenant
+receives co-resident are bit-identical to the ones it would receive running
+alone.
+
+The ``KeyContextRegistry`` is the retention policy: an LRU of
+``(tenant_id, CKKSParams) -> FHEClient`` bounded to ``capacity`` live key
+contexts (each holds jitted cores, twiddle tables and key material — the
+expensive part). Eviction persists the tenant's **nonce watermark**;
+re-admission rebuilds the client (same derived seed => same keys,
+bit-identical behaviour) and restores the watermark, so nonces never rewind
+across evictions (RLWE randomness must never be reused under one key).
+The ``NonceLedger`` turns that "never" into an assertion: every lease is
+recorded per seed and overlapping ranges raise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+from collections import OrderedDict
+
+from repro.core.context import CKKSParams, PROFILES
+
+
+_SEED_MASK = (1 << 128) - 1
+
+
+def tenant_seed(base_seed: int, tenant_id) -> int:
+    """Derive a tenant's 128-bit Philox seed from the parameter-set base
+    seed.  ``tenant_id=None`` is the anonymous single-tenant default and
+    keeps the base seed unchanged (back-compat: a lone ``FHEClient`` and a
+    registry-managed default tenant produce bit-identical ciphertexts).
+
+    The derivation is a SHA-256 over the base seed and the tenant id —
+    deterministic, order-free, and independent of co-residents, which is
+    exactly the bit-transparency contract.
+    """
+    if tenant_id is None:
+        return int(base_seed) & _SEED_MASK
+    h = hashlib.sha256()
+    h.update(int(base_seed).to_bytes(16, "little"))
+    h.update(b"\x00tenant\x00")
+    h.update(str(tenant_id).encode("utf-8"))
+    return int.from_bytes(h.digest()[:16], "little") & _SEED_MASK
+
+
+@dataclasses.dataclass(frozen=True)
+class NonceLease:
+    """A leased half-open nonce range ``[base, base + count)`` under one
+    128-bit seed. Rows of a batch encrypt under ``base + r``."""
+
+    seed: int
+    base: int
+    count: int
+
+    @property
+    def end(self) -> int:
+        return self.base + self.count
+
+
+class NonceLedger:
+    """Records every nonce lease per seed and rejects overlap.
+
+    Distinct tenants have distinct derived seeds, so disjointness across
+    tenants is structural; the ledger guards the remaining failure modes —
+    a rewound counter after eviction/restart, or two clients accidentally
+    constructed with the same seed — by raising instead of silently reusing
+    RLWE randomness.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        # seed -> high watermark (max end of any lease granted)
+        self._watermark: dict[int, int] = {}
+        self.leases_granted = 0
+
+    def lease(self, seed: int, base: int, count: int) -> NonceLease:
+        if count < 0:
+            raise ValueError(f"lease count must be >= 0, got {count}")
+        seed = int(seed)
+        base = int(base)
+        with self._lock:
+            high = self._watermark.get(seed, 0)
+            if base < high:
+                raise RuntimeError(
+                    f"nonce lease [{base}, {base + count}) under seed "
+                    f"{seed:#x} overlaps already-leased range [0, {high}): "
+                    "nonce counters must never rewind (RLWE randomness "
+                    "reuse)")
+            self._watermark[seed] = base + count
+            self.leases_granted += 1
+            return NonceLease(seed=seed, base=base, count=count)
+
+    def watermark(self, seed: int) -> int:
+        with self._lock:
+            return self._watermark.get(int(seed), 0)
+
+
+def _resolve_params(params) -> CKKSParams:
+    if isinstance(params, CKKSParams):
+        return params
+    return PROFILES[params]
+
+
+@dataclasses.dataclass
+class TenantSession:
+    """A live (tenant, params) key context: the client plus accounting."""
+
+    tenant_id: object
+    params: CKKSParams
+    client: object              # FHEClient (duck-typed for the factory hook)
+    builds: int = 1             # times this (tenant, params) was (re)built
+    leases: int = 0
+
+    @property
+    def seed(self) -> int:
+        return self.client.seed
+
+
+class KeyContextRegistry:
+    """LRU registry of per-tenant key contexts.
+
+    ``get(tenant_id, params)`` returns the live ``TenantSession``, building
+    it on first use (or after eviction) via ``client_factory(params, seed)``
+    — by default ``FHEClient(params, seed=...)`` with every Fourier/pipeline
+    kwarg inherited from the registry. Keys, jitted cores and nonce counter
+    live on the session's client; evicting a session drops all of that
+    except the **nonce watermark**, which is persisted in the registry and
+    restored on re-admission so a returning tenant continues its nonce
+    sequence instead of rewinding it.
+
+    ``take_nonces`` is the service's single nonce authority: it advances the
+    tenant client's counter AND records the lease in the shared
+    ``NonceLedger`` (overlap => raise).
+    """
+
+    def __init__(self, capacity: int = 4, client_factory=None,
+                 ledger: NonceLedger | None = None, **client_kwargs):
+        if capacity < 1:
+            raise ValueError(f"registry capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.ledger = ledger if ledger is not None else NonceLedger()
+        self._client_kwargs = dict(client_kwargs)
+        self._factory = client_factory or self._default_factory
+        self._lock = threading.RLock()
+        self._sessions: OrderedDict[tuple, TenantSession] = OrderedDict()
+        # (tenant_id, params) -> persisted nonce watermark + build count of
+        # evicted sessions, so re-admission never rewinds and tests can pin
+        # "re-lowered exactly once per re-admission".
+        self._watermarks: dict[tuple, int] = {}
+        self._builds: dict[tuple, int] = {}
+        self.evictions = 0
+
+    @staticmethod
+    def _default_factory(params: CKKSParams, seed: int, **kwargs):
+        from repro.fhe_client.client import FHEClient
+        return FHEClient(profile=params, seed=seed, **kwargs)
+
+    # -- admission ----------------------------------------------------------
+
+    def get(self, tenant_id, params="test") -> TenantSession:
+        """Live session for ``(tenant_id, params)`` (params value or profile
+        name), building/rebuilding and LRU-bumping as needed."""
+        params = _resolve_params(params)
+        key = (tenant_id, params)
+        with self._lock:
+            sess = self._sessions.get(key)
+            if sess is not None:
+                self._sessions.move_to_end(key)
+                return sess
+            seed = tenant_seed(params.seed, tenant_id)
+            client = self._factory(params, seed, **self._client_kwargs)
+            # restore the persisted watermark: a returning tenant resumes
+            # its nonce sequence (fresh keys are identical — same seed —
+            # so rewinding WOULD be randomness reuse).
+            client.nonce = max(int(client.nonce),
+                               self._watermarks.get(key, 0),
+                               self.ledger.watermark(seed))
+            builds = self._builds.get(key, 0) + 1
+            self._builds[key] = builds
+            sess = TenantSession(tenant_id=tenant_id, params=params,
+                                 client=client, builds=builds)
+            self._sessions[key] = sess
+            self._trim()
+            return sess
+
+    def install(self, tenant_id, client) -> TenantSession:
+        """Admit an externally constructed client as a tenant (the
+        single-tenant ``ClientService(client=...)`` back-compat path: the
+        caller's instance IS the session, seed and nonce state included)."""
+        params = client.ctx.params
+        key = (tenant_id, params)
+        with self._lock:
+            client.nonce = max(int(client.nonce), self._watermarks.get(key, 0))
+            builds = self._builds.get(key, 0) + 1
+            self._builds[key] = builds
+            sess = TenantSession(tenant_id=tenant_id, params=params,
+                                 client=client, builds=builds)
+            self._sessions[key] = sess
+            self._sessions.move_to_end(key)
+            self._trim()
+            return sess
+
+    def peek(self, tenant_id, params) -> TenantSession | None:
+        """Session if resident, else None. No LRU bump, no build."""
+        with self._lock:
+            return self._sessions.get((tenant_id, _resolve_params(params)))
+
+    def _trim(self):
+        while len(self._sessions) > self.capacity:
+            key, sess = self._sessions.popitem(last=False)
+            self._watermarks[key] = int(sess.client.nonce)
+            self.evictions += 1
+
+    def evict(self, tenant_id, params) -> bool:
+        """Explicitly drop a session (watermark persisted). True if it was
+        resident."""
+        key = (tenant_id, _resolve_params(params))
+        with self._lock:
+            sess = self._sessions.pop(key, None)
+            if sess is None:
+                return False
+            self._watermarks[key] = int(sess.client.nonce)
+            self.evictions += 1
+            return True
+
+    # -- nonce authority ----------------------------------------------------
+
+    def take_nonces(self, tenant_id, params, count: int) -> int:
+        """Lease ``count`` nonces for the tenant; returns the base. Advances
+        the tenant client's counter and records the lease in the ledger."""
+        with self._lock:
+            sess = self.get(tenant_id, params)
+            base = sess.client.take_nonces(count)
+            self.ledger.lease(sess.seed, base, count)
+            sess.leases += 1
+            return base
+
+    # -- introspection ------------------------------------------------------
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._sessions)
+
+    def resident_keys(self) -> list[tuple]:
+        with self._lock:
+            return list(self._sessions.keys())
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "resident": len(self._sessions),
+                "capacity": self.capacity,
+                "evictions": self.evictions,
+                "builds": dict(self._builds),
+                "leases_granted": self.ledger.leases_granted,
+            }

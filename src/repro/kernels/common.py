@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import modmul
+from repro.core import cache, modmul
 from repro.core.modmul import MontgomeryConstants
 from repro.core.ntt import NTTPlan
 
@@ -141,12 +141,21 @@ class PlanConsts:
                 + sum(len(f) for f in self.inv_factors) + 2)
 
 
-_PLAN_CONSTS_MEMO: dict[int, PlanConsts] = {}
+_PLAN_CONSTS_MEMO = cache.LRUCache(capacity=256)
 
 
 def plan_consts(plan: NTTPlan) -> PlanConsts:
-    """Memoised by plan identity (NTTPlan holds ndarrays, so no lru_cache)."""
-    cached = _PLAN_CONSTS_MEMO.get(id(plan))
+    """Memoised by plan CONTENT (``cache.plan_key``: (q, N) determines
+    every derived constant), LRU-bounded.
+
+    This used to be keyed by ``id(plan)`` without retaining the plan —
+    once plans can actually be garbage-collected (bounded ``make_plan`` /
+    context caches under the multi-tenant registry, ISSUE 8), CPython id
+    reuse let a dead plan's entry answer for a NEW plan with a different
+    prime: stale NTT constants, silently wrong ciphertexts. Pinned by
+    tests/test_multi_tenant.py::test_plan_consts_survives_gc_id_reuse."""
+    key = cache.plan_key(plan)
+    cached = _PLAN_CONSTS_MEMO.get(key)
     if cached is not None:
         return cached
     q = plan.prime.q
@@ -182,7 +191,7 @@ def plan_consts(plan: NTTPlan) -> PlanConsts:
         n_inv_mont=plan.n_inv_mont, psi=plan.psi, psi_inv=psi_inv,
         r_mod_q=r,
     )
-    _PLAN_CONSTS_MEMO[id(plan)] = pc
+    _PLAN_CONSTS_MEMO.put(key, pc)
     return pc
 
 
@@ -227,13 +236,14 @@ class StackedKernelConsts:
         return self.logn - 1 - st                 # h = N >> (st+1)
 
 
-_STACKED_KC_MEMO: dict[tuple[int, ...], StackedKernelConsts] = {}
+_STACKED_KC_MEMO = cache.LRUCache(capacity=64)
 
 
 def stacked_kernel_consts(plans) -> StackedKernelConsts:
     """Stack ``plan_consts`` of several same-N plans into one (L, K) table.
-    Memoised by plan identity (plans come from the lru-cached make_plan)."""
-    key = tuple(id(p) for p in plans)
+    Memoised by plan content (per-limb (q, N) keys — see ``plan_consts``
+    for why identity keys are unsound), LRU-bounded."""
+    key = cache.plans_key(plans)
     cached = _STACKED_KC_MEMO.get(key)
     if cached is not None:
         return cached
@@ -270,7 +280,7 @@ def stacked_kernel_consts(plans) -> StackedKernelConsts:
         fwd_off=tuple(fwd_off), inv_off=tuple(inv_off),
         n_scalars=cur, table=table,
     )
-    _STACKED_KC_MEMO[key] = kc
+    _STACKED_KC_MEMO.put(key, kc)
     return kc
 
 

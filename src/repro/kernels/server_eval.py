@@ -51,7 +51,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import modmul, rns
+from repro.core import cache, modmul, rns
 from repro.core.context import CKKSContext
 from repro.kernels import common
 
@@ -78,12 +78,15 @@ class ServerConsts:
     off_qdinv: int               # rescale by the dropped prime (rows < l-1)
 
 
-_SERVER_CONSTS_MEMO: dict = {}
+_SERVER_CONSTS_MEMO = cache.LRUCache(capacity=64)
 
 
 def server_consts(ctx: CKKSContext, level: int) -> ServerConsts:
+    # content-keyed (per-limb (q, N) + level), LRU-bounded — id-keyed
+    # entries could serve stale constants after plan GC + id reuse
+    # (see kernels.common.plan_consts, ISSUE 8)
     plans = ctx.plans[:level] + (ctx.special_plan(),)
-    key = tuple(id(p) for p in plans)
+    key = (level,) + cache.plans_key(plans)
     cached = _SERVER_CONSTS_MEMO.get(key)
     if cached is not None:
         return cached
@@ -104,7 +107,7 @@ def server_consts(ctx: CKKSContext, level: int) -> ServerConsts:
         off_r2=kc.n_scalars, off_pinv=kc.n_scalars + 1,
         off_qdinv=kc.n_scalars + 2,
     )
-    _SERVER_CONSTS_MEMO[key] = sc
+    _SERVER_CONSTS_MEMO.put(key, sc)
     return sc
 
 

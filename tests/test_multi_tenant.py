@@ -1,0 +1,429 @@
+"""Multi-tenant key contexts + the content-keyed cache fix (ISSUE 8).
+
+Two families of pins:
+
+* **Cache correctness** — the derived-constant memos (``plan_consts``,
+  stacked kernel consts, server consts) used to be keyed by ``id(plan)``
+  WITHOUT holding the plan: latent while ``make_plan`` was an unbounded
+  lru_cache (plans immortal, ids stable), live the moment any cache layer
+  is bounded — a GC'd plan's id reused by a different plan would serve the
+  WRONG prime's NTT constants. Now every memo is keyed by plan CONTENT
+  ``(q, N)`` and bounded; the regression test here forces the GC + id-reuse
+  sequence.
+
+* **Tenant isolation** — derived per-tenant seeds (no shared Philox
+  streams), bit-transparency (co-resident ciphertexts identical to solo),
+  non-overlapping nonce leases that survive registry eviction, LRU
+  retention that re-lowers exactly once per re-admission, and buckets that
+  never mix tenants.
+"""
+
+import gc
+
+import numpy as np
+import pytest
+
+from repro.core import cache
+from repro.core import ntt as nttmod
+from repro.core.context import (CKKSParams, PROFILES, context_cache_len,
+                                context_for, set_context_cache_capacity)
+from repro.core.primes import find_ntt_friendly_primes
+from repro.fhe_client.client import FHEClient
+from repro.fhe_client.tenancy import (KeyContextRegistry, NonceLedger,
+                                      tenant_seed)
+from repro.kernels import common
+
+
+TINY = PROFILES["tiny"]
+
+
+def _ct_equal(a, b) -> bool:
+    return (np.array_equal(np.asarray(a.c0), np.asarray(b.c0))
+            and np.array_equal(np.asarray(a.c1), np.asarray(b.c1)))
+
+
+def _msgs(n_slots, b=2, seed=0):
+    r = np.random.default_rng(seed)
+    return (r.standard_normal((b, n_slots))
+            + 1j * r.standard_normal((b, n_slots))) * 0.5
+
+
+# ---------------------------------------------------------------------------
+# cache layer: content keys, bounds, the GC/id-reuse regression
+# ---------------------------------------------------------------------------
+
+
+class TestLRUCache:
+    def test_eviction_order_and_hook(self):
+        evicted = []
+        c = cache.LRUCache(capacity=2,
+                           on_evict=lambda k, v: evicted.append(k))
+        c.put("a", 1)
+        c.put("b", 2)
+        assert c.get("a") == 1          # bump 'a': 'b' is now LRU
+        c.put("c", 3)
+        assert "b" not in c and "a" in c and "c" in c
+        assert evicted == ["b"] and c.evictions == 1
+
+    def test_set_capacity_trims(self):
+        c = cache.LRUCache(capacity=8)
+        for i in range(8):
+            c.put(i, i)
+        old = c.set_capacity(2)
+        assert old == 8 and len(c) == 2 and set(c.keys()) == {6, 7}
+
+    def test_get_or_build_builds_once(self):
+        calls = []
+        c = cache.LRUCache(capacity=4)
+        for _ in range(3):
+            c.get_or_build("k", lambda: calls.append(1) or "v")
+        assert calls == [1]
+
+
+class TestContentKeys:
+    def test_plan_key_is_content(self):
+        primes = find_ntt_friendly_primes(p_bw=30, n_plus_1=16, count=2)
+        p1 = nttmod.make_plan.__wrapped__(primes[0], 64)
+        p2 = nttmod.make_plan.__wrapped__(primes[0], 64)
+        assert p1 is not p2
+        assert cache.plan_key(p1) == cache.plan_key(p2) \
+            == (primes[0].q, 64)
+        # independently constructed same-content plans share the memo entry
+        assert common.plan_consts(p1) is common.plan_consts(p2)
+
+    def test_plan_consts_match_their_prime(self):
+        primes = find_ntt_friendly_primes(p_bw=30, n_plus_1=16, count=4)
+        for pr in primes:
+            plan = nttmod.make_plan(pr, 64)
+            assert common.plan_consts(plan).q == pr.q
+
+    def test_plan_consts_survives_gc_id_reuse(self):
+        """THE regression: compute consts for plan A, free A, allocate a
+        different-prime plan B (CPython's allocator makes id reuse near-
+        certain for same-shape objects), and demand B's consts carry B's
+        modulus. Under the old ``id(plan)``-keyed memo, an id collision
+        silently served A's NTT constants for B."""
+        primes = find_ntt_friendly_primes(p_bw=30, n_plus_1=16, count=8)
+        plan_a = nttmod.make_plan.__wrapped__(primes[0], 64)
+        pc_a = common.plan_consts(plan_a)
+        assert pc_a.q == primes[0].q
+        id_a = id(plan_a)
+        del plan_a
+        gc.collect()
+        plan_b = None
+        for pr in primes[1:]:           # hunt for the recycled id
+            cand = nttmod.make_plan.__wrapped__(pr, 64)
+            if id(cand) == id_a:
+                plan_b = cand
+                break
+            del cand
+            gc.collect()
+        if plan_b is None:              # no reuse observed: still verify
+            plan_b = nttmod.make_plan.__wrapped__(primes[1], 64)
+        pc_b = common.plan_consts(plan_b)
+        assert pc_b.q == plan_b.prime.q
+        assert pc_b.q != primes[0].q or plan_b.prime.q == primes[0].q
+
+    def test_memos_are_bounded(self):
+        assert common._PLAN_CONSTS_MEMO.capacity == 256
+        assert common._STACKED_KC_MEMO.capacity == 64
+        assert nttmod._STACKED_MEMO.capacity == 16
+        from repro.kernels import server_eval
+        assert server_eval._SERVER_CONSTS_MEMO.capacity == 64
+
+
+class TestContextCache:
+    def test_bounded_with_eviction_and_rebuild(self):
+        old = set_context_cache_capacity(3)
+        try:
+            grids = [CKKSParams(logn=6, n_limbs=3, decrypt_limbs=2,
+                                delta_bits=40, seed=1000 + i)
+                     for i in range(6)]
+            ctxs = [context_for(p) for p in grids]
+            assert context_cache_len() <= 3
+            # resident entry is served, evicted entry rebuilds (new object)
+            assert context_for(grids[-1]) is ctxs[-1]
+            rebuilt = context_for(grids[0])
+            assert rebuilt is not ctxs[0]
+            assert rebuilt.q_list == ctxs[0].q_list   # same content
+        finally:
+            set_context_cache_capacity(old)
+
+
+# ---------------------------------------------------------------------------
+# tenancy: seeds, nonce ledger, registry
+# ---------------------------------------------------------------------------
+
+
+class TestTenantSeed:
+    def test_default_lane_keeps_base_seed(self):
+        assert tenant_seed(TINY.seed, None) == TINY.seed
+
+    def test_derived_seeds_distinct_and_deterministic(self):
+        sa = tenant_seed(TINY.seed, "alice")
+        sb = tenant_seed(TINY.seed, "bob")
+        assert sa != sb != TINY.seed and sa != TINY.seed
+        assert sa == tenant_seed(TINY.seed, "alice")
+        assert 0 <= sa < (1 << 128) and 0 <= sb < (1 << 128)
+
+    def test_seed_depends_on_base(self):
+        assert tenant_seed(1, "alice") != tenant_seed(2, "alice")
+
+
+class TestNonceLedger:
+    def test_disjoint_leases_ok_overlap_rejected(self):
+        led = NonceLedger()
+        led.lease(seed=7, base=0, count=4)
+        led.lease(seed=7, base=4, count=2)
+        led.lease(seed=9, base=0, count=8)      # other seed: independent
+        with pytest.raises(RuntimeError, match="rewind"):
+            led.lease(seed=7, base=5, count=1)  # inside [0, 6)
+        assert led.watermark(7) == 6 and led.watermark(9) == 8
+
+    def test_gap_lease_advances_watermark(self):
+        led = NonceLedger()
+        led.lease(seed=1, base=10, count=2)
+        assert led.watermark(1) == 12
+        with pytest.raises(RuntimeError):
+            led.lease(seed=1, base=0, count=1)
+
+
+class TestRegistry:
+    def test_get_builds_once_and_is_lru(self):
+        reg = KeyContextRegistry(capacity=2)
+        a = reg.get("alice", TINY)
+        assert reg.get("alice", TINY) is a and a.builds == 1
+        reg.get("bob", TINY)
+        reg.get("alice", TINY)                  # bump alice
+        reg.get("carol", TINY)                  # evicts bob (LRU)
+        assert reg.peek("bob", TINY) is None
+        assert reg.peek("alice", TINY) is not None
+        assert reg.evictions == 1
+
+    def test_distinct_tenant_seeds_and_keys(self):
+        reg = KeyContextRegistry(capacity=4)
+        a = reg.get("alice", TINY).client
+        b = reg.get("bob", TINY).client
+        assert a.seed != b.seed
+        assert not np.array_equal(np.asarray(a.keys.pk.b_mont),
+                                  np.asarray(b.keys.pk.b_mont))
+
+    def test_nonce_watermark_survives_eviction(self):
+        reg = KeyContextRegistry(capacity=1)
+        base0 = reg.take_nonces("alice", TINY, 4)
+        assert base0 == 0
+        reg.get("bob", TINY)                    # evicts alice
+        base1 = reg.take_nonces("alice", TINY, 2)   # rebuilt alice
+        assert base1 == 4                       # resumed, never rewound
+        sess = reg.get("alice", TINY)
+        assert sess.builds >= 2
+        assert reg.ledger.watermark(sess.seed) == 6
+
+    def test_capacity_validation(self):
+        with pytest.raises(ValueError):
+            KeyContextRegistry(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# bit-transparency + compiled-core retention (@ the client layer)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.x64smoke
+def test_coresident_equals_solo_bit_identity():
+    """A tenant's ciphertexts are a pure function of (derived seed, nonce
+    sequence) — co-residents, admission order, registry capacity change
+    NOTHING. The whole multi-tenant contract in one assert."""
+    msgs = _msgs(TINY.n_slots, b=2, seed=3)
+    reg = KeyContextRegistry(capacity=4)
+    reg.get("bob", TINY).client.encode_encrypt_batch(msgs)   # co-resident
+    ct_co = reg.get("alice", TINY).client.encode_encrypt_batch(msgs)
+    ct_solo = KeyContextRegistry(capacity=4).get(
+        "alice", TINY).client.encode_encrypt_batch(msgs)
+    assert _ct_equal(ct_co, ct_solo)
+    ct_bob = KeyContextRegistry(capacity=4).get(
+        "bob", TINY).client.encode_encrypt_batch(msgs)
+    assert not _ct_equal(ct_co, ct_bob)         # distinct streams
+
+
+def test_eviction_readmission_relowers_exactly_once(pallas_call_counter):
+    """Evicting a tenant drops its compiled cores; re-admission re-lowers
+    them exactly ONCE (fresh jit trace), then stays warm — and the
+    re-admitted tenant continues its nonce sequence bit-identically to an
+    uninterrupted client."""
+    msgs = _msgs(TINY.n_slots, b=2, seed=5)
+    reg = KeyContextRegistry(capacity=1)
+    alice = reg.get("alice", TINY).client
+    pallas_call_counter.clear()
+    alice.encode_encrypt_batch(msgs)
+    first = len(pallas_call_counter)
+    assert first > 0                            # cold trace lowers kernels
+    pallas_call_counter.clear()
+    assert reg.get("alice", TINY).client is alice
+    alice.encode_encrypt_batch(msgs)
+    assert len(pallas_call_counter) == 0        # resident => warm
+    reg.get("bob", TINY)                        # capacity 1: evicts alice
+    assert reg.evictions == 1
+    alice2 = reg.get("alice", TINY).client      # re-admission rebuilds
+    assert alice2 is not alice
+    nonce_resume = alice2.nonce
+    assert nonce_resume == 2 * msgs.shape[0]    # watermark restored
+    pallas_call_counter.clear()
+    ct = alice2.encode_encrypt_batch(msgs)
+    assert len(pallas_call_counter) == first    # re-lowered exactly once
+    alice2.encode_encrypt_batch(msgs)
+    assert len(pallas_call_counter) == first    # ...and warm again
+    # bit-transparency across the eviction: an uninterrupted solo client
+    # at the same nonce position produces the same bits
+    solo = FHEClient(profile=TINY, seed=tenant_seed(TINY.seed, "alice"))
+    solo.nonce = nonce_resume
+    assert _ct_equal(ct, solo.encode_encrypt_batch(msgs))
+
+
+# ---------------------------------------------------------------------------
+# service layer: lanes, strict submit validation, mixing rejection
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tenant_svc():
+    from repro.fhe_client.service import ClientService
+    return ClientService(profile="tiny", buckets=(1, 2, 4))
+
+
+def test_service_tenant_roundtrip_and_bit_transparency(tenant_svc):
+    svc = tenant_svc
+    msgs = _msgs(TINY.n_slots, b=3, seed=11)
+    rid_a = svc.submit_encrypt(msgs[0], tenant="alice")
+    rid_b = svc.submit_encrypt(msgs[1], tenant="bob")
+    rid_d = svc.submit_encrypt(msgs[2])
+    svc.flush()
+    ct_a, ct_b = svc.result(rid_a), svc.result(rid_b)
+    svc.result(rid_d)
+    # alice's serviced row == a solo derived-seed client from nonce 0
+    solo = FHEClient(profile=TINY, seed=tenant_seed(TINY.seed, "alice"))
+    ct_solo = solo.encode_encrypt_batch(msgs[:1])
+    assert np.array_equal(np.asarray(ct_a.c0), np.asarray(ct_solo.c0)[0])
+    assert np.array_equal(np.asarray(ct_a.c1), np.asarray(ct_solo.c1)[0])
+    assert not np.array_equal(np.asarray(ct_a.c0), np.asarray(ct_b.c0))
+    # tenant decrypt goes back through the tenant's own keys
+    rid = svc.submit_decrypt((np.asarray(ct_a.c0[:2]),
+                              np.asarray(ct_a.c1[:2]), ct_a.scale),
+                             tenant="alice")
+    svc.flush()
+    np.testing.assert_allclose(svc.result(rid), msgs[0], atol=1e-6)
+
+
+def test_cross_tenant_bucket_mixing_rejected():
+    from collections import deque
+
+    from repro.fhe_client.service.batcher import CoalescingBatcher, Request
+    b = CoalescingBatcher(buckets=(4,))
+    q = deque([
+        Request(rid=0, kind="enc", payload=np.zeros(4, complex),
+                t_submit=0.0, tenant=("alice", TINY)),
+        Request(rid=1, kind="enc", payload=np.zeros(4, complex),
+                t_submit=0.0, tenant=("bob", TINY)),
+    ])
+    with pytest.raises(ValueError, match="cross-tenant"):
+        b.coalesce_enc(q, nonce0=0, n_slots=4, tenant=("alice", TINY))
+
+
+def test_submit_encrypt_strict_validation(tenant_svc):
+    svc = tenant_svc
+    ns = TINY.n_slots
+    ok = np.zeros(ns, complex)
+    with pytest.raises(ValueError, match="1-D"):
+        svc.submit_encrypt(ok[None])            # no silent flatten
+    with pytest.raises(ValueError, match="slots"):
+        svc.submit_encrypt(np.zeros(ns + 1, complex))
+    with pytest.raises(ValueError, match="numeric"):
+        svc.submit_encrypt(np.array(["x"] * ns))
+    bad = ok.copy()
+    bad[3] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        svc.submit_encrypt(bad)
+    bad[3] = np.inf * 1j
+    with pytest.raises(ValueError, match="non-finite"):
+        svc.submit_encrypt(bad)
+    assert svc.pending()["enc"] == 0            # nothing was admitted
+
+
+def test_service_nonce_rewind_rejected(tenant_svc):
+    svc = tenant_svc
+    msgs = _msgs(TINY.n_slots, b=1, seed=13)
+    rid = svc.submit_encrypt(msgs[0])
+    svc.flush()
+    svc.result(rid)
+    saved = svc.client.nonce
+    svc.client.nonce = 0                        # simulate a rewound counter
+    try:
+        svc.submit_encrypt(msgs[0])
+        with pytest.raises(RuntimeError, match="rewind"):
+            svc.flush()
+    finally:
+        svc.client.nonce = saved
+        for q in svc._queues.values():          # drop the poisoned request
+            q.clear()
+
+
+def test_service_lane_queues_never_share(tenant_svc):
+    svc = tenant_svc
+    msgs = _msgs(TINY.n_slots, b=1, seed=17)
+    svc.submit_encrypt(msgs[0], tenant="alice")
+    svc.submit_encrypt(msgs[0], tenant="bob")
+    by_lane = svc.pending_by_lane()
+    lanes = {k[0] for k, n in by_lane.items() if n}
+    assert len(lanes) == 2                      # one queue per lane
+    assert svc.pending() == {"enc": 2, "dec": 0}
+    svc.flush()
+    for job_tenants in [rec.rids for rec in svc.dispatch_log]:
+        assert len(job_tenants) >= 1            # log intact after mt flush
+
+
+def test_wire_tenant_envelope_roundtrip():
+    from repro.fhe_client.service import wire
+    inner = wire.serialize_result(np.arange(4) + 1j)
+    buf = wire.serialize_tenant_envelope("alice", TINY, inner)
+    assert wire.payload_kind(buf) == wire.KIND_TENANT
+    tid, params, payload = wire.deserialize_tenant_envelope(buf)
+    assert tid == "alice" and params == TINY and payload == inner
+    # deterministic: same lane + payload => identical bytes
+    assert buf == wire.serialize_tenant_envelope("alice", TINY, inner)
+    assert buf != wire.serialize_tenant_envelope("bob", TINY, inner)
+
+
+# ---------------------------------------------------------------------------
+# workload matrix (tiny smoke in tier 1; paper-scale rows are nightly)
+# ---------------------------------------------------------------------------
+
+
+def _import_matrix():
+    import pathlib
+    import sys
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks import bench_workload_matrix as m
+    return m
+
+
+def test_workload_matrix_tiny_smoke():
+    m = _import_matrix()
+    old = set_context_cache_capacity(8)
+    try:
+        rows = m.run(presets=("tiny",), n_enc=6, n_dec=1, buckets=(1, 2),
+                     reps=1, strict=True)       # strict: 0 warm re-lowerings
+        assert len(rows) == 1
+        assert "warm_relowerings=0" in rows[0]["derived"]
+        assert context_cache_len() <= 8         # peak context retention
+    finally:
+        set_context_cache_capacity(old)
+
+
+@pytest.mark.slow
+def test_workload_matrix_n14():
+    m = _import_matrix()
+    rows = m.run(presets=("n14",), n_enc=4, n_dec=1, buckets=(1, 2),
+                 reps=1, strict=True)
+    assert "warm_relowerings=0" in rows[0]["derived"]
