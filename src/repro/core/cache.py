@@ -26,6 +26,7 @@ The fix is structural, shared here:
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Callable
 
@@ -44,7 +45,16 @@ def plans_key(plans) -> tuple[tuple[int, int], ...]:
 class LRUCache:
     """Bounded content-keyed memo: ``get_or_build(key, build)`` with LRU
     eviction past ``capacity``. An optional ``on_evict(key, value)`` hook
-    lets owners release dependent state."""
+    lets owners release dependent state.
+
+    Thread-safe: the module-global memos built on this are hit
+    concurrently by user threads, the service dispatch thread and the
+    completion thread, so every operation — including the check-build-put
+    sequence of ``get_or_build`` — runs under one re-entrant lock. Holding
+    the lock across ``build()`` serializes same-cache cold builds, which
+    is exactly what prevents two threads from double-building expensive
+    derived state (and from evicting entries out from under each other);
+    nested use of the same cache from inside a build is fine (RLock)."""
 
     def __init__(self, capacity: int, on_evict: Callable | None = None):
         if capacity < 1:
@@ -52,45 +62,55 @@ class LRUCache:
         self.capacity = int(capacity)
         self._data: OrderedDict = OrderedDict()
         self._on_evict = on_evict
+        self._lock = threading.RLock()
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._data)
+        with self._lock:
+            return len(self._data)
 
     def __contains__(self, key) -> bool:
-        return key in self._data
+        with self._lock:
+            return key in self._data
 
     def get(self, key, default=None):
-        if key in self._data:
-            self._data.move_to_end(key)
-            return self._data[key]
-        return default
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                return self._data[key]
+            return default
 
     def get_or_build(self, key, build: Callable):
-        if key in self._data:
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                return self._data[key]
+            value = build()
+            self._data[key] = value
             self._data.move_to_end(key)
-            return self._data[key]
-        value = build()
-        self.put(key, value)
-        return value
+            self._trim_locked()
+            return value
 
     def put(self, key, value) -> None:
-        self._data[key] = value
-        self._data.move_to_end(key)
-        self._trim()
+        with self._lock:
+            self._data[key] = value
+            self._data.move_to_end(key)
+            self._trim_locked()
 
     def pop(self, key, default=None):
-        return self._data.pop(key, default)
+        with self._lock:
+            return self._data.pop(key, default)
 
     def set_capacity(self, capacity: int) -> int:
         """Change the bound (evicting down if needed); returns the old."""
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
-        old, self.capacity = self.capacity, int(capacity)
-        self._trim()
-        return old
+        with self._lock:
+            old, self.capacity = self.capacity, int(capacity)
+            self._trim_locked()
+            return old
 
-    def _trim(self) -> None:
+    def _trim_locked(self) -> None:
         while len(self._data) > self.capacity:
             key, value = self._data.popitem(last=False)
             self.evictions += 1
@@ -98,7 +118,9 @@ class LRUCache:
                 self._on_evict(key, value)
 
     def clear(self) -> None:
-        self._data.clear()
+        with self._lock:
+            self._data.clear()
 
     def keys(self):
-        return list(self._data.keys())
+        with self._lock:
+            return list(self._data.keys())

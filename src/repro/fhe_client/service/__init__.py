@@ -28,7 +28,7 @@ from repro.fhe_client.service.scheduler import (DispatchRecord,
 from repro.fhe_client.service.service import ClientService, QueueFull
 from repro.fhe_client.tenancy import (KeyContextRegistry, NonceLease,
                                       NonceLedger, TenantSession,
-                                      tenant_seed)
+                                      params_fingerprint, tenant_seed)
 
 __all__ = [
     "AllStreamsFailed", "ClientService", "CoalescingBatcher",
@@ -36,5 +36,6 @@ __all__ = [
     "EncJob", "EventLog", "FaultInjector", "FaultSpec",
     "KeyContextRegistry", "NonceLease", "NonceLedger", "QueueFull",
     "Request", "RequestFailed", "ServiceEvent", "StreamFault",
-    "StreamExecutor", "TenantSession", "tenant_seed", "wire",
+    "StreamExecutor", "TenantSession", "params_fingerprint",
+    "tenant_seed", "wire",
 ]

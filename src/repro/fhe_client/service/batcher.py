@@ -120,16 +120,26 @@ class CoalescingBatcher:
                 return b
         raise ValueError(f"{k} requests exceed max bucket {self.max_bucket}")
 
-    def _drain(self, queue: deque, allow_partial: bool = True):
+    def _drain(self, queue: deque, allow_partial: bool = True, tenant=None):
         """FIFO groups of at most max_bucket requests. With
         ``allow_partial=False`` a trailing group smaller than max_bucket
         is left queued (the dispatch loop's 'full buckets fire
-        immediately, partial tails wait for their deadline' split)."""
+        immediately, partial tails wait for their deadline' split).
+
+        Lane membership is validated BEFORE a group is popped: a raise
+        must leave the queue intact, so the requests stay reachable by
+        the service's queued-failure handling (``flush``/crash paths
+        fail what is *in* a queue — requests popped and then abandoned
+        would strand their waiters)."""
         while queue:
             if len(queue) < self.max_bucket and not allow_partial:
                 break
             take = min(len(queue), self.max_bucket)
-            yield [queue.popleft() for _ in range(take)]
+            group = [queue[i] for i in range(take)]
+            self._check_lane(group, tenant)
+            for _ in range(take):
+                queue.popleft()
+            yield group
 
     @staticmethod
     def _check_lane(reqs, tenant):
@@ -152,8 +162,7 @@ class CoalescingBatcher:
         the caller reserves ``n_nonces`` consecutive nonces at ``nonce0``
         from the LANE's client (padded rows included)."""
         jobs, used = [], 0
-        for reqs in self._drain(queue, allow_partial):
-            self._check_lane(reqs, tenant)
+        for reqs in self._drain(queue, allow_partial, tenant):
             b = self.bucket_for(len(reqs))
             msgs = np.zeros((b, n_slots), np.complex128)
             for i, r in enumerate(reqs):
@@ -172,8 +181,7 @@ class CoalescingBatcher:
         first real row (any valid ciphertext row works — padded outputs
         are dropped at demux)."""
         jobs = []
-        for reqs in self._drain(queue, allow_partial):
-            self._check_lane(reqs, tenant)
+        for reqs in self._drain(queue, allow_partial, tenant):
             b = self.bucket_for(len(reqs))
             rows = [r.payload for r in reqs]
             rows += [rows[0]] * (b - len(rows))

@@ -185,9 +185,19 @@ class DispatchLoop:
                     if self._drain_req and not any(svc._queues.values()):
                         self._drain_req = False
                     svc._cond.wait(timeout=next_wait)
-                if self._stop_req and not any(svc._queues.values()):
-                    break
+                stopping = self._stop_req and not any(svc._queues.values())
                 draining = self._drain_req
+                firing = [key for key, (fire, _p) in decision.items()
+                          if fire and svc._queues.get(key)]
+            if stopping:
+                break
+            # build/readmit any cold tenant session OUTSIDE _cond before
+            # coalescing: keygen/jit under the service condition would
+            # stall submitters, the completion thread and every other
+            # lane. Requests admitted to a firing lane in this window are
+            # simply coalesced too; brand-new lanes wait one iteration.
+            svc._prepare_lanes(firing)
+            with svc._cond:
                 enc_jobs, dec_jobs = svc._coalesce_locked(decision)
             # --- outside _cond: record fire events + launch ---------------
             for jobs, kind in ((enc_jobs, "enc"), (dec_jobs, "dec")):

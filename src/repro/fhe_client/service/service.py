@@ -238,6 +238,17 @@ class ClientService:
         tenant_id, params = lane
         return self.registry.take_nonces(tenant_id, params, count)
 
+    def _prepare_lanes(self, keys):
+        """Build/readmit the tenant session behind every named lane in
+        ``keys`` (an iterable of (lane, kind) queue keys) OUTSIDE
+        ``_cond``. Session construction — prime search, keygen, jit
+        tracing, potentially seconds — must never run under the
+        service-wide condition: it would stall every submitter, the
+        completion thread and all other lanes' dispatch. With lanes
+        prepared, coalescing under ``_cond`` only advances counters."""
+        for lane in {lane for lane, _kind in keys if lane is not None}:
+            self.registry.get(*lane)
+
     # --- submission ---------------------------------------------------------
 
     def _admit(self, kind: str, payload, lane=None) -> int:
@@ -288,8 +299,15 @@ class ClientService:
         ``submit_decrypt``): a malformed message failing later inside a
         dispatch would take the whole coalesced batch — and its reserved
         nonces — down with it. Strict by design: no silent flatten, no
-        silent truncation, no NaN smuggled into a kernel launch."""
+        silent truncation, no NaN smuggled into a kernel launch.
+
+        A named lane's key context is also built HERE (outside the
+        service condition) if it isn't resident yet, so a cold tenant's
+        first submit pays its own keygen/trace cost instead of the
+        dispatch loop stalling every lane under ``_cond``."""
         lane, p = self._resolve_lane(tenant, params)
+        if lane is not None:
+            self.registry.get(*lane)
         msg = np.asarray(message)
         if msg.ndim != 1:
             raise ValueError(
@@ -317,8 +335,12 @@ class ClientService:
 
         Validation happens HERE, at the submit boundary: a malformed
         payload failing later inside a dispatch would take the whole
-        coalesced batch (and its reserved nonces) down with it."""
+        coalesced batch (and its reserved nonces) down with it. A named
+        lane's key context is built here too (outside ``_cond``), like
+        ``submit_encrypt``."""
         lane, p = self._resolve_lane(tenant, params)
+        if lane is not None:
+            self.registry.get(*lane)
         if isinstance(ct, Ciphertext):
             if ct.c1 is None:
                 raise ValueError("expand seeded ciphertexts "
@@ -536,6 +558,9 @@ class ClientService:
             self._loop.drain()
             with self._cond:
                 return self._completed_total - start_total
+        with self._cond:
+            queued_keys = [k for k, q in self._queues.items() if q]
+        self._prepare_lanes(queued_keys)
         with self._cond:
             enc_jobs, dec_jobs = self._coalesce_locked()
         with self._sched_lock:

@@ -47,6 +47,10 @@ _EVAL_KEYS = struct.Struct("<IIIBxxxI")  # N, L, special_q, has_relin, n_rot
 # and the wrapped inner payload, length-prefixed
 _TENANT = struct.Struct("<BHHHH16sII")   # logn, L, dec_L, delta_bits,
 #                                          p_bw, base seed, tid_len, n_inner
+# the seed plane is the 128-bit Philox width (tenancy._SEED_MASK): wider
+# or negative CKKSParams.seed values are masked into it, exactly as the
+# seed-derivation layer consumes them
+_SEED128 = (1 << 128) - 1
 
 
 def _u32_bytes(x) -> bytes:
@@ -194,13 +198,15 @@ def serialize_tenant_envelope(tenant_id, params, payload: bytes) -> bytes:
     and the full CKKS parameter fingerprint — so a multi-tenant gateway
     can route it to the right key context WITHOUT decoding the body.
     Deterministic like every other kind: same lane + same payload =>
-    identical bytes."""
+    identical bytes. The seed travels masked to its 128-bit Philox width
+    (an out-of-range ``CKKSParams.seed`` round-trips to its masked
+    value, never an OverflowError)."""
     tid = str(tenant_id).encode("utf-8")
     return b"".join([
         _header(KIND_TENANT),
         _TENANT.pack(params.logn, params.n_limbs, params.decrypt_limbs,
                      params.delta_bits, params.p_bw,
-                     int(params.seed).to_bytes(16, "little"),
+                     (int(params.seed) & _SEED128).to_bytes(16, "little"),
                      len(tid), len(payload)),
         tid,
         payload,

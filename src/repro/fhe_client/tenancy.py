@@ -8,17 +8,22 @@ safe and testable:
 
 **Stream disjointness.** Every Philox draw in the pipeline is keyed by a
 128-bit seed (``encryptor`` stream constants partition the per-seed counter
-space). Tenants therefore get *derived seeds*: ``tenant_seed(base, tid)``
-hashes the parameter-set base seed with the tenant id, so no two tenants —
-and no tenant vs. the anonymous default — can ever draw (v, e0, e1) or key
-material from the same stream, regardless of nonce accounting.
+space). Lanes therefore get *derived seeds*: ``tenant_seed(params, tid)``
+hashes the FULL parameter-set fingerprint (every ``CKKSParams`` field, not
+just the base seed — the shipped profiles all share one default base seed)
+with the tenant id, so no two ``(tenant, params)`` lanes — including the
+same tenant under two parameter sets, or the anonymous ``None`` tenant
+under two parameter sets — can ever draw (v, e0, e1) or key material from
+the same stream, regardless of nonce accounting. A registry-built lane's
+seed is always a hash output, so it also never collides with the raw base
+seed of a caller-constructed ``FHEClient`` (the service's default lane);
+use ``install`` when the caller's instance itself must be the session.
 
-**Bit-transparency.** A tenant's derived seed depends only on
-``(params.seed, tenant_id)`` — never on who else is resident, admission
-order, or registry capacity. Combined with per-tenant nonce counters this
-gives the contract the isolation tests pin: the ciphertexts a tenant
-receives co-resident are bit-identical to the ones it would receive running
-alone.
+**Bit-transparency.** A lane's derived seed depends only on
+``(params, tenant_id)`` — never on who else is resident, admission order,
+or registry capacity. Combined with per-tenant nonce counters this gives
+the contract the isolation tests pin: the ciphertexts a tenant receives
+co-resident are bit-identical to the ones it would receive running alone.
 
 The ``KeyContextRegistry`` is the retention policy: an LRU of
 ``(tenant_id, CKKSParams) -> FHEClient`` bounded to ``capacity`` live key
@@ -44,22 +49,40 @@ from repro.core.context import CKKSParams, PROFILES
 _SEED_MASK = (1 << 128) - 1
 
 
-def tenant_seed(base_seed: int, tenant_id) -> int:
-    """Derive a tenant's 128-bit Philox seed from the parameter-set base
-    seed.  ``tenant_id=None`` is the anonymous single-tenant default and
-    keeps the base seed unchanged (back-compat: a lone ``FHEClient`` and a
-    registry-managed default tenant produce bit-identical ciphertexts).
+def params_fingerprint(params) -> bytes:
+    """Canonical byte fingerprint of a ``CKKSParams`` — EVERY field, in
+    declaration order. The shipped profiles all share one default base
+    seed, so a lane identity must cover the whole parameter set: two
+    parameter sets that differ in any field (ring degree, limb counts,
+    scale, prime bit-width, base seed) are distinct lanes."""
+    params = _resolve_params(params)
+    parts = [b"ckks-lane-v1"]
+    for f in dataclasses.fields(params):
+        parts.append(f"{f.name}={getattr(params, f.name)}".encode("utf-8"))
+    return b"\x00".join(parts)
 
-    The derivation is a SHA-256 over the base seed and the tenant id —
-    deterministic, order-free, and independent of co-residents, which is
-    exactly the bit-transparency contract.
+
+def tenant_seed(params, tenant_id) -> int:
+    """Derive a ``(tenant, params)`` lane's 128-bit Philox seed: a
+    SHA-256 over the FULL parameter-set fingerprint and the tenant id.
+    Deterministic, order-free, and independent of co-residents (the
+    bit-transparency contract), and distinct across parameter sets even
+    when they share a base seed — the same tenant (or the anonymous
+    ``None`` tenant) under two parameter sets must never draw key
+    material, mask or error polynomials from one Philox stream, nor run
+    two independent nonce counters against one ledger watermark.
+
+    The digest-valued seed also structurally avoids the raw base seed a
+    caller-constructed ``FHEClient`` uses, so a registry-built anonymous
+    lane never shares a stream with the service's default client.
     """
-    if tenant_id is None:
-        return int(base_seed) & _SEED_MASK
     h = hashlib.sha256()
-    h.update(int(base_seed).to_bytes(16, "little"))
-    h.update(b"\x00tenant\x00")
-    h.update(str(tenant_id).encode("utf-8"))
+    h.update(params_fingerprint(params))
+    if tenant_id is None:
+        h.update(b"\x00anon\x00")
+    else:
+        h.update(b"\x00tenant\x00")
+        h.update(str(tenant_id).encode("utf-8"))
     return int.from_bytes(h.digest()[:16], "little") & _SEED_MASK
 
 
@@ -179,7 +202,15 @@ class KeyContextRegistry:
 
     def get(self, tenant_id, params="test") -> TenantSession:
         """Live session for ``(tenant_id, params)`` (params value or profile
-        name), building/rebuilding and LRU-bumping as needed."""
+        name), building/rebuilding and LRU-bumping as needed.
+
+        Construction (prime search, keygen, jit tracing — potentially
+        seconds) runs OUTSIDE the registry lock: one tenant's cold build
+        must never stall another tenant's counter advance or lookup. Two
+        threads racing the same cold key may both build; the first insert
+        wins and the loser's client is discarded before it ever leases a
+        nonce (same derived seed => the discarded keys were identical
+        anyway)."""
         params = _resolve_params(params)
         key = (tenant_id, params)
         with self._lock:
@@ -187,11 +218,17 @@ class KeyContextRegistry:
             if sess is not None:
                 self._sessions.move_to_end(key)
                 return sess
-            seed = tenant_seed(params.seed, tenant_id)
-            client = self._factory(params, seed, **self._client_kwargs)
+        seed = tenant_seed(params, tenant_id)
+        client = self._factory(params, seed, **self._client_kwargs)
+        with self._lock:
+            sess = self._sessions.get(key)
+            if sess is not None:          # lost the build race: keep winner
+                self._sessions.move_to_end(key)
+                return sess
             # restore the persisted watermark: a returning tenant resumes
             # its nonce sequence (fresh keys are identical — same seed —
-            # so rewinding WOULD be randomness reuse).
+            # so rewinding WOULD be randomness reuse). The ledger watermark
+            # also covers leases taken against a just-evicted session.
             client.nonce = max(int(client.nonce),
                                self._watermarks.get(key, 0),
                                self.ledger.watermark(seed))
@@ -247,9 +284,15 @@ class KeyContextRegistry:
 
     def take_nonces(self, tenant_id, params, count: int) -> int:
         """Lease ``count`` nonces for the tenant; returns the base. Advances
-        the tenant client's counter and records the lease in the ledger."""
+        the tenant client's counter and records the lease in the ledger.
+
+        Session resolution (which may cold-build) happens outside the
+        registry lock; only the counter advance + ledger record are
+        locked. If the session is evicted between the two, advancing its
+        orphaned counter is still safe: the lease lands in the ledger,
+        and re-admission resumes from the ledger watermark."""
+        sess = self.get(tenant_id, params)
         with self._lock:
-            sess = self.get(tenant_id, params)
             base = sess.client.take_nonces(count)
             self.ledger.lease(sess.seed, base, count)
             sess.leases += 1

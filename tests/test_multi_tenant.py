@@ -156,18 +156,34 @@ class TestContextCache:
 
 
 class TestTenantSeed:
-    def test_default_lane_keeps_base_seed(self):
-        assert tenant_seed(TINY.seed, None) == TINY.seed
+    def test_anon_lane_never_aliases_raw_base_seed(self):
+        # a registry-built (None, params) lane derives a digest seed, so
+        # it can never share a Philox stream with a caller-constructed
+        # FHEClient running on the raw base seed (the service default lane)
+        assert tenant_seed(TINY, None) != TINY.seed
 
     def test_derived_seeds_distinct_and_deterministic(self):
-        sa = tenant_seed(TINY.seed, "alice")
-        sb = tenant_seed(TINY.seed, "bob")
+        sa = tenant_seed(TINY, "alice")
+        sb = tenant_seed(TINY, "bob")
         assert sa != sb != TINY.seed and sa != TINY.seed
-        assert sa == tenant_seed(TINY.seed, "alice")
+        assert sa == tenant_seed(TINY, "alice")
         assert 0 <= sa < (1 << 128) and 0 <= sb < (1 << 128)
 
-    def test_seed_depends_on_base(self):
-        assert tenant_seed(1, "alice") != tenant_seed(2, "alice")
+    def test_seed_depends_on_full_fingerprint(self):
+        # THE regression (REVIEW high): every shipped profile shares one
+        # default base seed, so a base-seed-only derivation aliased the
+        # same tenant across parameter sets — identical key/error streams
+        # and two nonce counters leasing under one ledger watermark
+        assert PROFILES["tiny"].seed == PROFILES["test"].seed
+        for tid in ("alice", None):
+            assert tenant_seed(PROFILES["tiny"], tid) \
+                != tenant_seed(PROFILES["test"], tid)
+        # ...and any single differing field separates lanes too
+        import dataclasses as dc
+        for change in ({"seed": TINY.seed + 1}, {"delta_bits": 39},
+                       {"n_limbs": 4}):
+            assert tenant_seed(dc.replace(TINY, **change), "alice") \
+                != tenant_seed(TINY, "alice")
 
 
 class TestNonceLedger:
@@ -223,6 +239,24 @@ class TestRegistry:
         with pytest.raises(ValueError):
             KeyContextRegistry(capacity=0)
 
+    def test_same_tenant_two_param_sets_lease_independently(self):
+        """REVIEW high regression: one tenant under two parameter sets
+        (which share the default base seed) must land on two distinct
+        derived seeds — under the old base-seed-only derivation the two
+        lanes' independent counters leased base 0 twice under ONE seed
+        and the ledger (correctly) raised, killing the dispatch path."""
+        import dataclasses as dc
+        tiny2 = dc.replace(TINY, delta_bits=38)
+        reg = KeyContextRegistry(capacity=4)
+        for tid in ("alice", None):
+            # build BOTH lanes first — counters only sync with the ledger
+            # at session build, which is exactly what made the pre-fix
+            # interleaving deterministic: two live counters at 0, one seed
+            assert reg.get(tid, TINY).seed != reg.get(tid, tiny2).seed
+            b0 = reg.take_nonces(tid, TINY, 4)
+            b1 = reg.take_nonces(tid, tiny2, 4)     # raised pre-fix
+            assert b0 == 0 and b1 == 0
+
 
 # ---------------------------------------------------------------------------
 # bit-transparency + compiled-core retention (@ the client layer)
@@ -275,7 +309,7 @@ def test_eviction_readmission_relowers_exactly_once(pallas_call_counter):
     assert len(pallas_call_counter) == first    # ...and warm again
     # bit-transparency across the eviction: an uninterrupted solo client
     # at the same nonce position produces the same bits
-    solo = FHEClient(profile=TINY, seed=tenant_seed(TINY.seed, "alice"))
+    solo = FHEClient(profile=TINY, seed=tenant_seed(TINY, "alice"))
     solo.nonce = nonce_resume
     assert _ct_equal(ct, solo.encode_encrypt_batch(msgs))
 
@@ -301,7 +335,7 @@ def test_service_tenant_roundtrip_and_bit_transparency(tenant_svc):
     ct_a, ct_b = svc.result(rid_a), svc.result(rid_b)
     svc.result(rid_d)
     # alice's serviced row == a solo derived-seed client from nonce 0
-    solo = FHEClient(profile=TINY, seed=tenant_seed(TINY.seed, "alice"))
+    solo = FHEClient(profile=TINY, seed=tenant_seed(TINY, "alice"))
     ct_solo = solo.encode_encrypt_batch(msgs[:1])
     assert np.array_equal(np.asarray(ct_a.c0), np.asarray(ct_solo.c0)[0])
     assert np.array_equal(np.asarray(ct_a.c1), np.asarray(ct_solo.c1)[0])
@@ -327,6 +361,34 @@ def test_cross_tenant_bucket_mixing_rejected():
     ])
     with pytest.raises(ValueError, match="cross-tenant"):
         b.coalesce_enc(q, nonce0=0, n_slots=4, tenant=("alice", TINY))
+    # the raise must leave the queue INTACT: lane validation runs before
+    # any request is popped, so the crash/flush failure paths (which fail
+    # what is *in* a queue) can still reach every request — nothing is
+    # stranded mid-drain with a waiter blocked on it
+    assert [r.rid for r in q] == [0, 1]
+    with pytest.raises(ValueError, match="cross-tenant"):
+        b.coalesce_dec(q, tenant=("alice", TINY))
+    assert [r.rid for r in q] == [0, 1]
+
+
+def test_default_plus_anon_param_lane_interleave(tenant_svc):
+    """REVIEW high regression, end-to-end: ``submit_encrypt(params=...)``
+    with no tenant routes to an anonymous registry lane. Pre-fix its
+    derived seed COLLIDED with the default client's raw seed (same base
+    seed across profiles), so interleaved default-lane and anon-lane
+    encrypts leased under one seed from two counters and the ledger
+    raise killed the flush. Post-fix the lanes are seed-disjoint."""
+    import dataclasses as dc
+    svc = tenant_svc
+    tiny2 = dc.replace(TINY, delta_bits=38)
+    msgs = _msgs(TINY.n_slots, b=2, seed=23)
+    rid_anon = svc.submit_encrypt(msgs[0], params=tiny2)
+    rid_dflt = svc.submit_encrypt(msgs[1])
+    svc.flush()                                 # raised pre-fix
+    ct_anon, ct_dflt = svc.result(rid_anon), svc.result(rid_dflt)
+    assert ct_anon is not None and ct_dflt is not None
+    sess = svc.registry.peek(None, tiny2)
+    assert sess is not None and sess.seed != svc.client.seed
 
 
 def test_submit_encrypt_strict_validation(tenant_svc):
@@ -391,6 +453,22 @@ def test_wire_tenant_envelope_roundtrip():
     # deterministic: same lane + payload => identical bytes
     assert buf == wire.serialize_tenant_envelope("alice", TINY, inner)
     assert buf != wire.serialize_tenant_envelope("bob", TINY, inner)
+
+
+def test_wire_tenant_envelope_masks_wide_seeds():
+    """CKKSParams.seed is unbounded; the wire seed plane is the 128-bit
+    Philox width. Wide/negative seeds must serialize (masked), never
+    OverflowError."""
+    import dataclasses as dc
+
+    from repro.fhe_client.service import wire
+    inner = b"x"
+    for seed in ((1 << 130) + 5, -3):
+        p = dc.replace(TINY, seed=seed)
+        tid, got, payload = wire.deserialize_tenant_envelope(
+            wire.serialize_tenant_envelope("alice", p, inner))
+        assert tid == "alice" and payload == inner
+        assert got.seed == seed & ((1 << 128) - 1)
 
 
 # ---------------------------------------------------------------------------
