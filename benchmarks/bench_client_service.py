@@ -54,9 +54,39 @@ def _mix_requests(n_enc: int, n_dec: int):
     return kinds
 
 
+def telemetry_block(service) -> dict:
+    """The ``telemetry`` block attached to benchmarks.json rows: per-stage
+    histogram summaries (count/p50/p99 seconds, bucket-interpolated) plus
+    windowed job/event counters — enough to see WHERE a row's time went
+    (queue_wait vs dispatch vs execute) without shipping the full trace."""
+    st = service.stats()
+    return {
+        "stages": st["stages"],
+        "jobs_by_stream": {str(k): v for k, v in
+                           st["jobs_by_stream"].items()},
+        "rounds": st["rounds"],
+        "events": st["events"],
+        "spans": st["telemetry"]["spans"],
+        "spans_dropped": st["telemetry"]["spans_dropped"],
+    }
+
+
+def _export_telemetry(service, telemetry_dir, prefix="service"):
+    """Write (validated) Chrome trace + metrics snapshot artifacts for the
+    service's current telemetry window; returns the two paths."""
+    os.makedirs(telemetry_dir, exist_ok=True)
+    trace_path = os.path.join(telemetry_dir, f"{prefix}_trace.json")
+    metrics_path = os.path.join(telemetry_dir, f"{prefix}_metrics.json")
+    service.export_trace(trace_path)           # validates before writing
+    with open(metrics_path, "w") as f:
+        json.dump(service.telemetry_snapshot(), f, indent=1)
+    return trace_path, metrics_path
+
+
 def run(profile: str = "test", n_enc: int = 40, n_dec: int = 4,
         buckets=(1, 4, 16), reps: int = 2, open_loop: bool = True,
-        load_fracs=(0.5, 0.8, 1.2), max_wait_ms: float = 5.0):
+        load_fracs=(0.5, 0.8, 1.2), max_wait_ms: float = 5.0,
+        telemetry_dir=None):
     import jax
 
     from repro.fhe_client.client import FHEClient
@@ -108,17 +138,20 @@ def run(profile: str = "test", n_enc: int = 40, n_dec: int = 4,
         return lats
 
     service_once()                               # warm (bucket traces)
-    log_start = len(service.dispatch_log)        # exclude warm-up rounds
-    t0 = time.perf_counter()
-    lats = []
-    for _ in range(reps):
-        lats += service_once()
+    service.reset_telemetry()                    # timed window only: the
+    t0 = time.perf_counter()                     # dispatch log, metrics and
+    for _ in range(reps):                        # trace ring all restart here
+        service_once()
     t_service = (time.perf_counter() - t0) / reps
 
     stats = service.stats()
-    p50, p99 = np.percentile(np.asarray(lats) * 1e6, [50, 99])
+    # latency percentiles come from the fhe_stage_seconds histogram (the
+    # "total" stage = submit->demux), bucket-interpolated — the same
+    # numbers stats()/the metrics snapshot report, one source of truth
+    total = stats["stages"]["total"]
+    p50, p99 = total["p50_s"] * 1e6, total["p99_s"] * 1e6
     timed_modes = [m.value for m, _k in
-                   service.scheduler.modes_executed(start=log_start)]
+                   service.scheduler.modes_executed()]
     per_run = len(timed_modes) // reps           # one rep's round schedule
     modes = ",".join(timed_modes[:per_run][:8])
     rows = [{
@@ -138,7 +171,12 @@ def run(profile: str = "test", n_enc: int = 40, n_dec: int = 4,
                    f"shards_per_stream={stats['shards_per_stream']};"
                    f"buckets={'/'.join(map(str, stats['buckets']))};"
                    f"modes={modes}",
+        "telemetry": telemetry_block(service),
     }]
+    if telemetry_dir is not None:
+        tp, mp = _export_telemetry(service, telemetry_dir)
+        print(f"# telemetry artifacts: {os.path.relpath(tp)} "
+              f"{os.path.relpath(mp)}")
     if open_loop:
         rows += run_open_loop(profile=profile, n_req=n_req,
                               load_fracs=load_fracs, buckets=buckets,
@@ -236,12 +274,16 @@ def run_open_loop(profile: str = "test", n_req: int = 44,
                         d += 1
                 svc.flush()
                 t_total = _time.perf_counter() - t0
-                lats = [svc.latency(r) for r in rids]   # raises if any lost
                 for r in rids:
+                    svc.latency(r)              # raises if any request lost
                     svc.result(r)
                 stats = svc.stats()
+                tele = telemetry_block(svc)
                 requeues = len(svc.events.replay("requeue"))
-            p50, p99 = np.percentile(np.asarray(lats) * 1e3, [50, 99])
+            # submit->demux percentiles from the stage histogram (bucket-
+            # interpolated; same source as the telemetry block)
+            total = stats["stages"]["total"]
+            p50, p99 = total["p50_s"] * 1e3, total["p99_s"] * 1e3
             rows.append({
                 "bench": "client_service_openloop",
                 "name": f"{profile}_poisson_load{frac:g}"
@@ -258,6 +300,7 @@ def run_open_loop(profile: str = "test", n_req: int = 44,
                            f"alive_streams={len(stats['alive_streams'])}"
                            f"/{stats['n_streams']};"
                            f"completed={stats['completed']}",
+                "telemetry": tele,
             })
     return rows
 
@@ -295,13 +338,18 @@ def main():
                     help="always-on partial-bucket deadline (ms)")
     ap.add_argument("--no-open-loop", action="store_true",
                     help="skip the open-loop Poisson sweep")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="export service_trace.json (validated Chrome "
+                         "trace) + service_metrics.json (metrics snapshot) "
+                         "for the timed closed-loop window into this dir")
     args = ap.parse_args()
     buckets = tuple(int(b) for b in args.buckets.split(","))
     load_fracs = tuple(float(x) for x in args.loads.split(","))
     rows = run(profile=args.profile, n_enc=args.n_enc, n_dec=args.n_dec,
                buckets=buckets, reps=args.reps,
                open_loop=not args.no_open_loop, load_fracs=load_fracs,
-               max_wait_ms=args.max_wait_ms)
+               max_wait_ms=args.max_wait_ms,
+               telemetry_dir=args.telemetry_dir)
     print("bench,name,us_per_call,derived")
     for r in rows:
         print(f"{r['bench']},{r['name']},{r['us_per_call']},"

@@ -34,34 +34,11 @@ import time
 
 import numpy as np
 
-from benchmarks.bench_client_service import merge_rows, _mix_requests
+from benchmarks.bench_client_service import (merge_rows, _mix_requests,
+                                             telemetry_block)
+from repro.telemetry import jit_cache_entries
 
 FAST_PRESETS = ("tiny", "tinyboot")
-
-
-def _lane_clients(service, tenants):
-    """Every client serving a lane: the default + each named tenant."""
-    clients = [service.client]
-    for t in tenants:
-        clients.append(
-            service.registry.get(t, service.client.ctx.params).client)
-    return clients
-
-
-def _jit_cache_sizes(clients):
-    """Total jit-cache entries across every lane client's cores — the
-    re-lowering odometer: any warm-path retrace bumps it."""
-    total = 0
-    for c in clients:
-        for name in ("_encrypt_core", "_decrypt_core",
-                     "_encrypt_core_dev", "_decrypt_core_dev",
-                     "_encrypt_core_mega", "_decrypt_core_mega",
-                     "_encrypt_core_dev32", "_decrypt_core_dev32",
-                     "_encrypt_core_mega32", "_decrypt_core_mega32"):
-            core = getattr(c, name, None)
-            if core is not None and hasattr(core, "_cache_size"):
-                total += core._cache_size()
-    return total
 
 
 def run_preset(preset: str, tenants=("alice", "bob"), n_enc: int = 20,
@@ -110,8 +87,12 @@ def run_preset(preset: str, tenants=("alice", "bob"), n_enc: int = 20,
         return lats
 
     one_pass()                                # warm every (lane, bucket)
-    clients = _lane_clients(service, tenants)
-    warm_jit = _jit_cache_sizes(clients)
+    # the shared re-lowering probe (telemetry.probe — same odometer the
+    # service's telemetry_snapshot exports as fhe_jit_cache_entries).
+    # Warm-up made every tenant resident, so lane_clients() is complete.
+    clients = service.lane_clients()
+    warm_jit = jit_cache_entries(clients)
+    service.reset_telemetry()                 # timed window only
 
     t0 = time.perf_counter()
     lats = []
@@ -119,7 +100,7 @@ def run_preset(preset: str, tenants=("alice", "bob"), n_enc: int = 20,
         lats += one_pass()
     t_total = (time.perf_counter() - t0) / reps
 
-    relowered = _jit_cache_sizes(clients) - warm_jit
+    relowered = jit_cache_entries(clients) - warm_jit
     n_req = len(kinds)
     p50, p99 = np.percentile(np.asarray(lats) * 1e6, [50, 99])
     reg = service.registry.stats()
@@ -137,6 +118,7 @@ def run_preset(preset: str, tenants=("alice", "bob"), n_enc: int = 20,
                    f"registry_evictions={reg['evictions']};"
                    f"nonce_leases={reg['leases_granted']};"
                    f"buckets={'/'.join(map(str, buckets))}",
+        "telemetry": telemetry_block(service),
     }, relowered
 
 

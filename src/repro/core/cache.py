@@ -42,6 +42,14 @@ def plans_key(plans) -> tuple[tuple[int, int], ...]:
     return tuple(plan_key(p) for p in plans)
 
 
+# named caches register here so the telemetry layer can walk every
+# bounded memo's hit/miss/eviction counters (``cache_stats``) without the
+# cache module depending on telemetry. Module-global memos live for the
+# process, so a plain dict (no weakrefs) is the right lifetime.
+_NAMED_CACHES: dict[str, "LRUCache"] = {}
+_NAMED_LOCK = threading.Lock()
+
+
 class LRUCache:
     """Bounded content-keyed memo: ``get_or_build(key, build)`` with LRU
     eviction past ``capacity``. An optional ``on_evict(key, value)`` hook
@@ -54,16 +62,28 @@ class LRUCache:
     the lock across ``build()`` serializes same-cache cold builds, which
     is exactly what prevents two threads from double-building expensive
     derived state (and from evicting entries out from under each other);
-    nested use of the same cache from inside a build is fine (RLock)."""
+    nested use of the same cache from inside a build is fine (RLock).
 
-    def __init__(self, capacity: int, on_evict: Callable | None = None):
+    Observability: ``hits``/``misses``/``evictions`` are plain counters
+    bumped under the existing lock (no extra cost on the hot path); a
+    ``name`` registers the cache for ``cache_stats()``, which the
+    telemetry snapshot exports as gauges."""
+
+    def __init__(self, capacity: int, on_evict: Callable | None = None,
+                 name: str | None = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = int(capacity)
+        self.name = name
         self._data: OrderedDict = OrderedDict()
         self._on_evict = on_evict
         self._lock = threading.RLock()
         self.evictions = 0
+        self.hits = 0
+        self.misses = 0
+        if name is not None:
+            with _NAMED_LOCK:
+                _NAMED_CACHES[name] = self
 
     def __len__(self) -> int:
         with self._lock:
@@ -76,15 +96,19 @@ class LRUCache:
     def get(self, key, default=None):
         with self._lock:
             if key in self._data:
+                self.hits += 1
                 self._data.move_to_end(key)
                 return self._data[key]
+            self.misses += 1
             return default
 
     def get_or_build(self, key, build: Callable):
         with self._lock:
             if key in self._data:
+                self.hits += 1
                 self._data.move_to_end(key)
                 return self._data[key]
+            self.misses += 1
             value = build()
             self._data[key] = value
             self._data.move_to_end(key)
@@ -124,3 +148,32 @@ class LRUCache:
     def keys(self):
         with self._lock:
             return list(self._data.keys())
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"size": len(self._data), "capacity": self.capacity,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions}
+
+
+def cache_stats() -> dict:
+    """{name: {size, capacity, hits, misses, evictions}} over every
+    bounded derived-state memo in the process — the six ISSUE-8 caches:
+    the five named ``LRUCache`` memos (NTT plan consts, stacked kernel
+    consts, server consts, stacked plans, contexts) plus the two
+    ``functools.lru_cache`` layers beneath them (``make_plan``,
+    ``find_ntt_friendly_primes``), read through ``cache_info()``. The
+    telemetry snapshot exports these as gauges; importing here is lazy so
+    ``core.cache`` stays dependency-free."""
+    with _NAMED_LOCK:
+        out = {name: c.stats() for name, c in sorted(_NAMED_CACHES.items())}
+    from repro.core.ntt import make_plan
+    from repro.core.primes import find_ntt_friendly_primes
+    for name, fn in (("ntt_plans", make_plan),
+                     ("ntt_primes", find_ntt_friendly_primes)):
+        info = fn.cache_info()
+        out[name] = {"size": info.currsize, "capacity": info.maxsize,
+                     "hits": info.hits, "misses": info.misses,
+                     "evictions": max(
+                         0, info.misses - info.currsize)}
+    return out

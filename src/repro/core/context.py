@@ -154,7 +154,7 @@ class CKKSContext:
 # LRU: live holders (FHEClient.ctx, evaluators) keep their context working
 # after eviction (derived-constant memos are content-keyed, so nothing
 # dangles); only re-REQUESTING an evicted parameter set rebuilds.
-_CONTEXT_CACHE = cache.LRUCache(capacity=16)
+_CONTEXT_CACHE = cache.LRUCache(capacity=16, name="contexts")
 
 
 def context_for(params: CKKSParams) -> CKKSContext:

@@ -237,7 +237,7 @@ class StackedPlans:
         return arr_1d.reshape((self.n_limbs,) + (1,) * (ndim - 1))
 
 
-_STACKED_MEMO = cache.LRUCache(capacity=16)
+_STACKED_MEMO = cache.LRUCache(capacity=16, name="stacked_plans")
 
 
 def stack_plans(plans) -> StackedPlans:

@@ -25,17 +25,19 @@ from repro.fhe_client.service.faults import (AllStreamsFailed, EventLog,
 from repro.fhe_client.service.scheduler import (DispatchRecord,
                                                 DualStreamScheduler,
                                                 StreamExecutor)
-from repro.fhe_client.service.service import ClientService, QueueFull
+from repro.fhe_client.service.service import (ClientService, QueueFull,
+                                              lane_fingerprint)
 from repro.fhe_client.tenancy import (KeyContextRegistry, NonceLease,
                                       NonceLedger, TenantSession,
                                       params_fingerprint, tenant_seed)
+from repro.telemetry import ServiceTelemetry
 
 __all__ = [
     "AllStreamsFailed", "ClientService", "CoalescingBatcher",
     "DEFAULT_BUCKETS", "DecJob", "DispatchRecord", "DualStreamScheduler",
     "EncJob", "EventLog", "FaultInjector", "FaultSpec",
     "KeyContextRegistry", "NonceLease", "NonceLedger", "QueueFull",
-    "Request", "RequestFailed", "ServiceEvent", "StreamFault",
-    "StreamExecutor", "TenantSession", "params_fingerprint",
-    "tenant_seed", "wire",
+    "Request", "RequestFailed", "ServiceEvent", "ServiceTelemetry",
+    "StreamFault", "StreamExecutor", "TenantSession", "lane_fingerprint",
+    "params_fingerprint", "tenant_seed", "wire",
 ]

@@ -49,6 +49,8 @@ class Request:
     payload: object
     t_submit: float
     tenant: object = None        # lane key; None = default tenant
+    span: object = None          # telemetry span context (None when the
+                                 # request is unsampled or tracing is off)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +62,8 @@ class EncJob:
     t_submits: tuple             # submit timestamp per real row
     kind: str = "enc"
     tenant: object = None        # lane key this whole bucket belongs to
+    spans: tuple = ()            # telemetry span per real row (Nones ok)
+    t_coalesce: float = 0.0      # when this job was coalesced (0 = unset)
 
     @property
     def bucket(self) -> int:
@@ -79,6 +83,8 @@ class DecJob:
     t_submits: tuple
     kind: str = "dec"
     tenant: object = None        # lane key this whole bucket belongs to
+    spans: tuple = ()            # telemetry span per real row (Nones ok)
+    t_coalesce: float = 0.0      # when this job was coalesced (0 = unset)
 
     @property
     def bucket(self) -> int:
@@ -171,7 +177,8 @@ class CoalescingBatcher:
                 messages=msgs, nonce0=nonce0 + used,
                 rids=tuple(r.rid for r in reqs),
                 t_submits=tuple(r.t_submit for r in reqs),
-                tenant=tenant))
+                tenant=tenant,
+                spans=tuple(r.span for r in reqs), t_coalesce=now()))
             used += b
         return jobs, used
 
@@ -198,7 +205,8 @@ class CoalescingBatcher:
                 scales=scales,
                 rids=tuple(r.rid for r in reqs),
                 t_submits=tuple(r.t_submit for r in reqs),
-                tenant=tenant))
+                tenant=tenant,
+                spans=tuple(r.span for r in reqs), t_coalesce=now()))
         return jobs
 
 

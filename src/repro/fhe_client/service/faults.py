@@ -87,11 +87,19 @@ class EventLog:
     ``replay(kind=...)`` filters chronologically — the fault tests assert
     recovery through this, and long-running services read it as telemetry
     (bounded at ``maxlen`` events so it never grows without limit).
+
+    ``sink`` is the telemetry seam: every recorded event is also handed to
+    it (outside the log's lock), which is how scheduler stream-death /
+    requeue / retry accounting and the runtime's fire/reject events fold
+    into the labeled metric counters (``ServiceTelemetry.event_sink``)
+    without this module depending on the metrics layer.
     """
 
-    def __init__(self, maxlen: int = 4096, clock=time.monotonic):
+    def __init__(self, maxlen: int = 4096, clock=time.monotonic,
+                 sink=None):
         self.maxlen = maxlen
         self.clock = clock
+        self.sink = sink
         self._events: list[ServiceEvent] = []
         self._seq = itertools.count()
         self._lock = threading.Lock()
@@ -105,6 +113,8 @@ class EventLog:
             self._events.append(ev)
             if len(self._events) > self.maxlen:
                 del self._events[:len(self._events) - self.maxlen]
+        if self.sink is not None:
+            self.sink(ev)
         return ev
 
     def replay(self, kind: str | None = None) -> list[ServiceEvent]:

@@ -37,7 +37,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import scheduler as policy
 from repro.distributed import sharding as shd
-from repro.fhe_client.service.batcher import DecJob, EncJob
+from repro.fhe_client.service.batcher import DecJob, EncJob, now
 from repro.fhe_client.service.faults import AllStreamsFailed, EventLog
 from repro.kernels import ops as kops
 
@@ -54,6 +54,7 @@ class DispatchRecord:
     bucket: int
     rids: tuple
     attempt: int = 0
+    t_launch: float = 0.0           # monotonic launch timestamp (0 = unset)
 
 
 class StreamExecutor:
@@ -173,12 +174,13 @@ class DualStreamScheduler:
 
     def __init__(self, client, devices=None, n_streams: int | None = None,
                  oversubscribe: bool = False, faults=None, events=None,
-                 client_for=None):
+                 client_for=None, telemetry=None):
         groups = shd.stream_groups(devices, n_streams,
                                    oversubscribe=oversubscribe)
         self.streams = [StreamExecutor(client, g, i, client_for=client_for)
                         for i, g in enumerate(groups)]
         self.faults = faults
+        self.telemetry = telemetry
         self.events = events if events is not None else EventLog()
         self._alive = [True] * len(self.streams)
         self.log: list[DispatchRecord] = []
@@ -264,10 +266,18 @@ class DualStreamScheduler:
                         rids=job.rids, detail=f"launch failed: {e}")
                     self.mark_failed(stream, detail=repr(e))
                     break               # re-plan the round over survivors
-                self.log.append(DispatchRecord(
+                rec = DispatchRecord(
                     round=self._round, stream=stream, kind=kind, mode=mode,
-                    bucket=job.bucket, rids=job.rids))
-                launched.append((self.log[-1], job, out))
+                    bucket=job.bucket, rids=job.rids, t_launch=now())
+                self.log.append(rec)
+                if self.telemetry is not None:
+                    self.telemetry.on_launch(rec, job)
+                launched.append((rec, job, out))
+            else:
+                # full round launched: count it by mode (a broken round
+                # re-plans and is counted when it completes)
+                if self.telemetry is not None:
+                    self.telemetry.on_round(mode)
             self._round += 1
         return launched, list(enc_q) + list(dec_q)
 
@@ -296,8 +306,11 @@ class DualStreamScheduler:
             rec = DispatchRecord(
                 round=self._round, stream=stream, kind=kind,
                 mode=policy.round_mode((kind,)), bucket=job.bucket,
-                rids=job.rids, attempt=attempt)
+                rids=job.rids, attempt=attempt, t_launch=now())
             self.log.append(rec)
+            if self.telemetry is not None:
+                self.telemetry.on_launch(rec, job)
+                self.telemetry.on_round(rec.mode)
             self._round += 1
             return rec, out
 

@@ -41,12 +41,14 @@ pin exactly this.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import threading
 from collections import deque
 
 import numpy as np
 import jax
 
+from repro.core import cache as core_cache
 from repro.core import scheduler as policy
 from repro.core.context import CKKSParams, PROFILES
 from repro.core.encryptor import Ciphertext, CiphertextBatch
@@ -58,7 +60,23 @@ from repro.fhe_client.service.batcher import (CoalescingBatcher,
 from repro.fhe_client.service.faults import (AllStreamsFailed, EventLog,
                                              RequestFailed)
 from repro.fhe_client.service.scheduler import DualStreamScheduler
-from repro.fhe_client.tenancy import KeyContextRegistry
+from repro.fhe_client.tenancy import (KeyContextRegistry,
+                                      params_fingerprint)
+from repro.telemetry import ServiceTelemetry, jit_cache_entries
+
+
+def lane_fingerprint(lane) -> str:
+    """Short, stable metric/trace label for a lane: ``"default"`` for the
+    anonymous lane, else a hash over the tenant id and the FULL parameter
+    fingerprint. Telemetry label values are fingerprints by contract —
+    they never carry raw tenant identifiers, plaintext, keys or seeds."""
+    if lane is None:
+        return "default"
+    tenant_id, params = lane
+    h = hashlib.sha256()
+    h.update(params_fingerprint(params))
+    h.update(b"\x00lane\x00" + str(tenant_id).encode("utf-8"))
+    return h.hexdigest()[:12]
 
 
 class QueueFull(RuntimeError):
@@ -101,7 +119,9 @@ class ClientService:
                  job_timeout_s: float | None = None,
                  straggler_factor: float = 4.0, straggler_patience: int = 2,
                  registry: KeyContextRegistry | None = None,
-                 tenant_capacity: int = 4):
+                 tenant_capacity: int = 4,
+                 telemetry: ServiceTelemetry | bool | None = None,
+                 trace_capacity: int = 4096, trace_sample_every: int = 1):
         if backpressure not in ("block", "reject"):
             raise ValueError(f"backpressure must be 'block' or 'reject', "
                              f"got {backpressure!r}")
@@ -109,6 +129,20 @@ class ClientService:
             raise ValueError(f"fire_mode must be one of "
                              f"{policy.FIRE_MODES}, got {fire_mode!r}")
         self.client = client if client is not None else FHEClient(profile)
+        # Telemetry scope (ON by default; spans sampled per
+        # ``trace_sample_every``). ``telemetry=False`` builds a disabled
+        # scope: every hook short-circuits on one boolean, no span is
+        # allocated, no metric series created — the near-zero-cost path
+        # the disabled-overhead test pins. Pass a ``ServiceTelemetry`` to
+        # share one scope across services.
+        if isinstance(telemetry, ServiceTelemetry):
+            self.telemetry = telemetry
+        else:
+            enabled = True if telemetry is None else bool(telemetry)
+            self.telemetry = ServiceTelemetry(
+                enabled=enabled, trace_capacity=trace_capacity,
+                sample_every=trace_sample_every, clock=now)
+        self._lane_fps: dict = {}     # lane -> fingerprint label (memo)
         # Multi-tenant key contexts: named tenants resolve through the
         # registry (derived seeds, per-tenant nonce counters, LRU-bounded
         # compiled cores). The anonymous default tenant (lane None) is
@@ -118,11 +152,11 @@ class ClientService:
         # through the shared ledger, so overlap with any tenant is caught.
         self.registry = registry if registry is not None \
             else KeyContextRegistry(capacity=tenant_capacity)
-        self.events = EventLog(clock=now)
+        self.events = EventLog(clock=now, sink=self.telemetry.event_sink)
         self.scheduler = DualStreamScheduler(
             self.client, devices=devices, n_streams=n_streams,
             oversubscribe=oversubscribe, faults=faults, events=self.events,
-            client_for=self._client_for)
+            client_for=self._client_for, telemetry=self.telemetry)
         self.batcher = CoalescingBatcher(
             buckets, pad_multiple=self.scheduler.pad_multiple)
         self.monitor = FleetMonitor(
@@ -238,6 +272,14 @@ class ClientService:
         tenant_id, params = lane
         return self.registry.take_nonces(tenant_id, params, count)
 
+    def _lane_fp(self, lane) -> str:
+        """Memoized telemetry label for a lane (bounded: lanes are bounded
+        by the queue table, which lives for the service)."""
+        fp = self._lane_fps.get(lane)
+        if fp is None:
+            fp = self._lane_fps[lane] = lane_fingerprint(lane)
+        return fp
+
     def _prepare_lanes(self, keys):
         """Build/readmit the tenant session behind every named lane in
         ``keys`` (an iterable of (lane, kind) queue keys) OUTSIDE
@@ -257,6 +299,7 @@ class ClientService:
         saturating its lane never blocks another's submits."""
         self._check_loop()
         key = (lane, kind)
+        fp = self._lane_fp(lane)
         with self._cond:
             q = self._queues.get(key)
             if q is None:
@@ -265,6 +308,7 @@ class ClientService:
             if cap is not None:
                 if self.backpressure == "reject":
                     if len(q) >= cap:
+                        self.telemetry.on_reject(fp, kind)
                         self.events.record("reject", detail=f"{kind} queue "
                                            f"at capacity {cap}")
                         raise QueueFull(
@@ -275,6 +319,7 @@ class ClientService:
                     while len(q) >= cap:
                         remaining = deadline - now()
                         if remaining <= 0 or not self.running:
+                            self.telemetry.on_reject(fp, kind)
                             self.events.record(
                                 "reject", detail=f"{kind} submit timed out "
                                 f"after {self.submit_timeout_s}s at "
@@ -285,8 +330,11 @@ class ClientService:
                         self._cond.wait(timeout=remaining)
             rid = self._next_rid
             self._next_rid += 1
+            t = now()
+            span = self.telemetry.on_submit(rid, kind, fp, t)
             q.append(Request(rid=rid, kind=kind, payload=payload,
-                             t_submit=now(), tenant=lane))
+                             t_submit=t, tenant=lane, span=span))
+            self.telemetry.on_admit(span, fp, kind, len(q), t)
             self._cond.notify_all()   # wake the dispatch loop
         return rid
 
@@ -411,6 +459,7 @@ class ClientService:
                 else decision.get(key, (False, False))
             if not fire or not self._queues[key]:
                 continue
+            fp = self._lane_fp(lane)
             if kind == "enc":
                 p = lane[1] if lane is not None else self.client.ctx.params
                 jobs, n_nonces = self.batcher.coalesce_enc(
@@ -418,12 +467,19 @@ class ClientService:
                     allow_partial=partial, tenant=lane)
                 if n_nonces:
                     base = self._take_nonces(lane, n_nonces)
+                    t_lease = now()
                     jobs = [dataclasses.replace(j, nonce0=base + j.nonce0)
                             for j in jobs]
+                    for j in jobs:
+                        self.telemetry.on_lease(j, t_lease)
                 enc_jobs += jobs
             else:
-                dec_jobs += self.batcher.coalesce_dec(
+                jobs = self.batcher.coalesce_dec(
                     self._queues[key], allow_partial=partial, tenant=lane)
+                dec_jobs += jobs
+            depth = len(self._queues[key])
+            for j in jobs:
+                self.telemetry.on_coalesce(j, fp, depth)
         self._inflight += sum(j.n_real for j in enc_jobs + dec_jobs)
         if enc_jobs or dec_jobs:
             self._cond.notify_all()   # queue space freed: wake submitters
@@ -448,6 +504,7 @@ class ClientService:
             self._inflight -= job.n_real
             self._completed_total += job.n_real
             self._cond.notify_all()
+        self.telemetry.on_complete(job, self._lane_fp(job.tenant), t_done)
 
     def _fail(self, job, attempt, cause):
         """Exhausted retries (or no streams left): fail the job's rids."""
@@ -459,6 +516,7 @@ class ClientService:
             self._inflight -= job.n_real
             self._completed_total += job.n_real
             self._cond.notify_all()
+        self.telemetry.on_fail(job, self._lane_fp(job.tenant), now())
 
     def _demux(self, job, out):
         """Materialized job output -> real result rows, under the job's
@@ -507,6 +565,7 @@ class ClientService:
             break
         dt = now() - t0
         t_done = now()
+        self.telemetry.on_materialize(rec, job, t_done)
         with self._sched_lock:
             self.monitor.heartbeat(rec.stream)
             self.monitor.report_step_time(rec.stream, dt)
@@ -584,6 +643,7 @@ class ClientService:
             row = self._results.pop(rid) if consume else self._results[rid]
             if consume:
                 self._consumed.add(rid)
+                self.telemetry.on_result(rid, now())
             return row
         return _PENDING
 
@@ -669,13 +729,32 @@ class ClientService:
         return self._latencies[rid]
 
     def reset_telemetry(self):
-        """Drop accumulated latencies, events and the dispatch log
+        """Start a new telemetry WINDOW: drop accumulated latencies,
+        events, the dispatch log, every metric series and the trace ring
         (results still pending retrieval are kept). Bounds memory on
-        long-running services; per-window stats start fresh afterwards."""
+        long-running services; per-window stats start fresh afterwards.
+
+        Window semantics — what a reset does and does not clear:
+
+          * WINDOWED (cleared together, so they always reconcile):
+            per-rid latencies, the ``EventLog``, the scheduler dispatch
+            log + round counter, every metric series (counters,
+            gauges, ``fhe_stage_seconds`` histograms), and the span ring.
+            ``stats()`` keys derived from these — ``jobs_dispatched``,
+            ``rounds``, ``jobs_by_stream``, ``modes``, ``events``,
+            ``stages`` — restart at zero, and the ``fhe_jobs_total``
+            counter restarts WITH the dispatch log (the two are asserted
+            equal in tests; neither can silently drift past the other).
+          * LIFETIME (never cleared here): ``completed``, ``retries``,
+            ``failed_requests``, registry/ledger accounting
+            (builds/evictions/leases), pending results and queued
+            requests. These answer "what has this service ever done",
+            not "what happened this window"."""
         with self._cond:
             self._latencies.clear()
         self.events.clear()
         self.scheduler.clear_log()
+        self.telemetry.reset()
 
     # --- batch conveniences (the example / bench entry points) -------------
 
@@ -736,7 +815,46 @@ class ClientService:
             "failed_requests": failed,
             "retries": self._retries_total,
             "events": len(self.events),
+            "stages": self.telemetry.stage_summaries(),
+            "telemetry": {
+                "enabled": self.telemetry.enabled,
+                "spans": len(self.telemetry.tracer),
+                "spans_dropped": self.telemetry.tracer.dropped,
+                "sample_every": self.telemetry.tracer.sample_every,
+            },
         }
+
+    def telemetry_snapshot(self) -> dict:
+        """One JSON-able snapshot of everything the service can observe:
+        the labeled metric series (+ histogram buckets), trace-ring state,
+        every bounded derived-state memo's hit/miss/eviction counters
+        (``core.cache.cache_stats``), key-context registry accounting, the
+        nonce-ledger lease total, and the jit re-lowering odometer over
+        all resident tenant clients (``fhe_jit_cache_entries`` — a fixed
+        warm workload leaves it unchanged; a delta is a retrace)."""
+        snap = self.telemetry.snapshot()
+        reg = self.registry.stats()
+        snap["caches"] = core_cache.cache_stats()
+        snap["registry"] = {
+            "resident": reg["resident"],
+            "capacity": reg["capacity"],
+            "evictions": reg["evictions"],
+            "builds_total": sum(reg["builds"].values()),
+            "leases_granted": reg["leases_granted"],
+        }
+        snap["fhe_jit_cache_entries"] = jit_cache_entries(
+            self.lane_clients())
+        return snap
+
+    def lane_clients(self) -> list:
+        """Every client currently serving a lane: the default-lane client
+        plus each resident tenant session's (the re-lowering probe set)."""
+        return [self.client] + self.registry.resident_clients()
+
+    def export_trace(self, path) -> dict:
+        """Validate + write the Chrome trace JSON (Perfetto-loadable) for
+        the current window; returns the trace dict."""
+        return self.telemetry.export_chrome_trace(path)
 
 
 class _Pending:

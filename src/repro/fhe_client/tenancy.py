@@ -308,6 +308,12 @@ class KeyContextRegistry:
         with self._lock:
             return list(self._sessions.keys())
 
+    def resident_clients(self) -> list:
+        """Live clients of every resident session (LRU order, oldest
+        first) — the set the jit re-lowering probe walks."""
+        with self._lock:
+            return [s.client for s in self._sessions.values()]
+
     def stats(self) -> dict:
         with self._lock:
             return {

@@ -141,7 +141,7 @@ class PlanConsts:
                 + sum(len(f) for f in self.inv_factors) + 2)
 
 
-_PLAN_CONSTS_MEMO = cache.LRUCache(capacity=256)
+_PLAN_CONSTS_MEMO = cache.LRUCache(capacity=256, name="plan_consts")
 
 
 def plan_consts(plan: NTTPlan) -> PlanConsts:
@@ -236,7 +236,7 @@ class StackedKernelConsts:
         return self.logn - 1 - st                 # h = N >> (st+1)
 
 
-_STACKED_KC_MEMO = cache.LRUCache(capacity=64)
+_STACKED_KC_MEMO = cache.LRUCache(capacity=64, name="stacked_kernel_consts")
 
 
 def stacked_kernel_consts(plans) -> StackedKernelConsts:

@@ -78,7 +78,7 @@ class ServerConsts:
     off_qdinv: int               # rescale by the dropped prime (rows < l-1)
 
 
-_SERVER_CONSTS_MEMO = cache.LRUCache(capacity=64)
+_SERVER_CONSTS_MEMO = cache.LRUCache(capacity=64, name="server_consts")
 
 
 def server_consts(ctx: CKKSContext, level: int) -> ServerConsts:

@@ -1,0 +1,38 @@
+"""Re-lowering probe: the jit-cache odometer, promoted out of
+``bench_workload_matrix`` (which kept a private copy) into the telemetry
+layer so the bench's ``warm_relowerings`` column, its strict-mode
+failure, the workload tests and the service metrics snapshot all read ONE
+source of truth.
+
+A warm service must never re-lower: every (kind, bucket, datapath) shape
+is traced during warm-up and later traffic hits the jit cache. The probe
+counts the jit-cache entries across a set of clients' core callables;
+any warm-path retrace bumps the count. ``jit_cache_entries`` is also
+exported as the ``fhe_jit_cache_entries`` gauge by
+``ClientService.telemetry_snapshot``.
+"""
+
+from __future__ import annotations
+
+# every jitted client core, across pipeline (staged/megakernel/device) and
+# datapath (f64/df32) variants — the full re-lowering surface of one client
+CLIENT_CORE_ATTRS = (
+    "_encrypt_core", "_decrypt_core",
+    "_encrypt_core_dev", "_decrypt_core_dev",
+    "_encrypt_core_mega", "_decrypt_core_mega",
+    "_encrypt_core_dev32", "_decrypt_core_dev32",
+    "_encrypt_core_mega32", "_decrypt_core_mega32",
+)
+
+
+def jit_cache_entries(clients) -> int:
+    """Total jit-cache entries across every listed client's cores. A
+    fixed workload replayed against a warm client set leaves this
+    UNCHANGED; any delta is a re-lowering (trace/compile) regression."""
+    total = 0
+    for c in clients:
+        for name in CLIENT_CORE_ATTRS:
+            core = getattr(c, name, None)
+            if core is not None and hasattr(core, "_cache_size"):
+                total += core._cache_size()
+    return total
