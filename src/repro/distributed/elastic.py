@@ -27,6 +27,10 @@ class HostState:
     step_times: list = dataclasses.field(default_factory=list)
     slow_streak: int = 0
     alive: bool = True
+    # streak idempotency: how many step reports exist vs how many the
+    # straggler judge has already counted toward the streak
+    reported_steps: int = 0
+    judged_steps: int = 0
 
 
 class FleetMonitor:
@@ -72,6 +76,7 @@ class FleetMonitor:
         h = self.hosts[host]
         h.alive = True
         h.slow_streak = 0
+        h.judged_steps = h.reported_steps
         h.last_heartbeat = self.clock()
 
     @property
@@ -83,10 +88,16 @@ class FleetMonitor:
     def report_step_time(self, host: int, seconds: float):
         h = self.hosts[host]
         h.step_times.append(seconds)
+        h.reported_steps += 1
         if len(h.step_times) > 16:
             h.step_times.pop(0)
 
     def stragglers(self) -> list[int]:
+        """Hosts whose latest step was > factor x median for `patience`
+        consecutive reported steps. Idempotent per reported step: each
+        report is judged toward the streak exactly once, so a caller that
+        polls twice between reports (the mesh router does, from its own
+        loop) cannot double-count toward `patience`."""
         import statistics
         alive = [h for h in self.hosts.values() if h.alive and h.step_times]
         if len(alive) < 2:
@@ -96,12 +107,14 @@ class FleetMonitor:
         for hid, h in self.hosts.items():
             if not h.alive or not h.step_times:
                 continue
-            if h.step_times[-1] > self.factor * med:
-                h.slow_streak += 1
-                if h.slow_streak >= self.patience:
-                    out.append(hid)
-            else:
-                h.slow_streak = 0
+            if h.judged_steps < h.reported_steps:
+                h.judged_steps = h.reported_steps
+                if h.step_times[-1] > self.factor * med:
+                    h.slow_streak += 1
+                else:
+                    h.slow_streak = 0
+            if h.slow_streak >= self.patience:
+                out.append(hid)
         return out
 
 
@@ -109,10 +122,13 @@ def remesh_shape(n_devices: int, model_width: int = 16,
                  pod_size: int = 256) -> tuple[tuple[int, ...], tuple[str, ...]]:
     """Largest (pod, data, model) mesh fitting `n_devices`, keeping the
     model axis fixed (TP width is an architecture property) and shrinking
-    data/pod — the elastic policy."""
+    data/pod — the elastic policy. On fleets smaller than `model_width`
+    the model axis clamps to the device count (a mesh must FIT: 4 devices
+    must never yield a 16-wide model axis)."""
     if n_devices >= 2 * pod_size and n_devices % pod_size == 0:
         pods = n_devices // pod_size
         return ((pods, pod_size // model_width, model_width),
                 ("pod", "data", "model"))
-    data = max(n_devices // model_width, 1)
-    return ((data, model_width), ("data", "model"))
+    model = max(1, min(model_width, n_devices))
+    data = max(n_devices // model, 1)
+    return ((data, model), ("data", "model"))

@@ -27,17 +27,25 @@ from repro.fhe_client.service.scheduler import (DispatchRecord,
                                                 StreamExecutor)
 from repro.fhe_client.service.service import (ClientService, QueueFull,
                                               lane_fingerprint)
+from repro.fhe_client.service.mesh import (ANON_LANE_ID, AllWorkersFailed,
+                                           DEFAULT_LANE_ID, MeshError,
+                                           MeshRequestError, MeshRouter,
+                                           RESERVED_LANE_IDS,
+                                           lane_wire_identity)
 from repro.fhe_client.tenancy import (KeyContextRegistry, NonceLease,
                                       NonceLedger, TenantSession,
                                       params_fingerprint, tenant_seed)
-from repro.telemetry import ServiceTelemetry
+from repro.telemetry import MeshTelemetry, ServiceTelemetry
 
 __all__ = [
-    "AllStreamsFailed", "ClientService", "CoalescingBatcher",
-    "DEFAULT_BUCKETS", "DecJob", "DispatchRecord", "DualStreamScheduler",
+    "ANON_LANE_ID", "AllStreamsFailed", "AllWorkersFailed",
+    "ClientService", "CoalescingBatcher", "DEFAULT_BUCKETS",
+    "DEFAULT_LANE_ID", "DecJob", "DispatchRecord", "DualStreamScheduler",
     "EncJob", "EventLog", "FaultInjector", "FaultSpec",
-    "KeyContextRegistry", "NonceLease", "NonceLedger", "QueueFull",
-    "Request", "RequestFailed", "ServiceEvent", "ServiceTelemetry",
-    "StreamFault", "StreamExecutor", "TenantSession", "lane_fingerprint",
-    "params_fingerprint", "tenant_seed", "wire",
+    "KeyContextRegistry", "MeshError", "MeshRequestError", "MeshRouter",
+    "MeshTelemetry", "NonceLease", "NonceLedger", "QueueFull",
+    "RESERVED_LANE_IDS", "Request", "RequestFailed", "ServiceEvent",
+    "ServiceTelemetry", "StreamFault", "StreamExecutor", "TenantSession",
+    "lane_fingerprint", "lane_wire_identity", "params_fingerprint",
+    "tenant_seed", "wire",
 ]

@@ -136,10 +136,17 @@ class DispatchLoop:
 
     def _fail_queued_locked(self, cause):
         svc = self.service
-        for kind, q in svc._queues.items():
+        t = now()
+        for (lane, kind), q in svc._queues.items():
+            fp = svc._lane_fp(lane)
             while q:
                 req = q.popleft()
                 svc._failures[req.rid] = RequestFailed(req.rid, 0, cause)
+                # these requests never reached a job, so the usual
+                # on_fail(job) accounting can't see them: count + finish
+                # their spans here or the failed counter undercounts and
+                # the spans leak as forever-live
+                svc.telemetry.on_fail_request(req.span, fp, kind, t)
 
     # --- dispatch thread ----------------------------------------------------
 

@@ -66,6 +66,9 @@ def _header(kind: int) -> bytes:
 
 
 def _parse_header(buf: bytes, expect_kind: int | None = None) -> int:
+    if len(buf) < _HDR.size:
+        raise ValueError(f"wire payload truncated: {len(buf)} bytes is "
+                         f"shorter than the {_HDR.size}-byte header")
     magic, version, kind = _HDR.unpack_from(buf, 0)
     if magic != MAGIC:
         raise ValueError(f"bad wire magic {magic!r}")
@@ -74,6 +77,31 @@ def _parse_header(buf: bytes, expect_kind: int | None = None) -> int:
     if expect_kind is not None and kind != expect_kind:
         raise ValueError(f"expected wire kind {expect_kind}, got {kind}")
     return kind
+
+
+def _unpack_at(st: struct.Struct, buf: bytes, off: int, what: str):
+    """Unpack a body-header struct with an explicit truncation error
+    instead of a raw ``struct.error``."""
+    if len(buf) < off + st.size:
+        raise ValueError(
+            f"{what} payload truncated inside its body header: need "
+            f"{off + st.size} bytes, got {len(buf)}")
+    return st.unpack_from(buf, off)
+
+
+def _check_total(buf: bytes, expected: int, what: str) -> None:
+    """Exact-total-length contract for every deserializer: a short buffer
+    is a truncation (a ``frombuffer`` would either raise a numpy internals
+    error or — worse, for the tenant envelope — silently mis-slice), and
+    a long buffer is trailing garbage an untrusted peer smuggled past the
+    typed planes. Both reject."""
+    if len(buf) < expected:
+        raise ValueError(f"{what} payload truncated: expected {expected} "
+                         f"bytes, got {len(buf)}")
+    if len(buf) > expected:
+        raise ValueError(f"{what} payload carries {len(buf) - expected} "
+                         f"trailing bytes past its {expected}-byte "
+                         f"encoding (trailing garbage rejected)")
 
 
 def serialize_ciphertext_batch(cts: CiphertextBatch) -> bytes:
@@ -90,9 +118,10 @@ def serialize_ciphertext_batch(cts: CiphertextBatch) -> bytes:
 def deserialize_ciphertext_batch(buf: bytes) -> CiphertextBatch:
     _parse_header(buf, KIND_CT_BATCH)
     off = _HDR.size
-    b, l, n, scale = _CT_BATCH.unpack_from(buf, off)
+    b, l, n, scale = _unpack_at(_CT_BATCH, buf, off, "ciphertext batch")
     off += _CT_BATCH.size
     plane = b * l * n * 4
+    _check_total(buf, off + 2 * plane, "ciphertext batch")
     c0 = np.frombuffer(buf, dtype="<u4", count=b * l * n,
                        offset=off).reshape(b, l, n)
     c1 = np.frombuffer(buf, dtype="<u4", count=b * l * n,
@@ -119,8 +148,10 @@ def serialize_ciphertext_seeded(ct: Ciphertext) -> bytes:
 def deserialize_ciphertext_seeded(buf: bytes) -> Ciphertext:
     _parse_header(buf, KIND_CT_SEEDED)
     off = _HDR.size
-    l, n, scale, a_stream = _CT_SEEDED.unpack_from(buf, off)
+    l, n, scale, a_stream = _unpack_at(_CT_SEEDED, buf, off,
+                                       "seeded ciphertext")
     off += _CT_SEEDED.size
+    _check_total(buf, off + l * n * 4, "seeded ciphertext")
     c0 = np.frombuffer(buf, dtype="<u4", count=l * n, offset=off)
     return Ciphertext(c0=jnp.asarray(c0.reshape(l, n)), c1=None,
                       n_limbs=l, scale=scale, a_stream=a_stream)
@@ -143,9 +174,10 @@ def serialize_result(z) -> bytes:
 def deserialize_result(buf: bytes) -> np.ndarray:
     _parse_header(buf, KIND_RESULT)
     off = _HDR.size
-    b, n = _RESULT.unpack_from(buf, off)
+    b, n = _unpack_at(_RESULT, buf, off, "result batch")
     off += _RESULT.size
     plane = b * n * 8
+    _check_total(buf, off + 2 * plane, "result batch")
     re = np.frombuffer(buf, dtype="<f8", count=b * n, offset=off)
     im = np.frombuffer(buf, dtype="<f8", count=b * n, offset=off + plane)
     return (re + 1j * im).reshape(b, n)
@@ -174,11 +206,14 @@ def deserialize_evaluation_keys(buf: bytes):
     from repro.fhe_server.keys import EvaluationKeys, KeySwitchKey
     _parse_header(buf, KIND_EVAL_KEYS)
     off = _HDR.size
-    n, l, special_q, has_relin, n_rot = _EVAL_KEYS.unpack_from(buf, off)
+    n, l, special_q, has_relin, n_rot = _unpack_at(
+        _EVAL_KEYS, buf, off, "evaluation keys")
     off += _EVAL_KEYS.size
+    count = l * (l + 1) * n
+    _check_total(buf, off + 4 * n_rot + (has_relin + n_rot) * 2 * 4 * count,
+                 "evaluation keys")
     rot_ids = np.frombuffer(buf, dtype="<u4", count=n_rot, offset=off)
     off += 4 * n_rot
-    count = l * (l + 1) * n
 
     def plane():
         nonlocal off
@@ -219,14 +254,14 @@ def deserialize_tenant_envelope(buf: bytes):
     _parse_header(buf, KIND_TENANT)
     off = _HDR.size
     (logn, l, dec_l, delta_bits, p_bw, seed,
-     tid_len, n_inner) = _TENANT.unpack_from(buf, off)
+     tid_len, n_inner) = _unpack_at(_TENANT, buf, off, "tenant envelope")
     off += _TENANT.size
+    # Exact total BEFORE slicing: a short buffer must never silently
+    # truncate the tenant id (a mis-routing hazard for the gateway).
+    _check_total(buf, off + tid_len + n_inner, "tenant envelope")
     tid = buf[off:off + tid_len].decode("utf-8")
     off += tid_len
     inner = bytes(buf[off:off + n_inner])
-    if len(inner) != n_inner:
-        raise ValueError(f"tenant envelope truncated: expected {n_inner} "
-                         f"inner bytes, got {len(inner)}")
     params = CKKSParams(logn=logn, n_limbs=l, decrypt_limbs=dec_l,
                         delta_bits=delta_bits, p_bw=p_bw,
                         seed=int.from_bytes(seed, "little"))
@@ -235,5 +270,6 @@ def deserialize_tenant_envelope(buf: bytes):
 
 def payload_kind(buf: bytes) -> int:
     """Peek a payload's kind tag (KIND_CT_BATCH / KIND_CT_SEEDED /
-    KIND_RESULT) without decoding the body."""
+    KIND_RESULT / KIND_EVAL_KEYS / KIND_TENANT) without decoding the
+    body."""
     return _parse_header(buf)

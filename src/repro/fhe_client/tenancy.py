@@ -133,6 +133,20 @@ class NonceLedger:
             self.leases_granted += 1
             return NonceLease(seed=seed, base=base, count=count)
 
+    def lease_next(self, seed: int, count: int) -> NonceLease:
+        """Atomically lease the next ``count`` nonces at the seed's
+        current watermark (read-watermark-then-lease without a gap —
+        the mesh router's central nonce authority grants ranges this
+        way, one lease per dispatched chunk)."""
+        if count < 0:
+            raise ValueError(f"lease count must be >= 0, got {count}")
+        seed = int(seed)
+        with self._lock:
+            base = self._watermark.get(seed, 0)
+            self._watermark[seed] = base + count
+            self.leases_granted += 1
+            return NonceLease(seed=seed, base=base, count=count)
+
     def watermark(self, seed: int) -> int:
         with self._lock:
             return self._watermark.get(int(seed), 0)

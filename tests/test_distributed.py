@@ -68,6 +68,23 @@ def test_elastic_remesh_policy():
     assert shape == (15, 16) and axes == ("data", "model")
 
 
+def test_elastic_remesh_small_fleet_clamps_model_axis():
+    """Regression (ISSUE 10): fleets smaller than the TP width used to
+    yield a mesh that does not FIT — ``remesh_shape(4)`` returned
+    ``(1, 16)``, a 16-wide model axis over 4 devices. The model axis
+    must clamp to the device count."""
+    assert remesh_shape(4) == ((1, 4), ("data", "model"))
+    assert remesh_shape(2) == ((1, 2), ("data", "model"))
+    assert remesh_shape(1) == ((1, 1), ("data", "model"))
+    # at/above the TP width the historic behavior is unchanged
+    assert remesh_shape(16) == ((1, 16), ("data", "model"))
+    assert remesh_shape(48) == ((3, 16), ("data", "model"))
+    # every shape produced must actually fit the device count
+    for n in range(1, 33):
+        shape, _axes = remesh_shape(n)
+        assert np.prod(shape) <= n, (n, shape)
+
+
 def test_fleet_monitor_failure_and_straggler():
     t = [0.0]
     mon = FleetMonitor(n_hosts=4, heartbeat_timeout=10.0,
@@ -129,6 +146,36 @@ def test_fleet_monitor_straggler_streak_and_small_fleets():
     assert mon.stragglers() == []
     mon.revive(0)                            # revive clears the slow streak
     assert mon.hosts[0].slow_streak == 0
+
+
+def test_fleet_monitor_stragglers_idempotent_across_polls():
+    """Regression (ISSUE 10): ``stragglers()`` used to mutate the slow
+    streak on EVERY call, so a caller polling more often than it reports
+    (the mesh router polls from its own select loop) double-counted one
+    slow step straight past ``patience``. Each reported step must be
+    judged exactly once, and the verdict must be stable across repeated
+    polls."""
+    mon = FleetMonitor(n_hosts=3, straggler_factor=1.5, patience=2,
+                       clock=lambda: 0.0)
+    for h, dt in ((0, 1.0), (1, 1.0), (2, 2.2)):
+        mon.report_step_time(h, dt)
+    # one slow step + three polls: the old code streaked 2 -> fired early
+    assert mon.stragglers() == []
+    assert mon.stragglers() == []
+    assert mon.stragglers() == []
+    assert mon.hosts[2].slow_streak == 1
+    # second slow report reaches patience; the verdict then STAYS (it
+    # does not reset or re-accumulate on further report-free polls)
+    for h, dt in ((0, 1.0), (1, 1.0), (2, 2.2)):
+        mon.report_step_time(h, dt)
+    assert mon.stragglers() == [2]
+    assert mon.stragglers() == [2]
+    assert mon.hosts[2].slow_streak == 2
+    # a recovered step clears the streak exactly once, too
+    for h, dt in ((0, 1.0), (1, 1.0), (2, 1.0)):
+        mon.report_step_time(h, dt)
+    assert mon.stragglers() == []
+    assert mon.hosts[2].slow_streak == 0
 
 
 def test_adamw_8bit_tracks_fp32():

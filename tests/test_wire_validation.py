@@ -1,0 +1,188 @@
+"""Strict wire validation (ISSUE 10 satellite): every deserializer
+enforces an EXACT total length before touching a plane.
+
+The wire format is parsed from an untrusted peer (and, since the mesh,
+relayed between processes), so a malformed buffer must fail loudly and
+precisely:
+
+* a buffer shorter than its typed encoding is a **truncation** — the old
+  code would surface a numpy ``frombuffer`` internals error at best, or
+  (for the tenant envelope with an empty inner payload) silently slice a
+  SHORT tenant id and mis-route the lane;
+* a buffer longer than its typed encoding carries **trailing garbage** a
+  peer smuggled past the planes — previously ignored, now rejected.
+
+These tests build one minimal valid buffer per kind, then check the
+truncation surface at every layer (header, body header, plane tail) and
+the trailing-garbage rejection, without ever needing a client build.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.context import PROFILES
+from repro.core.encryptor import Ciphertext, CiphertextBatch
+from repro.fhe_client.service import wire
+
+TINY = PROFILES["tiny"]
+
+
+# ---------------------------------------------------------------------------
+# minimal valid buffers, one per kind (no client/keygen needed)
+# ---------------------------------------------------------------------------
+
+
+def _ct_batch_buf():
+    c = np.arange(2 * 3 * 4, dtype=np.uint32).reshape(2, 3, 4)
+    batch = CiphertextBatch(c0=jnp.asarray(c), c1=jnp.asarray(c + 1),
+                            n_limbs=3, scale=2.0 ** 40)
+    return wire.serialize_ciphertext_batch(batch)
+
+
+def _seeded_buf():
+    c0 = np.arange(3 * 4, dtype=np.uint32).reshape(3, 4)
+    ct = Ciphertext(c0=jnp.asarray(c0), c1=None, n_limbs=3,
+                    scale=2.0 ** 40, a_stream=0x10017)
+    return wire.serialize_ciphertext_seeded(ct)
+
+
+def _result_buf():
+    z = (np.arange(10, dtype=float) + 1j).reshape(2, 5)
+    return wire.serialize_result(z)
+
+
+def _eval_keys_buf():
+    from repro.fhe_server.keys import EvaluationKeys, KeySwitchKey
+    l, n = 2, 4
+    plane = np.arange(l * (l + 1) * n, dtype=np.uint32).reshape(l, l + 1, n)
+
+    def ksk(k):
+        return KeySwitchKey(jnp.asarray(plane + k), jnp.asarray(plane + k + 1))
+
+    keys = EvaluationKeys(n=n, n_limbs=l, special_q=0xFFF1,
+                          relin=ksk(0), rot={1: ksk(2), 3: ksk(4)})
+    return wire.serialize_evaluation_keys(keys)
+
+
+def _tenant_buf(tid="alice-tenant", inner=None):
+    if inner is None:
+        inner = _result_buf()
+    return wire.serialize_tenant_envelope(tid, TINY, inner)
+
+
+_KINDS = [
+    ("ct_batch", _ct_batch_buf, wire.deserialize_ciphertext_batch),
+    ("ct_seeded", _seeded_buf, wire.deserialize_ciphertext_seeded),
+    ("result", _result_buf, wire.deserialize_result),
+    ("eval_keys", _eval_keys_buf, wire.deserialize_evaluation_keys),
+    ("tenant", _tenant_buf, wire.deserialize_tenant_envelope),
+]
+
+
+@pytest.fixture(params=_KINDS, ids=[k[0] for k in _KINDS])
+def kind(request):
+    name, make, de = request.param
+    return name, make(), de
+
+
+# ---------------------------------------------------------------------------
+# per-kind truncation / oversize surface
+# ---------------------------------------------------------------------------
+
+
+def test_valid_buffers_still_parse(kind):
+    """The strict checks must not reject a well-formed encoding."""
+    _name, buf, de = kind
+    de(buf)                                   # no raise
+    assert wire.payload_kind(buf) in (
+        wire.KIND_CT_BATCH, wire.KIND_CT_SEEDED, wire.KIND_RESULT,
+        wire.KIND_EVAL_KEYS, wire.KIND_TENANT)
+
+
+def test_truncated_header_rejected(kind):
+    _name, buf, de = kind
+    for cut in (0, 1, wire._HDR.size - 1):
+        with pytest.raises(ValueError, match="truncated"):
+            de(buf[:cut])
+
+
+def test_truncated_body_header_rejected(kind):
+    """A buffer cut inside the fixed body-header struct must raise a
+    ValueError naming the truncation, never a raw ``struct.error``."""
+    _name, buf, de = kind
+    with pytest.raises(ValueError, match="truncated"):
+        de(buf[:wire._HDR.size + 2])
+
+
+def test_truncated_plane_rejected(kind):
+    """One byte short of the exact total: a plane (or the tenant id /
+    inner payload) is incomplete."""
+    _name, buf, de = kind
+    with pytest.raises(ValueError, match="truncated"):
+        de(buf[:-1])
+
+
+def test_trailing_garbage_rejected(kind):
+    _name, buf, de = kind
+    with pytest.raises(ValueError, match="trailing"):
+        de(buf + b"\x00")
+    with pytest.raises(ValueError, match="trailing"):
+        de(buf + buf)                         # a smuggled second payload
+
+
+def test_wrong_kind_and_magic_still_rejected(kind):
+    """The strict totals layer must not weaken the original header
+    checks."""
+    name, buf, de = kind
+    with pytest.raises(ValueError, match="magic"):
+        de(b"XXXX" + buf[4:])
+    others = [b for n, mk, _d in _KINDS if n != name for b in (mk(),)]
+    with pytest.raises(ValueError, match="kind"):
+        de(others[0])
+
+
+# ---------------------------------------------------------------------------
+# the tenant-envelope mis-routing hazard, specifically
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_id_truncation_is_never_silent():
+    """The regression this satellite exists for: with an EMPTY inner
+    payload, the old deserializer's only length check was on the inner
+    slice — so a buffer truncated mid-tenant-id decoded cleanly to a
+    SHORTER tenant id (``alice-tenant`` -> ``alice``), routing the
+    payload to the wrong lane. Now the exact-total check fires first."""
+    buf = wire.serialize_tenant_envelope("alice-tenant", TINY, b"")
+    tid, _p, inner = wire.deserialize_tenant_envelope(buf)
+    assert tid == "alice-tenant" and inner == b""
+    # cut 7 bytes: exactly the truncation that used to yield tid="alice"
+    with pytest.raises(ValueError, match="truncated"):
+        wire.deserialize_tenant_envelope(buf[:-7])
+
+
+def test_tenant_envelope_trailing_bytes_past_inner_rejected():
+    """Bytes after the declared inner payload used to be silently
+    ignored (the inner slice was exact-count)."""
+    buf = _tenant_buf()
+    with pytest.raises(ValueError, match="trailing"):
+        wire.deserialize_tenant_envelope(buf + b"extra")
+
+
+def test_eval_keys_total_checked_before_rot_id_read():
+    """The eval-keys total is computable from the body header alone, so
+    a buffer truncated inside the rotation-id table must already have
+    failed the total check (not a numpy frombuffer error)."""
+    buf = _eval_keys_buf()
+    body_end = wire._HDR.size + wire._EVAL_KEYS.size
+    with pytest.raises(ValueError, match="truncated"):
+        wire.deserialize_evaluation_keys(buf[:body_end + 2])
+
+
+def test_payload_kind_docstring_names_all_kinds():
+    """Doc satellite pin: the peek helper documents every wire kind."""
+    doc = wire.payload_kind.__doc__
+    for name in ("KIND_CT_BATCH", "KIND_CT_SEEDED", "KIND_RESULT",
+                 "KIND_EVAL_KEYS", "KIND_TENANT"):
+        assert name in doc
